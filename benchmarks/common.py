@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: timing of jitted callables."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, repeats: int = 5, warmup: int = 2, **kwargs):
+    """Median wall time (seconds) of a jax callable, fully realized."""
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str) -> dict:
+    return {"name": name, "us_per_call": round(us_per_call, 2),
+            "derived": derived}

@@ -1,0 +1,17 @@
+"""make_spd without importing pytest machinery (shared w/ tests)."""
+import numpy as np
+
+
+def make_spd(n: int, kappa: float = 100.0, seed: int = 0,
+             density: float = 1.0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if density < 1.0:
+        m = rng.standard_normal((n, n)) * (rng.random((n, n)) < density)
+        a = (m + m.T) / 2
+        w = np.linalg.eigvalsh(a)
+        span = w[-1] - w[0]
+        lam_min = max(span, 1e-3) / (kappa - 1)
+        return a + np.eye(n) * (lam_min - w[0])
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    evals = np.geomspace(1.0 / kappa, 1.0, n)
+    return (q * evals) @ q.T

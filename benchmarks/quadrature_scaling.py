@@ -1,0 +1,45 @@
+"""Rate verification (Thm. 3/5/8): iterations-to-tolerance should track
+sqrt(kappa) (linear convergence with ratio (sqrt(k)-1)/(sqrt(k)+1)), and
+per-iteration cost should scale with nnz (matvec-bound)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Dense, bif_bounds
+from .conftest_shim import make_spd
+
+from .common import row, time_fn
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 300
+    for kappa in [10, 100, 1000]:
+        a = make_spd(n, kappa=float(kappa), seed=0)
+        w = np.linalg.eigvalsh(a)
+        u = np.random.default_rng(0).standard_normal(n)
+        op = Dense(jnp.asarray(a))
+        res = bif_bounds(op, jnp.asarray(u), float(w[0] * 0.99),
+                         float(w[-1] * 1.01), max_iters=n, rtol=1e-6)
+        iters = int(res.iterations)
+        rho = (np.sqrt(kappa) - 1) / (np.sqrt(kappa) + 1)
+        # theory: iters ~ log(tol/2kappa+) / log(rho)
+        pred = int(np.ceil(np.log(1e-6 / (2 * kappa * 1.02))
+                           / np.log(rho))) if rho > 0 else 1
+        rows.append(row(f"iters_to_1e-6_kappa_{kappa}", iters,
+                        f"theory_upper={pred};ratio={iters/max(pred,1):.2f}"))
+
+    for nn in ([200, 400] if quick else [200, 400, 800, 1600]):
+        a = make_spd(nn, kappa=100.0, seed=1)
+        w = np.linalg.eigvalsh(a)
+        u = np.random.default_rng(1).standard_normal(nn)
+        op = Dense(jnp.asarray(a))
+        import jax
+        f = jax.jit(lambda uu: bif_bounds(op, uu, float(w[0] * 0.99),
+                                          float(w[-1] * 1.01),
+                                          max_iters=60, rtol=1e-4).lower)
+        t = time_fn(f, jnp.asarray(u), repeats=3)
+        rows.append(row(f"bif_bounds_wall_n_{nn}", t * 1e6,
+                        "per-iteration cost ~ dense matvec O(n^2)"))
+    return rows, {}

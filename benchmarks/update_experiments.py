@@ -1,0 +1,82 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+from __future__ import annotations
+
+import json
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.launch import roofline as RL  # noqa: E402
+
+
+def dryrun_summary() -> str:
+    rows = ["| arch | shape | single-pod | multi-pod | per-dev GB (arg+temp, single) | compile s (single/multi) |",
+            "|---|---|---|---|---|---|"]
+    d = ROOT / "experiments/dryrun"
+    singles = {p.name.replace("__single.json", ""): json.loads(p.read_text())
+               for p in sorted(d.glob("*__single.json"))}
+    multis = {p.name.replace("__multi.json", ""): json.loads(p.read_text())
+              for p in sorted(d.glob("*__multi.json"))}
+    for key in sorted(singles):
+        s = singles[key]
+        m = multis.get(key, {"status": "missing"})
+
+        def stat(r):
+            if r["status"] == "ok":
+                return "✅ ok"
+            if r["status"] == "skipped":
+                return "— skip"
+            return f"❌ {r['status']}"
+
+        gb = "—"
+        cmp_s = "—"
+        if s["status"] == "ok":
+            gb = f"{(s['memory']['argument_size_in_bytes'] + s['memory']['temp_size_in_bytes'])/1e9:.1f}"
+            cmp_s = f"{s['compile_s']:.0f}/" + (
+                f"{m['compile_s']:.0f}" if m.get("status") == "ok" else "—")
+        rows.append(f"| {s['arch']} | {s['shape']} | {stat(s)} | {stat(m)} "
+                    f"| {gb} | {cmp_s} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    recs = RL.load_records(ROOT / "experiments/dryrun", "single")
+    return RL.fmt_table(recs)
+
+
+def bench_csv() -> str:
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run"], capture_output=True,
+        text=True, cwd=ROOT, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                                  "HOME": "/root"})
+    return "```\n" + out.stdout.strip() + "\n```"
+
+
+def replace(text: str, marker: str, content: str) -> str:
+    pat = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\n---|\Z)", re.S)
+    if pat.search(text):
+        return pat.sub(f"<!-- {marker} -->\n\n{content}\n", text)
+    return text.replace(f"<!-- {marker} -->",
+                        f"<!-- {marker} -->\n\n{content}\n")
+
+
+def main(run_bench: bool = False):
+    p = ROOT / "EXPERIMENTS.md"
+    text = p.read_text()
+    text = replace(text, "DRYRUN_TABLE", dryrun_summary())
+    text = replace(text, "ROOFLINE_TABLE", roofline_table())
+    if run_bench:
+        text = replace(text, "BENCH_CSV", bench_csv())
+    p.write_text(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main(run_bench="--bench" in sys.argv)

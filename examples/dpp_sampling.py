@@ -1,0 +1,58 @@
+"""DPP / k-DPP sampling with retrospective quadrature (paper Sec. 5.1).
+
+Builds an RBF kernel over a point cloud, runs both chains with the
+GQL-accelerated judge and with exact dense solves, and shows: identical
+trajectories, far less work.
+
+    PYTHONPATH=src python examples/dpp_sampling.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import Dense, sample_dpp, sample_kdpp
+from repro.data import density, rbf_kernel
+
+N = 500
+# hard-truncated RBF kernels can lose PSD-ness; the paper adds a ridge to
+# "ensure positive definiteness" (Table 1) — size it to cover truncation
+K = rbf_kernel(N, sigma=0.5, seed=0, ridge=0.05)
+w = np.linalg.eigvalsh(K)
+assert w[0] > 0, "kernel must be positive definite"
+print(f"kernel: N={N}, density={density(K):.3f}, "
+      f"kappa={w[-1]/w[0]:.1f}")
+
+op = Dense(jnp.asarray(K))
+lmn, lmx = float(w[0] * 0.9), float(w[-1] * 1.1)
+init = jnp.asarray((np.random.default_rng(0).random(N) < 1 / 3)
+                   .astype(np.float64))
+key = jax.random.key(0)
+steps = 300
+
+for name, fn in (("DPP", sample_dpp), ("k-DPP", sample_kdpp)):
+    run_q = jax.jit(lambda k: fn(op, k, init, steps, lmn, lmx,
+                                 max_iters=N + 2))
+    run_e = jax.jit(lambda k: fn(op, k, init, steps, lmn, lmx,
+                                 max_iters=N + 2, exact=True))
+    st_q = run_q(key)
+    jax.block_until_ready(st_q)
+    t0 = time.perf_counter()
+    st_q = run_q(key)
+    jax.block_until_ready(st_q)
+    t_q = time.perf_counter() - t0
+    st_e = run_e(key)
+    jax.block_until_ready(st_e)
+    t0 = time.perf_counter()
+    st_e = run_e(key)
+    jax.block_until_ready(st_e)
+    t_e = time.perf_counter() - t0
+    same = bool(jnp.all(st_q.mask == st_e.mask))
+    print(f"{name}: {steps} steps | quadrature {t_q:.2f}s vs exact "
+          f"{t_e:.2f}s -> {t_e/t_q:.1f}x speedup | identical chains: "
+          f"{same} | avg GQL iters/step: "
+          f"{int(st_q.stats.quad_iterations)/steps:.1f} (N={N}) | "
+          f"uncertified: {int(st_q.stats.uncertified)}")

@@ -1,0 +1,55 @@
+"""Batched serving with KV-cache diversification (paper tie-in #3).
+
+Serves a small LM with batched requests, then demonstrates log-det KV
+block selection for long-context budgets — every keep/evict decision
+certified by Gauss-Radau brackets (Alg. 8/9).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.models import model as M
+from repro.serve import Engine, Request, select_diverse_blocks
+
+cfg = ArchConfig(name="serve-demo", n_layers=4, d_model=256, n_heads=8,
+                 n_kv_heads=2, d_ff=1024, vocab=4096, dtype="float32",
+                 tie_embeddings=True, logits_chunk=128)
+params, _ = M.init_model(jax.random.key(0), cfg)
+n = sum(x.size for x in jax.tree.leaves(params))
+print(f"model: {n/1e6:.1f}M params | GQA {cfg.n_heads}q/{cfg.n_kv_heads}kv")
+
+eng = Engine(cfg, params, max_batch=4, max_seq=256)
+rng = np.random.default_rng(0)
+reqs = [Request(prompt=rng.integers(1, 4000, size=plen).astype(np.int32),
+                max_new_tokens=24)
+        for plen in (12, 31, 7, 20)]
+t0 = time.time()
+out = eng.generate(reqs)
+dt = time.time() - t0
+ntok = sum(r.max_new_tokens for r in out)
+print(f"served batch of {len(reqs)} ({ntok} new tokens) in {dt:.2f}s "
+      f"incl. compile")
+for i, r in enumerate(out):
+    print(f"  req{i} (prompt {len(r.prompt):2d} toks) -> "
+          f"{r.out_tokens[:10].tolist()}...")
+
+# --- KV diversification under a budget -------------------------------
+print("\nKV diversification (certified log-det selection):")
+keys = rng.standard_normal((2048, 64)).astype(np.float32)
+# inject redundancy: second half repeats the first half (e.g. looping ctx)
+keys[1024:] = keys[:1024] + 0.01 * rng.standard_normal((1024, 64))
+mask, stats = select_diverse_blocks(keys, block=128)
+print(f"  {stats['blocks']} key blocks -> kept {stats['kept']} "
+      f"(log det {stats['log_det']:.3f})")
+print(f"  quadrature iterations: {stats['quad_iterations']} "
+      f"(exact would need ~{stats['blocks']}^2/2 solve dims/decision); "
+      f"uncertified: {stats['uncertified']}")
+kept_first = mask[:len(mask) // 2].sum()
+kept_second = mask[len(mask) // 2:].sum()
+print(f"  redundant second half kept: {kept_second}/{len(mask)//2} vs "
+      f"first half {kept_first}/{len(mask)//2}")

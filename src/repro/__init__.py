@@ -1,0 +1,7 @@
+"""repro: Gauss quadrature for matrix inverse forms (Li, Sra, Jegelka
+2015) as a production-grade multi-pod JAX training/inference framework.
+
+Subpackages: core (the paper), kernels (Pallas TPU), models, sharding,
+data, optim, checkpoint, train, serve, configs, launch, utils.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from .io import AsyncSaver, latest_step, restore, retain, save  # noqa

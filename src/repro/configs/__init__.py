@@ -1,0 +1,1 @@
+from .base import ArchConfig, get_arch, list_archs, register  # noqa: F401

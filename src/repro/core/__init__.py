@@ -1,0 +1,25 @@
+"""Paper core: Gauss-type quadrature bounds for bilinear inverse forms.
+
+Public API:
+
+  operators.{Dense, SparseCOO, Masked, Shifted, Jacobi, MatvecFn}
+  gql.{gql_init, gql_step, GQLState}            -- Alg. 5 stepping
+  bounds.{bif_bounds, bif_bounds_trace}         -- brackets on u^T A^-1 u
+  judge.{judge_threshold, judge_kdpp_swap, judge_double_greedy}
+  dpp.{sample_dpp, sample_kdpp, dpp_step, kdpp_step}
+  double_greedy.double_greedy
+  spectrum.{lanczos_extremal, gershgorin_bounds, ridge_bounds}
+  precond.preconditioned_bif_bounds
+"""
+from . import bounds, double_greedy, dpp, gql, judge, lanczos, operators, \
+    precond, spectrum  # noqa: F401
+
+from .bounds import BIFBounds, BIFTrace, bif_bounds, bif_bounds_trace  # noqa: F401
+from .double_greedy import DGResult, double_greedy as run_double_greedy  # noqa: F401
+from .dpp import ChainState, sample_dpp, sample_kdpp  # noqa: F401
+from .judge import JudgeResult, judge_double_greedy, judge_kdpp_swap, \
+    judge_threshold  # noqa: F401
+from .operators import Dense, Jacobi, Masked, MatvecFn, Shifted, SparseCOO, \
+    sparse_from_dense  # noqa: F401
+from .spectrum import SpectrumBounds, gershgorin_bounds, lanczos_extremal, \
+    ridge_bounds  # noqa: F401

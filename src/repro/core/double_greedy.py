@@ -1,0 +1,86 @@
+"""Retrospective stochastic double greedy (paper Alg. 8 / 9).
+
+Maximizes the (generally non-monotone) submodular F(S) = log det(L_S)
+with the 1/2-approximation algorithm of Buchbinder et al. [14], replacing
+each pair of exact marginal-gain evaluations with retrospective
+quadrature brackets. Decisions provably match the exact algorithm run
+with the same uniform draws (tests/test_double_greedy.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import judge as _judge
+from . import operators as _ops
+from .dpp import _exact_bif
+
+Array = jax.Array
+
+
+class DGResult(NamedTuple):
+    selected: Array          # (N,) float mask X_N
+    quad_iterations: Array
+    uncertified: Array
+    log_det: Array           # F(X_N), exact (for reporting)
+
+
+def _logdet_masked(op, mask: Array) -> Array:
+    a = op.a
+    m = mask.astype(a.dtype)
+    a_masked = a * m[..., :, None] * m[..., None, :] + (1.0 - m)[..., :, None] * jnp.eye(a.shape[-1], dtype=a.dtype)
+    sign, ld = jnp.linalg.slogdet(a_masked)
+    return ld
+
+
+def double_greedy(op, key: Array, lam_min, lam_max, *, max_iters: int,
+                  exact: bool = False) -> DGResult:
+    """Run Alg. 8 over the full ground set [N] (sequential by definition)."""
+    n = op.n
+    d = op.diag()
+    keys = jax.random.split(key, n)
+
+    def step(carry, inp):
+        x_mask, y_mask = carry
+        i, k = inp
+        hot = jax.nn.one_hot(i, n, dtype=x_mask.dtype)
+        y_wo = y_mask * (1.0 - hot)              # Y' = Y_{i-1} \ {i}
+        col = op.matvec(hot)
+        u = col * x_mask                         # vs L_{X_{i-1}}
+        v = col * y_wo                           # vs L_{Y'}
+        t = d[i]
+        p = jax.random.uniform(k, (), dtype=x_mask.dtype)
+
+        if exact:
+            bif_x = _exact_bif(op, x_mask, u)
+            bif_y = _exact_bif(op, y_wo, v)
+            big_neg = jnp.asarray(-1e30, t.dtype)
+            gain_p = jnp.where(t - bif_x > 0,
+                               jnp.log(jnp.maximum(t - bif_x, 1e-30)), big_neg)
+            gain_m = -jnp.where(t - bif_y > 0,
+                                jnp.log(jnp.maximum(t - bif_y, 1e-30)), big_neg)
+            add = p * jnp.maximum(gain_m, 0.0) <= \
+                (1 - p) * jnp.maximum(gain_p, 0.0)
+            res = _judge.JudgeResult(decision=add,
+                                     certified=jnp.ones((), bool),
+                                     iterations=jnp.zeros((), jnp.int32))
+        else:
+            res = _judge.judge_double_greedy(
+                _ops.Masked(op, x_mask), u, _ops.Masked(op, y_wo), v, t, p,
+                lam_min, lam_max, max_iters=max_iters)
+
+        x_new = jnp.where(res.decision, x_mask + hot, x_mask)
+        y_new = jnp.where(res.decision, y_mask, y_wo)
+        out = (res.iterations, (~res.certified).astype(jnp.int32))
+        return (x_new, y_new), out
+
+    x0 = jnp.zeros((n,), jnp.float32)
+    y0 = jnp.ones((n,), jnp.float32)
+    (x_fin, _), (iters, unc) = jax.lax.scan(
+        step, (x0, y0), (jnp.arange(n), keys))
+    ld = _logdet_masked(op, x_fin) if isinstance(op, _ops.Dense) \
+        else jnp.asarray(jnp.nan, jnp.float32)
+    return DGResult(selected=x_fin, quad_iterations=jnp.sum(iters),
+                    uncertified=jnp.sum(unc), log_det=ld)

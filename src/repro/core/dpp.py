@@ -1,0 +1,181 @@
+"""Retrospective Markov-chain DPP / k-DPP samplers (paper Alg. 3 / 6).
+
+State transitions compare a uniform draw against determinant ratios that
+are Schur complements ``L_yy - L_{y,Y} L_Y^{-1} L_{Y,y}`` — a constant
+minus a BIF. The retrospective judges resolve each comparison from
+iteratively tightened quadrature bounds, so every chain makes *exactly*
+the same accept/reject decisions as with exact BIF values (the paper's
+central correctness claim; verified against the exact baselines in
+tests/test_dpp.py).
+
+Masks replace dynamic index sets: the principal submatrix L_Y is the
+fixed-shape ``Masked`` operator, and eigenvalue interlacing lets one
+global spectral interval serve every Y (DESIGN.md Sec. 3).
+
+Acceptance rule note: for the removal move the paper's Alg. 3 listing
+passes ``L_yy - p`` to DPPJUDGE, which yields acceptance probability
+``1 - q`` rather than the Metropolis ``min(1, 1/q)`` used by the samplers
+it cites [Kang'13; Anari et al.'16] (and required for detailed balance
+w.r.t. the DPP). We implement the Metropolis rule — threshold
+``L_yy - 1/p`` — and note the listing discrepancy here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import judge as _judge
+from . import operators as _ops
+
+Array = jax.Array
+
+
+class ChainStats(NamedTuple):
+    steps: Array
+    accepts: Array
+    quad_iterations: Array  # total GQL iterations spent
+    uncertified: Array      # judged by fallback (should stay 0)
+
+
+class ChainState(NamedTuple):
+    mask: Array  # (..., N) float {0,1}
+    key: Array
+    stats: ChainStats
+
+
+def init_chain(key: Array, init_mask: Array) -> ChainState:
+    z = jnp.zeros((), jnp.int32)
+    return ChainState(mask=init_mask.astype(jnp.float32), key=key,
+                      stats=ChainStats(z, z, z, z))
+
+
+def _column(op, y: Array, n: int) -> Array:
+    """Column y of the symmetric base matrix via a one-hot matvec."""
+    e = jax.nn.one_hot(y, n, dtype=op.diag().dtype)
+    return op.matvec(e)
+
+
+def _exact_bif(op, mask: Array, u: Array) -> Array:
+    """Oracle BIF via a dense solve on the masked system (baseline path)."""
+    a = op.a if isinstance(op, _ops.Dense) else None
+    if a is None:
+        raise ValueError("exact baseline needs a Dense operator")
+    m = mask.astype(a.dtype)
+    a_masked = a * m[..., :, None] * m[..., None, :] + (1.0 - m)[..., :, None] * jnp.eye(a.shape[-1], dtype=a.dtype)
+    x = jnp.linalg.solve(a_masked, u[..., None])[..., 0]
+    return jnp.sum(u * x, axis=-1)
+
+
+def dpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
+             exact: bool = False) -> ChainState:
+    """One add/remove MH move (Alg. 3)."""
+    n = op.n
+    key, k_y, k_p = jax.random.split(state.key, 3)
+    y = jax.random.randint(k_y, (), 0, n)
+    p = jax.random.uniform(k_p, (), dtype=state.mask.dtype)
+
+    in_y = state.mask[y] > 0.5
+    hot = jax.nn.one_hot(y, n, dtype=state.mask.dtype)
+    m_wo = state.mask * (1.0 - hot)          # Y \ {y}: the conditioning set
+    col = _column(op, y, n)
+    u = col * m_wo
+    l_yy = op.diag()[y]
+
+    # Schur complement q = l_yy - bif.  Add move: accept iff p < q
+    # <=> NOT (l_yy - p < bif).  Remove move (Metropolis): accept iff
+    # p < 1/q <=> q < 1/p <=> l_yy - 1/p < bif.
+    t = jnp.where(in_y, l_yy - 1.0 / jnp.maximum(p, 1e-12), l_yy - p)
+    mop = _ops.Masked(op, m_wo)
+    if exact:
+        bif = _exact_bif(op, m_wo, u)
+        decision = t < bif
+        res = _judge.JudgeResult(decision=decision,
+                                 certified=jnp.ones((), bool),
+                                 iterations=jnp.zeros((), jnp.int32))
+    else:
+        res = _judge.judge_threshold(mop, u, t, lam_min, lam_max,
+                                     max_iters=max_iters)
+
+    accept = jnp.where(in_y, res.decision, ~res.decision)
+    new_mask = jnp.where(in_y,
+                         jnp.where(accept, m_wo, state.mask),
+                         jnp.where(accept, state.mask + hot, state.mask))
+    st = state.stats
+    stats = ChainStats(steps=st.steps + 1,
+                       accepts=st.accepts + accept.astype(jnp.int32),
+                       quad_iterations=st.quad_iterations + res.iterations,
+                       uncertified=st.uncertified
+                       + (~res.certified).astype(jnp.int32))
+    return ChainState(mask=new_mask, key=key, stats=stats)
+
+
+def kdpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
+              exact: bool = False) -> ChainState:
+    """One swap move of the k-DPP chain (Alg. 6/7): remove v in Y, add
+    u not in Y; accept iff p < (L_uu - bif_u) / (L_vv - bif_v)."""
+    n = op.n
+    key, k_v, k_u, k_p = jax.random.split(state.key, 4)
+    # Gumbel-max uniform picks from inside / outside the mask.
+    g_v = jax.random.gumbel(k_v, (n,), state.mask.dtype)
+    g_u = jax.random.gumbel(k_u, (n,), state.mask.dtype)
+    neg = jnp.asarray(-1e30, state.mask.dtype)
+    v = jnp.argmax(jnp.where(state.mask > 0.5, g_v, neg))
+    uu = jnp.argmax(jnp.where(state.mask > 0.5, neg, g_u))
+    p = jax.random.uniform(k_p, (), dtype=state.mask.dtype)
+
+    hot_v = jax.nn.one_hot(v, n, dtype=state.mask.dtype)
+    hot_u = jax.nn.one_hot(uu, n, dtype=state.mask.dtype)
+    m_wo = state.mask * (1.0 - hot_v)        # Y' = Y \ {v}
+    col_u = _column(op, uu, n) * m_wo
+    col_v = _column(op, v, n) * m_wo
+    d = op.diag()
+    # accept iff p (L_vv - bif_v) < L_uu - bif_u
+    #        iff t := p L_vv - L_uu < p bif_v - bif_u   (Alg. 7)
+    t = p * d[v] - d[uu]
+    mop = _ops.Masked(op, m_wo)
+    if exact:
+        bif_u = _exact_bif(op, m_wo, col_u)
+        bif_v = _exact_bif(op, m_wo, col_v)
+        decision = t < p * bif_v - bif_u
+        res = _judge.JudgeResult(decision=decision,
+                                 certified=jnp.ones((), bool),
+                                 iterations=jnp.zeros((), jnp.int32))
+    else:
+        res = _judge.judge_kdpp_swap(mop, col_u, mop, col_v, t, p,
+                                     lam_min, lam_max, max_iters=max_iters)
+
+    new_mask = jnp.where(res.decision, m_wo + hot_u, state.mask)
+    st = state.stats
+    stats = ChainStats(steps=st.steps + 1,
+                       accepts=st.accepts + res.decision.astype(jnp.int32),
+                       quad_iterations=st.quad_iterations + res.iterations,
+                       uncertified=st.uncertified
+                       + (~res.certified).astype(jnp.int32))
+    return ChainState(mask=new_mask, key=key, stats=stats)
+
+
+def run_chain(step_fn, op, key: Array, init_mask: Array, num_steps: int,
+              lam_min, lam_max, *, max_iters: int,
+              exact: bool = False) -> ChainState:
+    """Drive ``num_steps`` moves under ``lax.scan`` (jit-friendly)."""
+    def body(state, _):
+        return step_fn(op, state, lam_min, lam_max, max_iters=max_iters,
+                       exact=exact), None
+
+    state0 = init_chain(key, init_mask)
+    state, _ = jax.lax.scan(body, state0, None, length=num_steps)
+    return state
+
+
+def sample_dpp(op, key, init_mask, num_steps, lam_min, lam_max, *,
+               max_iters: int, exact: bool = False) -> ChainState:
+    return run_chain(dpp_step, op, key, init_mask, num_steps, lam_min,
+                     lam_max, max_iters=max_iters, exact=exact)
+
+
+def sample_kdpp(op, key, init_mask, num_steps, lam_min, lam_max, *,
+                max_iters: int, exact: bool = False) -> ChainState:
+    return run_chain(kdpp_step, op, key, init_mask, num_steps, lam_min,
+                     lam_max, max_iters=max_iters, exact=exact)

@@ -1,0 +1,204 @@
+"""Linear-operator abstraction used by the quadrature core.
+
+Every operator is a registered pytree (so it can cross ``jit``/``vmap``/
+``scan`` boundaries) exposing:
+
+  * ``matvec(x)``   -- y = A @ x, batched over leading dims of ``x``;
+  * ``diag()``      -- the diagonal (for Jacobi preconditioning / Gershgorin);
+  * ``n``           -- the (static) dimension N.
+
+Operators compose: ``Masked(Dense(A), m)`` is the TPU-friendly fixed-shape
+stand-in for the principal submatrix A_Y (mask semantics below), and
+``Jacobi(...)`` applies the similarity transform of paper Sec. 5.4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _register(cls, data_fields, meta_fields=()):
+    jax.tree_util.register_dataclass(cls, data_fields=list(data_fields),
+                                     meta_fields=list(meta_fields))
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    """Explicit dense symmetric matrix, shape (..., N, N)."""
+    a: Array
+
+    @property
+    def n(self) -> int:
+        return self.a.shape[-1]
+
+    def matvec(self, x: Array) -> Array:
+        return jnp.einsum("...ij,...j->...i", self.a, x)
+
+    def diag(self) -> Array:
+        return jnp.diagonal(self.a, axis1=-2, axis2=-1)
+
+
+_register(Dense, ["a"])
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseCOO:
+    """Symmetric sparse matrix in padded COO form, fixed nnz (jit-stable).
+
+    ``rows``/``cols``/``vals`` have shape (nnz,); padding entries carry
+    ``rows == n`` (scattered with drop semantics). Only the single-system
+    (unbatched) layout is supported; batch by ``vmap`` over vals if needed.
+    """
+    rows: Array
+    cols: Array
+    vals: Array
+    n_static: int
+    diag_vals: Array  # (N,) dense diagonal, kept explicitly
+
+    @property
+    def n(self) -> int:
+        return self.n_static
+
+    def matvec(self, x: Array) -> Array:
+        # y[r] += v * x[c]; out-of-range rows dropped.
+        contrib = self.vals * jnp.take(x, self.cols, axis=-1, fill_value=0.0)
+        y = jnp.zeros(x.shape[:-1] + (self.n_static,), x.dtype)
+        return y.at[..., self.rows].add(contrib, mode="drop")
+
+    def diag(self) -> Array:
+        return self.diag_vals
+
+
+_register(SparseCOO, ["rows", "cols", "vals", "diag_vals"], ["n_static"])
+
+
+def sparse_from_dense(a, nnz: int | None = None) -> SparseCOO:
+    """Build a padded-COO operator from a dense (numpy/jnp) matrix."""
+    import numpy as np
+
+    a = np.asarray(a)
+    n = a.shape[-1]
+    r, c = np.nonzero(a)
+    v = a[r, c]
+    cap = int(nnz) if nnz is not None else len(r)
+    if len(r) > cap:
+        raise ValueError(f"nnz={len(r)} exceeds capacity {cap}")
+    pad = cap - len(r)
+    r = np.concatenate([r, np.full(pad, n, dtype=r.dtype)])
+    c = np.concatenate([c, np.zeros(pad, dtype=c.dtype)])
+    v = np.concatenate([v, np.zeros(pad, dtype=v.dtype)])
+    return SparseCOO(jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), n,
+                     jnp.asarray(np.diagonal(a, axis1=-2, axis2=-1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Masked:
+    """Fixed-shape principal-submatrix operator.
+
+    With projector P = diag(mask), represents  P A P + (I - P).
+    For any u supported on the mask, Lanczos on this operator is *exactly*
+    Lanczos on the true submatrix A_Y (the identity block is invisible:
+    Krylov vectors stay supported on the mask). Eigenvalue interlacing
+    guarantees spec(A_Y) within [lam_min(A), lam_max(A)], so global
+    spectral bounds on A remain valid for every Y.
+    ``mask`` has shape (..., N) and may be batched.
+    """
+    base: Any
+    mask: Array  # float {0.,1.} or bool
+
+    @property
+    def n(self) -> int:
+        return self.base.n
+
+    def matvec(self, x: Array) -> Array:
+        m = self.mask.astype(x.dtype)
+        return m * self.base.matvec(m * x) + (1.0 - m) * x
+
+    def diag(self) -> Array:
+        m = self.mask.astype(self.base.diag().dtype)
+        return m * self.base.diag() + (1.0 - m)
+
+
+_register(Masked, ["base", "mask"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Shifted:
+    """A + sigma * I."""
+    base: Any
+    sigma: Array
+
+    @property
+    def n(self) -> int:
+        return self.base.n
+
+    def matvec(self, x: Array) -> Array:
+        return self.base.matvec(x) + self.sigma * x
+
+    def diag(self) -> Array:
+        return self.base.diag() + self.sigma
+
+
+_register(Shifted, ["base", "sigma"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Jacobi:
+    """Jacobi-preconditioned similarity transform (paper Sec. 5.4).
+
+    With C = diag(A)^(-1/2):   u^T A^-1 u = (Cu)^T (C A C)^-1 (Cu).
+    This operator *is* C A C; use ``transform_vector`` for Cu. The
+    transformed matrix has unit diagonal, typically shrinking kappa.
+    """
+    base: Any
+    inv_sqrt_diag: Array  # (..., N)
+
+    @classmethod
+    def create(cls, base) -> "Jacobi":
+        d = base.diag()
+        return cls(base, jax.lax.rsqrt(jnp.maximum(d, 1e-30)))
+
+    @property
+    def n(self) -> int:
+        return self.base.n
+
+    def matvec(self, x: Array) -> Array:
+        return self.inv_sqrt_diag * self.base.matvec(self.inv_sqrt_diag * x)
+
+    def diag(self) -> Array:
+        return self.inv_sqrt_diag**2 * self.base.diag()
+
+    def transform_vector(self, u: Array) -> Array:
+        return self.inv_sqrt_diag * u
+
+
+_register(Jacobi, ["base", "inv_sqrt_diag"])
+
+
+@dataclasses.dataclass(frozen=True)
+class MatvecFn:
+    """Wrap a closure as an operator (used by the distributed monitor,
+    where the matvec embeds psums over mesh axes)."""
+    fn: Any  # static: callable (..., N) -> (..., N)
+    n_static: int
+    diag_vals: Array
+
+    @property
+    def n(self) -> int:
+        return self.n_static
+
+    def matvec(self, x: Array) -> Array:
+        return self.fn(x)
+
+    def diag(self) -> Array:
+        return self.diag_vals
+
+
+_register(MatvecFn, ["diag_vals"], ["fn", "n_static"])

@@ -1,0 +1,4 @@
+from .dpp_selection import DPPBatchStream, DPPSelector  # noqa: F401
+from .kernel_matrices import (density, graph_laplacian,  # noqa: F401
+                              random_sparse_spd, rbf_kernel)
+from .synthetic import DataConfig, TokenStream, sequence_embeddings  # noqa

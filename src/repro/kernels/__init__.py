@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot spots (+ attention).
+
+Each kernel module pairs with a pure-jnp oracle in ``ref.py``; ``ops.py``
+exposes jit'd wrappers that select interpret mode off-TPU.
+"""
+from . import ops, ref  # noqa: F401

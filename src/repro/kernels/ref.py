@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gql as _gql
+
+
+def fused_matvec(a: jax.Array, x: jax.Array):
+    """Oracle for kernels.bilinear_matvec.fused_matvec."""
+    y = jnp.einsum("bij,bj->bi", a.astype(jnp.float32),
+                   x.astype(jnp.float32))
+    alpha = jnp.einsum("bi,bi->b", x.astype(jnp.float32), y)
+    return y, alpha
+
+
+def bell_matvec(data: jax.Array, cols: jax.Array, x: jax.Array):
+    """Oracle for kernels.spmv_bell.bell_matvec."""
+    r, k, bs, _ = data.shape
+    xb = x.reshape(-1, bs)                       # (R, bs)
+    gathered = xb[cols]                          # (R, K, bs)
+    y = jnp.einsum("rkij,rkj->ri", data.astype(jnp.float32),
+                   gathered.astype(jnp.float32))
+    return y.reshape(r * bs)
+
+
+def gql_update(alpha_n, beta_n, beta_p, g, c, delta, d_lr, d_rr,
+               lam_min, lam_max):
+    """Oracle for kernels.gql_update.gql_update — the core recurrence."""
+    return _gql.recurrence_update(alpha_n, beta_n, beta_p, g, c, delta,
+                                  d_lr, d_rr,
+                                  jnp.asarray(lam_min, g.dtype),
+                                  jnp.asarray(lam_max, g.dtype))
+
+
+def flash_attention(q, k, v, *, causal=True):
+    """Oracle for kernels.flash_attention.flash_attention."""
+    d = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        t_len, s_len = s.shape[-2], s.shape[-1]
+        # query at global position i attends keys j <= i (zero-aligned)
+        rows = jnp.arange(t_len)[:, None]
+        cols = jnp.arange(s_len)[None, :]
+        s = jnp.where(cols <= rows, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)

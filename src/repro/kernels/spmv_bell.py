@@ -1,0 +1,86 @@
+"""Blocked-ELL sparse matvec Pallas kernel.
+
+The paper's speedups live on *sparse* kernels (Table 1: densities 0.009%
+to 11%). CSR gather/scatter is hostile to the MXU and to Pallas' static
+shapes, so we store A as blocked-ELL (DESIGN.md Sec. 3 item 3):
+
+    data: (R, K, bs, bs)   R = N/bs block-rows, K = max blocks per row
+    cols: (R, K) int32     block-column index of each stored block
+                           (padding blocks point at column 0 with zero data)
+
+The kernel walks (r, k) with the block-column table scalar-prefetched so
+the x tile for step (r, k) is fetched by index_map — dense 128x128 MXU
+multiplies at FLOPs proportional to stored blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cols_ref, d_ref, x_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        d_ref[0, 0], x_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bell_matvec(data: jax.Array, cols: jax.Array, x: jax.Array, *,
+                interpret: bool = True) -> jax.Array:
+    """y = A @ x for blocked-ELL A; x: (N,) with N = R * bs."""
+    r, k, bs, _ = data.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, bs), lambda r, k, cols: (r, k, 0, 0)),
+            pl.BlockSpec((bs,), lambda r, k, cols: (cols[r, k],)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda r, k, cols: (r,)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r * bs,), jnp.float32),
+        interpret=interpret,
+    )(cols, data, x)
+
+
+def dense_to_bell(a, bs: int = 128, k_max: int | None = None):
+    """Convert a dense (numpy) symmetric matrix to blocked-ELL arrays.
+
+    Returns (data (R,K,bs,bs) f32, cols (R,K) i32, n). Zero-pads N up to
+    a multiple of ``bs``; rows with fewer than K non-zero blocks are
+    padded with zero blocks pointing at column 0.
+    """
+    a = np.asarray(a, np.float32)
+    n = a.shape[0]
+    npad = -n % bs
+    if npad:
+        a = np.pad(a, ((0, npad), (0, npad)))
+    nn = a.shape[0]
+    r = nn // bs
+    blocks = a.reshape(r, bs, r, bs).transpose(0, 2, 1, 3)  # (R, R, bs, bs)
+    nz = np.abs(blocks).max(axis=(2, 3)) > 0                # (R, R)
+    per_row = nz.sum(axis=1)
+    k = int(per_row.max()) if k_max is None else k_max
+    k = max(k, 1)
+    data = np.zeros((r, k, bs, bs), np.float32)
+    cols = np.zeros((r, k), np.int32)
+    for i in range(r):
+        js = np.nonzero(nz[i])[0][:k]
+        data[i, :len(js)] = blocks[i, js]
+        cols[i, :len(js)] = js
+    return jnp.asarray(data), jnp.asarray(cols), n

@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape) cell on the
+production mesh, record memory/cost/collective analysis.
+
+The two lines above MUST run before any jax import (device count locks at
+first init), which is why this module must never be imported by anything
+except the CLI entry point:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md Sec. Dry-run / Sec. Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_arch, list_archs
+from ..optim.adamw import AdamW
+from ..sharding import api as shapi
+from ..utils import hlo as hlo_utils
+from . import mesh as mesh_mod
+from . import shapes as shapes_mod
+from . import steps as steps_mod
+from ..models import model as M
+
+# TPU v5e constants (assignment)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+
+def _plan_for(cfg, *, seq_shard=False, fsdp=None, embed_shard=False,
+              tp_full=False):
+    if fsdp is None:
+        fsdp = cfg.param_count() > 8e9
+    return shapi.tp_plan(data_axes=("pod", "data"), model_axis="model",
+                         fsdp=fsdp, seq_shard=seq_shard,
+                         embed_shard=embed_shard, tp_full=tp_full)
+
+
+def _mesh(kind: str):
+    if kind == "multi":
+        return mesh_mod.make_production_mesh(multi_pod=True)
+    m = mesh_mod.make_production_mesh(multi_pod=False)
+    return m
+
+
+def _single_pod_plan_axes(mesh, plan):
+    """On the single-pod mesh there is no 'pod' axis; strip it."""
+    names = set(mesh.axis_names)
+
+    def fix(v):
+        if isinstance(v, tuple):
+            t = tuple(a for a in v if a in names)
+            return t if t else None
+        return v if v in names else None
+
+    rules = {k: fix(v) for k, v in plan.rules.items()}
+    return shapi.Plan(rules=rules, fsdp=plan.fsdp,
+                      fsdp_axis=plan.fsdp_axis,
+                      fsdp_min_size=plan.fsdp_min_size)
+
+
+def _lower_and_compile(cfg, shape_name: str, mesh, plan, *,
+                       microbatches: int = 1, quantized_kv: bool = False):
+    """AOT lower + compile one cell; returns (compiled, kind, timings)."""
+    t0 = time.time()
+    kind, specs = shapes_mod.input_specs(cfg, shape_name,
+                                         quantized_kv=quantized_kv)
+    params_specs = jax.eval_shape(lambda: M.init_model(jax.random.key(0),
+                                                       cfg)[0])
+    axes = _axes_only(cfg)
+    p_sh = shapi.param_shardings(plan, mesh, params_specs, axes)
+
+    if kind == "train":
+        opt = steps_mod.default_optimizer()
+        opt_specs = jax.eval_shape(opt.init, params_specs)
+        o_sh = steps_mod._opt_shardings(mesh, plan, axes, opt_specs, p_sh)
+        b_sh = steps_mod.batch_sharding(mesh, plan, specs["batch"])
+        fn = steps_mod.build_train_step(cfg, mesh, plan, opt,
+                                        microbatches=microbatches)
+        jfn = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                      out_shardings=(p_sh, o_sh, None),
+                      donate_argnums=(0, 1))
+        with mesh:
+            lowered = jfn.lower(params_specs, opt_specs, specs["batch"])
+    elif kind == "prefill":
+        c_sh = steps_mod.cache_sharding(cfg, mesh, plan, specs["caches"])
+        b_sh = steps_mod.batch_sharding(mesh, plan, specs["batch"])
+        fn = steps_mod.build_prefill_step(cfg, mesh, plan)
+        jfn = jax.jit(fn, in_shardings=(p_sh, b_sh, c_sh),
+                      out_shardings=(c_sh, None),
+                      donate_argnums=(2,))
+        with mesh:
+            lowered = jfn.lower(params_specs, specs["batch"],
+                                specs["caches"])
+    else:  # decode
+        c_sh = steps_mod.cache_sharding(cfg, mesh, plan, specs["caches"])
+        b_sh = steps_mod.batch_sharding(mesh, plan, specs["batch"])
+        fn = steps_mod.build_decode_step(cfg, mesh, plan)
+        jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh),
+                      out_shardings=(c_sh, None),
+                      donate_argnums=(1,))
+        with mesh:
+            lowered = jfn.lower(params_specs, specs["caches"],
+                                specs["batch"])
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    return compiled, kind, (t_lower, t_compile)
+
+
+def _measure(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    coll = hlo_utils.collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll.get("total", 0.0)),
+            "coll_detail": {k: v for k, v in coll.items()
+                            if k not in ("total",)}}
+
+
+def _delta_cfgs(cfg):
+    """Small unrolled configs for the per-unit cost delta.
+
+    Returns (cfg2, cfg4, u2, u4, u_full). XLA's cost analysis counts
+    while-loop bodies once, so scanned stacks undercount by ~depth; the
+    unrolled 2-unit/4-unit lowers give exact per-unit costs:
+        X_true(L) = X(2u) + (U - 2) * (X(4u) - X(2u)) / 2.
+    Hybrid tails are folded in as fractional units (slight attn
+    overcount on the tail, noted in EXPERIMENTS.md).
+    """
+    import dataclasses as dc
+    fam = cfg.family
+    if fam == "encdec":
+        c2 = dc.replace(cfg, n_layers=2, enc_layers=2, scan_unroll=True)
+        c4 = dc.replace(cfg, n_layers=4, enc_layers=4, scan_unroll=True)
+        return c2, c4, 2, 4, float(cfg.n_layers)
+    unit = {"moe": cfg.moe_every,
+            "hybrid": cfg.hybrid_attn_every}.get(fam, 1) or 1
+    c2 = dc.replace(cfg, n_layers=2 * unit, scan_unroll=True)
+    c4 = dc.replace(cfg, n_layers=4 * unit, scan_unroll=True)
+    return c2, c4, 2, 4, cfg.n_layers / unit
+
+
+def _apply_overrides(cfg, overrides):
+    if not overrides:
+        return cfg
+    import dataclasses as dc
+    kw = {}
+    for item in overrides:
+        k, v = item.split("=", 1)
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            v = v.lower() in ("1", "true", "on")
+        elif isinstance(cur, int):
+            v = int(v)
+        elif isinstance(cur, float):
+            v = float(v)
+        kw[k] = v
+    return dc.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             out_dir: Path, microbatches: int = 1, seq_shard: bool = False,
+             fsdp=None, embed_shard: bool = False, tp_full: bool = False,
+             quantized_kv: bool = False, skip_delta: bool = False,
+             overrides=None, tag: str = "") -> dict:
+    cfg = _apply_overrides(get_arch(arch), overrides)
+    ok, why = shapes_mod.cell_applicable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "tag": tag, "status": "skipped", "reason": why}
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}{tag}.json"
+    if not ok:
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[dryrun] SKIP {arch} {shape_name} {mesh_kind}: {why}",
+              flush=True)
+        return rec
+
+    mesh = _mesh(mesh_kind)
+    plan = _plan_for(cfg, seq_shard=seq_shard, fsdp=fsdp,
+                     embed_shard=embed_shard, tp_full=tp_full)
+    plan = _single_pod_plan_axes(mesh, plan)
+    use_fsdp = plan.fsdp
+
+    try:
+        # 1) full scanned compile: THE compile-proof + memory analysis
+        compiled, kind, (t_lower, t_compile) = _lower_and_compile(
+            cfg, shape_name, mesh, plan, microbatches=microbatches,
+            quantized_kv=quantized_kv)
+        mem = compiled.memory_analysis()
+        raw = _measure(compiled)
+
+        # 2) delta analysis on small unrolled configs (exact loop costs)
+        if skip_delta:
+            corrected = dict(raw)
+            u2 = u4 = u_full = None
+        else:
+            c2, c4, u2, u4, u_full = _delta_cfgs(cfg)
+            comp2, _, _ = _lower_and_compile(
+                c2, shape_name, mesh, plan, microbatches=microbatches,
+                quantized_kv=quantized_kv)
+            m2 = _measure(comp2)
+            del comp2
+            comp4, _, _ = _lower_and_compile(
+                c4, shape_name, mesh, plan, microbatches=microbatches,
+                quantized_kv=quantized_kv)
+            m4 = _measure(comp4)
+            del comp4
+            corrected = {}
+            for k in ("flops", "bytes", "coll"):
+                per_unit = (m4[k] - m2[k]) / (u4 - u2)
+                corrected[k] = m2[k] + (u_full - u2) * per_unit
+            corrected["per_unit"] = {
+                k: (m4[k] - m2[k]) / (u4 - u2)
+                for k in ("flops", "bytes", "coll")}
+            corrected["base_2u"] = {k: m2[k]
+                                    for k in ("flops", "bytes", "coll")}
+    except Exception as e:  # noqa: BLE001 — failures are data here
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[dryrun] FAIL {arch} {shape_name} {mesh_kind}: {e}",
+              flush=True)
+        return rec
+
+    n_chips = 1
+    for s in mesh.shape.values():
+        n_chips *= s
+
+    mf = _model_flops(cfg, shape_name)
+    roof = {
+        "compute_s": corrected["flops"] / PEAK_FLOPS,
+        "memory_s": corrected["bytes"] / HBM_BW,
+        "collective_s": corrected["coll"] / ICI_BW,
+    }
+    model_flops_per_chip = mf["model_flops"] / n_chips
+    rec.update(
+        status="ok",
+        n_chips=n_chips,
+        fsdp=use_fsdp,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory={k: int(getattr(mem, k, 0)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes")},
+        cost_raw=raw,
+        cost_corrected=corrected,
+        roofline=roof,
+        model_flops_info=mf,
+        useful_flops_ratio=(model_flops_per_chip
+                            / max(corrected["flops"], 1.0)),
+        bound_step_time_s=max(roof.values()),
+        roofline_fraction=(model_flops_per_chip / PEAK_FLOPS)
+        / max(max(roof.values()), 1e-30),
+    )
+    rec["dominant"] = max(roof, key=roof.get)
+    out_path.write_text(json.dumps(rec, indent=2))
+    print(f"[dryrun] OK {arch} {shape_name} {mesh_kind}{tag} "
+          f"chips={n_chips} compile={t_compile:.1f}s "
+          f"dominant={rec['dominant']} "
+          f"compute={roof['compute_s']:.4f}s "
+          f"memory={roof['memory_s']:.4f}s "
+          f"coll={roof['collective_s']:.4f}s "
+          f"roofline_frac={rec['roofline_fraction']:.3f}", flush=True)
+    return rec
+
+
+def _axes_only(cfg):
+    """Axes tree without materializing params (init under eval_shape)."""
+    out = {}
+
+    def capture():
+        nonlocal out
+        p, a = M.init_model(jax.random.key(0), cfg)
+        out = a
+        return p
+
+    jax.eval_shape(capture)
+    return out
+
+
+def _model_flops(cfg, shape_name: str) -> dict:
+    cell = shapes_mod.SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        d_tokens = cell.seq * cell.batch
+        mf = 6.0 * n_active * d_tokens
+    elif cell.kind == "prefill":
+        d_tokens = cell.seq * cell.batch
+        mf = 2.0 * n_active * d_tokens
+    else:
+        d_tokens = cell.batch          # one token per sequence
+        mf = 2.0 * n_active * d_tokens
+    return {"model_flops": mf, "tokens": d_tokens,
+            "active_params": n_active}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--fsdp", default=None,
+                    choices=[None, "on", "off"])
+    ap.add_argument("--quantized-kv", action="store_true")
+    ap.add_argument("--embed-shard", action="store_true")
+    ap.add_argument("--tp-full", action="store_true")
+    ap.add_argument("--skip-delta", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override, e.g. --override remat=none "
+                         "--override ssm_impl=chunked")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shps = list(shapes_mod.SHAPES) if args.all or not args.shape \
+        else [args.shape]
+    fsdp = None if args.fsdp is None else (args.fsdp == "on")
+
+    failures = 0
+    for mk in meshes:
+        for a in archs:
+            for s in shps:
+                rec = run_cell(a, s, mk, out_dir=out_dir,
+                               microbatches=args.microbatches,
+                               seq_shard=args.seq_shard, fsdp=fsdp,
+                               embed_shard=args.embed_shard,
+                               tp_full=args.tp_full,
+                               quantized_kv=args.quantized_kv,
+                               skip_delta=args.skip_delta,
+                               overrides=args.override,
+                               tag=args.tag)
+                failures += rec["status"] == "error"
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

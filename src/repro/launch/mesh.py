@@ -1,0 +1,23 @@
+"""Production mesh construction (assigned: 16x16 single pod; 2x16x16
+multi-pod). A FUNCTION, not a module constant — importing this module
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever devices exist locally (tests / smoke), data x model."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes_for(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,164 @@
+"""Assigned input-shape table and per-(arch, shape) input specs.
+
+``input_specs`` builds jax.ShapeDtypeStruct stand-ins (no allocation) for
+every model input of a given cell — the dry-run lowers against these.
+``make_inputs`` materializes small real arrays for smoke tests.
+
+Modality frontends are STUBS per the assignment: whisper gets precomputed
+frame embeddings (B, S, d); qwen2-vl gets patch embeddings (B, Tv, d) and
+M-RoPE position ids (B, 3, T).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_applicable(cfg, shape_name: str) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (DESIGN.md Sec. 5)."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k skipped: pure full-attention arch " \
+            "(quadratic); run only for SSM/hybrid per assignment"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _model_dtype(cfg):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def batch_specs(cfg, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the data batch of one cell."""
+    b, t = cell.batch, cell.seq
+    dt = _model_dtype(cfg)
+    i32 = jnp.int32
+    fam = cfg.family
+    if cell.kind == "train":
+        if fam == "vlm":
+            tv = min(cfg.vision_tokens, t // 2)
+            return {"tokens": _sds((b, t - tv), i32),
+                    "vision_embeds": _sds((b, tv, cfg.d_model), dt),
+                    "positions": _sds((b, 3, t), i32),
+                    "labels": _sds((b, t - tv), i32)}
+        if fam == "encdec":
+            return {"frames": _sds((b, t, cfg.d_model), dt),
+                    "tokens": _sds((b, t), i32),
+                    "labels": _sds((b, t), i32)}
+        return {"tokens": _sds((b, t), i32), "labels": _sds((b, t), i32)}
+    if cell.kind == "prefill":
+        if fam == "vlm":
+            tv = min(cfg.vision_tokens, t // 2)
+            return {"tokens": _sds((b, t - tv), i32),
+                    "vision_embeds": _sds((b, tv, cfg.d_model), dt),
+                    "positions": _sds((b, 3, t), i32)}
+        if fam == "encdec":
+            return {"frames": _sds((b, t, cfg.d_model), dt),
+                    "tokens": _sds((b, t), i32)}
+        return {"tokens": _sds((b, t), i32)}
+    # decode
+    out = {"tokens": _sds((b, 1), i32)}
+    if fam == "vlm":
+        out["position"] = _sds((b, 3, 1), i32)
+    else:
+        out["position"] = _sds((1,), i32)
+    if fam == "encdec":
+        out["enc_memory"] = _sds((b, t, cfg.d_model), dt)
+    return out
+
+
+def cache_specs(cfg, cell: ShapeCell, quantized_kv: bool = False):
+    """ShapeDtypeStructs for decode/prefill caches (via eval_shape)."""
+    dt = _model_dtype(cfg)
+    return jax.eval_shape(
+        lambda: M.make_caches(cfg, cell.batch, cell.seq, dt,
+                              quantized_kv=quantized_kv))
+
+
+def input_specs(cfg, shape_name: str, quantized_kv: bool = False):
+    """All lowering inputs for one (arch, shape) cell.
+
+    Returns (step_kind, specs dict) where specs contains 'batch' and
+    (for serve kinds) 'caches'.
+    """
+    cell = SHAPES[shape_name]
+    specs = {"batch": batch_specs(cfg, cell)}
+    if cell.kind in ("prefill", "decode"):
+        specs["caches"] = cache_specs(cfg, cell, quantized_kv)
+    return cell.kind, specs
+
+
+# ---------------------------------------------------------------------------
+# Real (small) inputs for smoke tests
+
+
+def make_inputs(cfg, kind: str, seq: int, batch: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    dt = _model_dtype(cfg)
+    fam = cfg.family
+
+    def toks(shape):
+        return jnp.asarray(rng.integers(0, cfg.vocab, shape), jnp.int32)
+
+    if kind == "train":
+        if fam == "vlm":
+            tv = min(cfg.vision_tokens, seq // 2)
+            pos = np.broadcast_to(np.arange(seq), (batch, 3, seq)).copy()
+            return {"tokens": toks((batch, seq - tv)),
+                    "vision_embeds": jnp.asarray(
+                        rng.standard_normal((batch, tv, cfg.d_model)), dt),
+                    "positions": jnp.asarray(pos, jnp.int32),
+                    "labels": toks((batch, seq - tv))}
+        if fam == "encdec":
+            return {"frames": jnp.asarray(
+                        rng.standard_normal((batch, seq, cfg.d_model)), dt),
+                    "tokens": toks((batch, seq)),
+                    "labels": toks((batch, seq))}
+        return {"tokens": toks((batch, seq)), "labels": toks((batch, seq))}
+    if kind == "prefill":
+        if fam == "vlm":
+            tv = min(cfg.vision_tokens, seq // 2)
+            pos = np.broadcast_to(np.arange(seq), (batch, 3, seq)).copy()
+            return {"tokens": toks((batch, seq - tv)),
+                    "vision_embeds": jnp.asarray(
+                        rng.standard_normal((batch, tv, cfg.d_model)), dt),
+                    "positions": jnp.asarray(pos, jnp.int32)}
+        if fam == "encdec":
+            return {"frames": jnp.asarray(
+                        rng.standard_normal((batch, seq, cfg.d_model)), dt),
+                    "tokens": toks((batch, seq))}
+        return {"tokens": toks((batch, seq))}
+    # decode
+    out = {"tokens": toks((batch, 1))}
+    if fam == "vlm":
+        out["position"] = jnp.full((batch, 3, 1), seq - 1, jnp.int32)
+    else:
+        out["position"] = jnp.full((1,), seq - 1, jnp.int32)
+    if fam == "encdec":
+        out["enc_memory"] = jnp.asarray(
+            rng.standard_normal((batch, seq, cfg.d_model)), dt)
+    return out

@@ -1,0 +1,206 @@
+"""Jittable train / prefill / decode steps with full sharding wiring.
+
+``build_train_step`` returns (step_fn, in_shardings, out_shardings) ready
+for ``jax.jit(..., donate_argnums=(0, 1))`` — this is what both the real
+launcher and the multi-pod dry-run lower. Gradient accumulation scans
+microbatches so the DP gradient reduce of microbatch k overlaps the
+compute of k+1 (XLA async collectives; DESIGN.md Sec. 6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import model as M
+from ..optim.adamw import AdamW, warmup_cosine
+from ..sharding import api as shapi
+
+Array = jax.Array
+
+
+def default_optimizer(total_steps: int = 10000) -> AdamW:
+    return AdamW(lr=warmup_cosine(3e-4, 200, total_steps))
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+
+
+def batch_sharding(mesh: Mesh, plan: shapi.Plan, batch_specs: Any):
+    """Shard every batch leaf on its leading (batch) dim over data axes."""
+    data_axes = plan.rules["batch"]
+
+    def one(x):
+        spec = [None] * len(x.shape)
+        if len(x.shape) >= 1 and x.shape[0] % _size(mesh, data_axes) == 0:
+            spec[0] = data_axes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_sharding(cfg, mesh: Mesh, plan: shapi.Plan, cache_specs: Any):
+    """Path-aware cache shardings.
+
+    KV cache k/v/(scales): logical (B, S, Hkv, D) -> batch over data,
+    seq over model (GQA kv heads rarely divide a 16-way model axis, so
+    the cache seq dim carries TP; attention softmax reduces over the
+    sharded axis with small collectives).
+    SSM conv (B, K, di): di over model. SSM state: mamba1 (B, di, n) ->
+    di over model; mamba2 (B, H, dh, n) -> H over model.
+    Any leading stack dims (layers / units) are replicated.
+    """
+    data_axes = plan.rules["batch"]
+    model_axis = plan.rules["heads"]
+
+    data_axes = plan.rules.get("cache_batch") or data_axes
+
+    logical_rank = {"k": 4, "v": 4, "k_scale": 4, "v_scale": 4,
+                    "conv": 3,
+                    "state": 3 if cfg.ssm_variant == "mamba1" else 4,
+                    "length": 0}
+
+    def logical_spec(name: str, shape):
+        if name in ("k", "v", "k_scale", "v_scale"):
+            sp = [None, None, None, None]
+            if shape[0] % _size(mesh, data_axes) == 0:
+                sp[0] = data_axes
+            if shape[1] % _size(mesh, model_axis) == 0:
+                sp[1] = model_axis
+            return sp
+        if name == "conv":
+            sp = [None, None, None]
+            if shape[0] % _size(mesh, data_axes) == 0:
+                sp[0] = data_axes
+            if shape[2] % _size(mesh, model_axis) == 0:
+                sp[2] = model_axis
+            return sp
+        if name == "state":
+            sp = [None] * len(shape)
+            if shape[0] % _size(mesh, data_axes) == 0:
+                sp[0] = data_axes
+            if shape[1] % _size(mesh, model_axis) == 0:
+                sp[1] = model_axis
+            return sp
+        return []
+
+    def dispatch(path, x):
+        name = None
+        for entry in reversed(path):
+            attr = getattr(entry, "name", getattr(entry, "key", None))
+            if attr in logical_rank:
+                name = attr
+                break
+        if name is None or name == "length" or len(x.shape) <= 1:
+            return NamedSharding(mesh, P())
+        rank = logical_rank[name]
+        lead = len(x.shape) - rank
+        sp = logical_spec(name, x.shape[lead:])
+        return NamedSharding(mesh, P(*([None] * lead), *sp))
+
+    return jax.tree_util.tree_map_with_path(dispatch, cache_specs)
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, (tuple, list)):
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axes]
+
+
+# ---------------------------------------------------------------------------
+# Train step
+
+
+def build_train_step(cfg, mesh: Mesh, plan: shapi.Plan,
+                     optimizer: Optional[AdamW] = None,
+                     microbatches: int = 1):
+    """Returns (fn, shardings) for
+    fn(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    optimizer = optimizer or default_optimizer()
+
+    def loss_wrapped(params, batch):
+        with shapi.activation_context(mesh, plan):
+            return M.loss_fn(cfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (loss, _), grads = jax.value_and_grad(
+                    loss_wrapped, has_aux=True)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    gacc, grads)
+                return (gacc, lacc + loss / microbatches), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            # scan_unroll: cost-analysis mode must unroll this loop too,
+            # or per-microbatch work is counted once (see dryrun.py)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zeros, 0.0), mbs,
+                unroll=microbatches if cfg.scan_unroll else 1)
+            metrics = {"loss": loss}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_wrapped, has_aux=True)(params, batch)
+            metrics = dict(metrics, loss=loss)
+        params, opt_state, opt_metrics = optimizer.update(
+            grads, opt_state, params)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_shardings(cfg, mesh: Mesh, plan: shapi.Plan, params_axes,
+                    params_specs, opt_state_specs, batch_specs):
+    """(in_shardings, out_shardings) trees for jit."""
+    p_sh = shapi.param_shardings(plan, mesh, params_specs, params_axes)
+    o_sh = _opt_shardings(mesh, plan, params_axes, opt_state_specs, p_sh)
+    b_sh = batch_sharding(mesh, plan, batch_specs)
+    repl = NamedSharding(mesh, P())
+    m_sh = None  # metrics: let XLA decide (scalars)
+    return (p_sh, o_sh, b_sh), (p_sh, o_sh, repl)
+
+
+def _opt_shardings(mesh, plan, params_axes, opt_state_specs, p_sh):
+    """AdamW state: count replicated; m/v shard like their params."""
+    from ..optim.adamw import AdamWState
+    return AdamWState(
+        count=NamedSharding(mesh, P()),
+        m=jax.tree.map(lambda s: s, p_sh),
+        v=jax.tree.map(lambda s: s, p_sh))
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+
+
+def build_prefill_step(cfg, mesh: Mesh, plan: shapi.Plan):
+    def prefill_step(params, batch, caches):
+        with shapi.activation_context(mesh, plan):
+            return M.prefill(cfg, params, batch, caches)
+
+    return prefill_step
+
+
+def build_decode_step(cfg, mesh: Mesh, plan: shapi.Plan):
+    def decode_step(params, caches, batch):
+        with shapi.activation_context(mesh, plan):
+            return M.decode_step(cfg, params, caches, batch)
+
+    return decode_step

@@ -1,0 +1,3 @@
+from . import attention, common, losses, model, moe, ssm  # noqa: F401
+from .model import (decode_step, init_model, loss_fn, make_caches,  # noqa
+                    prefill)

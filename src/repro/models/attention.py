@@ -1,0 +1,279 @@
+"""GQA attention: full, chunked (memory-efficient prefill), and decode.
+
+``full``     materializes (T, S) scores — fine for train_4k scales.
+``chunked``  scans query tiles with an online softmax (pure JAX flash
+             pattern) — required for 32k prefill where full scores would
+             be petabytes; per-step live memory is O(bq * S).
+``decode``   single-query attention against a (possibly int8) KV cache.
+
+Sliding-window masking (zamba2 long-context mode) is applied in all three.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype):
+    hd = cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    pq, aq = cm.dense_init(ks[0], cfg.d_model, cfg.n_heads * hd,
+                           "embed", "heads", bias=cfg.use_bias, dtype=dtype)
+    pk, ak = cm.dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd,
+                           "embed", "kv_heads", bias=cfg.use_bias,
+                           dtype=dtype)
+    pv, av = cm.dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd,
+                           "embed", "kv_heads", bias=cfg.use_bias,
+                           dtype=dtype)
+    po, ao = cm.dense_init(ks[3], cfg.n_heads * hd, cfg.d_model,
+                           "heads", "embed", bias=cfg.use_bias, dtype=dtype)
+    return ({"wq": pq, "wk": pk, "wv": pv, "wo": po},
+            {"wq": aq, "wk": ak, "wv": av, "wo": ao})
+
+
+def _split_heads(x: Array, n: int) -> Array:
+    b, t, _ = x.shape
+    return x.reshape(b, t, n, -1)
+
+
+def _repeat_kv(k: Array, n_heads: int) -> Array:
+    hkv = k.shape[2]
+    if hkv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // hkv, axis=2)
+
+
+def _mask(rows: Array, cols: Array, *, causal: bool,
+          window: Optional[int], s_valid: Optional[int | Array]) -> Array:
+    m = jnp.ones(jnp.broadcast_shapes(rows.shape, cols.shape), bool)
+    if causal:
+        m &= cols <= rows
+    if window is not None:
+        m &= cols > rows - window
+    if s_valid is not None:
+        m &= cols < s_valid
+    return m
+
+
+def _group_q(q, hkv):
+    """(B, T, H, D) -> (B, T, Hkv, G, D): grouped-query layout that
+    contracts directly against un-replicated KV (no _repeat_kv blowup)."""
+    b, t, h, d = q.shape
+    return q.reshape(b, t, hkv, h // hkv, d)
+
+
+def _sdpa_full(q, k, v, *, causal, window, positions_q=None):
+    """q: (B,T,H,D), k/v: (B,S,Hkv,D) -> (B,T,H,D)."""
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    qg = _group_q(q, hkv)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    rows = jnp.arange(t)[:, None] if positions_q is None \
+        else positions_q[..., :, None]
+    cols = jnp.arange(s)[None, :]
+    m = _mask(rows, cols, causal=causal, window=window, s_valid=None)
+    scores = jnp.where(m, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), v)
+    return out.reshape(b, t, h, d)
+
+
+def _sdpa_chunked(q, k, v, *, causal, window, chunk: int,
+                  unroll: bool = False):
+    """Scan over query tiles; O(bq*S) live scores; grouped GQA."""
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    nq = t // chunk
+    assert t % chunk == 0, (t, chunk)
+    qb = _group_q(q, hkv).reshape(b, nq, chunk, hkv, h // hkv, d)
+
+    cols = jnp.arange(s)[None, :]
+
+    def body(_, qi_idx):
+        qi, idx = qi_idx                  # qi: (b, chunk, hkv, g, d)
+        rows = idx * chunk + jnp.arange(chunk)[:, None]
+        scores = jnp.einsum("btkgd,bskd->bkgts", qi.astype(jnp.float32),
+                            k.astype(jnp.float32)) / (d ** 0.5)
+        m = _mask(rows, cols, causal=causal, window=window, s_valid=None)
+        scores = jnp.where(m, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), v)
+        return None, out.reshape(b, chunk, h, d)
+
+    _, outs = jax.lax.scan(body, None,
+                           (jnp.moveaxis(qb, 1, 0), jnp.arange(nq)),
+                           unroll=nq if unroll else 1)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, t, h, d)
+
+
+class KVCache(NamedTuple):
+    k: Array        # (B, S_max, Hkv, D) in cache dtype
+    v: Array
+    length: Array   # () int32 — tokens currently stored
+    k_scale: Optional[Array] = None   # int8 quantization scales (B,S,Hkv,1)
+    v_scale: Optional[Array] = None
+
+
+def make_cache(batch: int, s_max: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16, quantized: bool = False) -> KVCache:
+    shape = (batch, s_max, n_kv, head_dim)
+    if quantized:
+        return KVCache(k=jnp.zeros(shape, jnp.int8),
+                       v=jnp.zeros(shape, jnp.int8),
+                       length=jnp.zeros((), jnp.int32),
+                       k_scale=jnp.zeros(shape[:-1] + (1,), jnp.float32),
+                       v_scale=jnp.zeros(shape[:-1] + (1,), jnp.float32))
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def _quantize(x: Array):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32) \
+        / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def cache_update(cache: KVCache, k_new: Array, v_new: Array,
+                 onehot: bool = False) -> KVCache:
+    """Append k/v (B, T_new, Hkv, D) at position ``length``.
+
+    ``onehot=True`` (single-token decode only): write via a one-hot mask
+    instead of dynamic_update_slice. Elementwise selects stay in the
+    cache's sequence-sharded layout, so XLA never reshards/gathers the
+    cache around the update (the decode collective hillclimb fix —
+    EXPERIMENTS.md §Perf).
+    """
+    from ..sharding.api import constrain as _c
+    z = jnp.zeros((), cache.length.dtype)
+
+    if onehot and k_new.shape[1] == 1:
+        s = cache.k.shape[1]
+        oh = (jnp.arange(s, dtype=cache.length.dtype)
+              == cache.length)[None, :, None, None]
+
+        def upd(buf, val):
+            out = jnp.where(oh, val.astype(buf.dtype), buf)
+            return _c(out, ("batch", "kv_seq", None, None))
+    else:
+        def upd(buf, val):
+            return jax.lax.dynamic_update_slice(
+                buf, val.astype(buf.dtype), (z, cache.length, z, z))
+
+    if cache.k_scale is not None:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        return KVCache(k=upd(cache.k, kq), v=upd(cache.v, vq),
+                       length=cache.length + k_new.shape[1],
+                       k_scale=upd(cache.k_scale, ks),
+                       v_scale=upd(cache.v_scale, vs))
+    return KVCache(k=upd(cache.k, k_new.astype(cache.k.dtype)),
+                   v=upd(cache.v, v_new.astype(cache.v.dtype)),
+                   length=cache.length + k_new.shape[1])
+
+
+def _cache_kv(cache: KVCache):
+    if cache.k_scale is not None:
+        k = cache.k.astype(jnp.float32) * cache.k_scale
+        v = cache.v.astype(jnp.float32) * cache.v_scale
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    return cache.k, cache.v
+
+
+def _sdpa_decode(q, cache: KVCache, *, window, constrain_kv=False):
+    """q: (B, 1, H, D) against the cache; masks unwritten tail.
+
+    ``constrain_kv``: pin the sequence-sharded KV layout through the
+    score/PV einsums so XLA reduces softmax over the sharded axis instead
+    of gathering the cache (collective-bound decode hillclimb knob)."""
+    from ..sharding.api import constrain as _c
+    b, t, h, d = q.shape
+    k, v = _cache_kv(cache)
+    s = k.shape[1]
+    hkv = k.shape[2]
+    if constrain_kv:
+        k = _c(k, ("batch", "kv_seq", None, None))
+        v = _c(v, ("batch", "kv_seq", None, None))
+    qg = _group_q(q, hkv)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    if constrain_kv:
+        scores = _c(scores, ("batch", None, None, None, "kv_seq"))
+    rows = (cache.length - 1)[None, None]     # query position = length-1
+    cols = jnp.arange(s)[None, :]
+    m = _mask(rows, cols, causal=True, window=window, s_valid=cache.length)
+    scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    if constrain_kv:
+        p = _c(p, ("batch", None, None, None, "kv_seq"))
+    out = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), v)
+    return out.reshape(b, t, h, d)
+
+
+def attn_apply(cfg, p, x: Array, *, positions: Array, mode: str,
+               cache: Optional[KVCache] = None, cross_kv=None,
+               window: Optional[int] = None):
+    """mode: 'train' | 'prefill' | 'decode' | 'encoder' | 'cross'.
+
+    Returns (out, new_cache). 'prefill' also fills ``cache``.
+    """
+    hd = cfg.head_dim_
+    b, t, _ = x.shape
+    q = _split_heads(cm.dense_apply(p["wq"], x), cfg.n_heads)
+    if mode == "cross":
+        k, v = cross_kv
+    else:
+        k = _split_heads(cm.dense_apply(p["wk"], x), cfg.n_kv_heads)
+        v = _split_heads(cm.dense_apply(p["wv"], x), cfg.n_kv_heads)
+
+    if cfg.rope == "rope" and mode != "cross":
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope" and mode != "cross":
+        q = cm.apply_mrope(q, positions, cfg.rope_theta)
+        k = cm.apply_mrope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if mode == "decode":
+        new_cache = cache_update(cache, k, v,
+                                 onehot=cfg.decode_constrain_kv)
+        out = _sdpa_decode(q, new_cache, window=window,
+                           constrain_kv=cfg.decode_constrain_kv)
+    elif mode == "prefill":
+        new_cache = cache_update(cache, k, v)
+        impl = _select_impl(cfg, t)
+        if impl == "chunked":
+            out = _sdpa_chunked(q, k, v, causal=True, window=window,
+                                chunk=cfg.attn_chunk,
+                                unroll=cfg.scan_unroll)
+        else:
+            out = _sdpa_full(q, k, v, causal=True, window=window)
+    else:
+        causal = mode == "train"
+        impl = _select_impl(cfg, t)
+        if impl == "chunked" and t % cfg.attn_chunk == 0:
+            out = _sdpa_chunked(q, k, v, causal=causal, window=window,
+                                chunk=cfg.attn_chunk,
+                                unroll=cfg.scan_unroll)
+        else:
+            out = _sdpa_full(q, k, v, causal=causal, window=window)
+
+    out = out.reshape(b, t, cfg.n_heads * hd)
+    return cm.dense_apply(p["wo"], out), new_cache
+
+
+def _select_impl(cfg, t: int) -> str:
+    if cfg.attn_impl != "auto":
+        return cfg.attn_impl
+    return "chunked" if t >= 8192 else "full"

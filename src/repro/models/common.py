@@ -1,0 +1,166 @@
+"""Composable pure-JAX layer library with logical sharding axes.
+
+Every ``*_init`` returns ``(params, axes)``: two pytrees of identical
+structure, the second holding per-dimension *logical axis names* (or None)
+that ``repro.sharding.rules`` later maps onto the physical mesh
+(pod, data, model). This is the t5x/MaxText convention without the flax
+dependency — params are plain nested dicts, apply functions are pure.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def trunc_normal(key, shape, scale, dtype):
+    fan_in = shape[0] if len(shape) else 1
+    std = scale / max(fan_in, 1) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense projections
+
+
+def dense_init(key, in_dim: int, out_dim: int, in_ax: Optional[str],
+               out_ax: Optional[str], *, bias: bool, dtype,
+               scale: float = 1.0):
+    p = {"w": trunc_normal(key, (in_dim, out_dim), scale, dtype)}
+    a = {"w": (in_ax, out_ax)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+        a["b"] = (out_ax,)
+    return p, a
+
+
+def dense_apply(p, x: Array) -> Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms (paper-relevant detail: olmo uses NON-PARAMETRIC LayerNorm)
+
+
+def norm_init(kind: str, dim: int, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}, {"scale": ("embed",)}
+    if kind == "layernorm":
+        return ({"scale": jnp.ones((dim,), dtype),
+                 "bias": jnp.zeros((dim,), dtype)},
+                {"scale": ("embed",), "bias": ("embed",)})
+    if kind == "layernorm_np":   # non-parametric
+        return {}, {}
+    raise ValueError(kind)
+
+
+def norm_apply(kind: str, p, x: Array) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True)
+                               + 1e-6)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+    if kind == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + multimodal M-RoPE)
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., T, H, D); positions: broadcastable to (..., T)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,T,1,D/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions3: Array, theta: float) -> Array:
+    """Qwen2-VL M-RoPE: positions3 (..., 3, T) = (temporal, h, w) ids; the
+    head dim is split into three bands, one rotated per id stream."""
+    d = x.shape[-1]
+    b1 = d // 2 // 2 * 2          # temporal band (half the dim, even)
+    b2 = (d - b1) // 2 // 2 * 2   # height band
+    b3 = d - b1 - b2              # width band
+    parts = jnp.split(x, [b1, b1 + b2], axis=-1)
+    out = []
+    for band, pos in zip(parts, jnp.moveaxis(positions3, -2, 0)):
+        out.append(apply_rope(band, pos, theta) if band.shape[-1] >= 2
+                   else band)
+    return jnp.concatenate(out, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def mlp_init(key, cfg, d_ff: int, dtype, ff_ax: str = "mlp"):
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        p_in, a_in = dense_init(ks[0], cfg.d_model, d_ff, "embed", ff_ax,
+                                bias=cfg.use_bias, dtype=dtype)
+        p_gate, a_gate = dense_init(ks[1], cfg.d_model, d_ff, "embed", ff_ax,
+                                    bias=cfg.use_bias, dtype=dtype)
+        p_out, a_out = dense_init(ks[2], d_ff, cfg.d_model, ff_ax, "embed",
+                                  bias=cfg.use_bias, dtype=dtype)
+        return ({"wi": p_in, "wg": p_gate, "wo": p_out},
+                {"wi": a_in, "wg": a_gate, "wo": a_out})
+    p_in, a_in = dense_init(ks[0], cfg.d_model, d_ff, "embed", ff_ax,
+                            bias=cfg.use_bias, dtype=dtype)
+    p_out, a_out = dense_init(ks[2], d_ff, cfg.d_model, ff_ax, "embed",
+                              bias=cfg.use_bias, dtype=dtype)
+    return {"wi": p_in, "wo": p_out}, {"wi": a_in, "wo": a_out}
+
+
+def mlp_apply(cfg, p, x: Array) -> Array:
+    if "wg" in p:
+        h = jax.nn.silu(dense_apply(p["wi"], x)) * dense_apply(p["wg"], x)
+    else:
+        h = jax.nn.gelu(dense_apply(p["wi"], x))
+    return dense_apply(p["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return ({"table": trunc_normal(key, (vocab, dim), 1.0, dtype)},
+            {"table": ("vocab", "embed")})
+
+
+def embed_apply(p, tokens: Array) -> Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed_logits(p_embed, x: Array) -> Array:
+    """Tied unembedding (x @ table^T) in f32 for stable CE."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p_embed["table"].astype(jnp.float32))

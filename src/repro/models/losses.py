@@ -1,0 +1,44 @@
+"""Loss functions. Chunked cross-entropy never materializes (B, T, V)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def chunked_cross_entropy(x: Array, embed_table: Array, labels: Array,
+                          *, chunk: int, mask: Array | None = None,
+                          z_loss: float = 1e-4, unroll: bool = False):
+    """x: (B, T, d) final hidden states; labels: (B, T) int32.
+
+    Computes mean token CE by scanning T in chunks: per step only a
+    (B, chunk, V) logits slab is live. ``mask``: 1.0 = count this token.
+    """
+    b, t, d = x.shape
+    chunk = max(1, min(chunk, t))
+    while t % chunk:
+        chunk //= 2
+    n = t // chunk
+    xc = x.reshape(b, n, chunk, d).swapaxes(0, 1)          # (n, B, c, d)
+    lc = labels.reshape(b, n, chunk).swapaxes(0, 1)        # (n, B, c)
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mc = mask.reshape(b, n, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        tot, cnt, zacc = carry
+        xi, li, mi = inp
+        logits = jnp.einsum("bcd,vd->bcv", xi.astype(jnp.float32),
+                            embed_table.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * mi
+        z = (lse ** 2) * mi
+        return (tot + ce.sum(), cnt + mi.sum(), zacc + z.sum()), None
+
+    (tot, cnt, zacc), _ = jax.lax.scan(body, (0.0, 0.0, 0.0), (xc, lc, mc),
+                                       unroll=n if unroll else 1)
+    cnt = jnp.maximum(cnt, 1.0)
+    return tot / cnt + z_loss * zacc / cnt, {"ce": tot / cnt,
+                                             "tokens": cnt}

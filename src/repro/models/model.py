@@ -1,0 +1,499 @@
+"""Model assembly: decoder-only LM, MoE LM, SSM LM, hybrid, enc-dec, VLM.
+
+One config-driven ``init_model`` + three pure entry points:
+
+  loss_fn(cfg, params, batch)                -> (loss, metrics)      train
+  prefill(cfg, params, batch)                -> (caches, logits)     serve
+  decode_step(cfg, params, caches, tokens)   -> (caches, logits)     serve
+
+Layer stacks are ``lax.scan`` over stacked parameter pytrees (compile
+size O(1) in depth) with per-block ``jax.checkpoint`` when
+``cfg.remat == "block"``. Heterogeneous patterns scan over *units*
+(e.g. llama4: [dense, moe]; zamba2: 6 mamba + 1 shared-param attention
+block). Activation sharding is annotated via ``sharding.api.constrain``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.api import constrain
+from . import attention as attn
+from . import common as cm
+from . import losses
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Stacked init helper
+
+
+def stack_init(key, n: int, init_fn):
+    """vmap an init over n keys; prefix every axes tuple with 'layers'."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(key)  # structure only
+    axes = jax.tree.map(
+        lambda a: ("layers",) + a,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return params, axes
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+
+
+def dense_block_init(key, cfg, dtype, kind: str = "decoder"):
+    """kind: decoder | encoder | cross-decoder | moe | moe-dense."""
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = cm.norm_init(cfg.norm, cfg.d_model, dtype)
+    p["attn"], a["attn"] = attn.attn_init(ks[0], cfg, dtype)
+    p["ln2"], a["ln2"] = cm.norm_init(cfg.norm, cfg.d_model, dtype)
+    if kind == "cross-decoder":
+        p["lnx"], a["lnx"] = cm.norm_init(cfg.norm, cfg.d_model, dtype)
+        p["xattn"], a["xattn"] = attn.attn_init(ks[1], cfg, dtype)
+    if kind == "moe":
+        p["moe"], a["moe"] = moe_mod.moe_init(ks[2], cfg, dtype)
+        if cfg.moe_shared_expert or cfg.moe_dense_residual:
+            p["mlp"], a["mlp"] = cm.mlp_init(ks[3], cfg, cfg.d_ff, dtype)
+    else:
+        p["mlp"], a["mlp"] = cm.mlp_init(ks[3], cfg, cfg.d_ff, dtype)
+    return p, a
+
+
+def dense_block_apply(cfg, p, x, *, mode, positions, cache=None,
+                      cross_kv=None, window=None):
+    aux = jnp.zeros((), jnp.float32)
+    h = cm.norm_apply(cfg.norm, p["ln1"], x)
+    o, new_cache = attn.attn_apply(cfg, p["attn"], h, positions=positions,
+                                   mode=mode, cache=cache, window=window)
+    x = x + o
+    x = constrain(x, ("batch", "seq", "embed"))
+    if "xattn" in p:
+        h = cm.norm_apply(cfg.norm, p["lnx"], x)
+        o, _ = attn.attn_apply(cfg, p["xattn"], h, positions=positions,
+                               mode="cross", cross_kv=cross_kv)
+        x = x + o
+    h = cm.norm_apply(cfg.norm, p["ln2"], x)
+    if "moe" in p:
+        o, aux = moe_mod.moe_apply(cfg, p["moe"], h,
+                                   dropless=(mode == "decode"))
+        if "mlp" in p:   # shared expert / dense residual path
+            o = o + cm.mlp_apply(cfg, p["mlp"], h)
+    else:
+        o = cm.mlp_apply(cfg, p["mlp"], h)
+    x = x + o
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, new_cache, aux
+
+
+def ssm_block_init(key, cfg, dtype):
+    p, a = {}, {}
+    p["ln"], a["ln"] = cm.norm_init(cfg.norm, cfg.d_model, dtype)
+    p["ssm"], a["ssm"] = ssm_mod.ssm_init(key, cfg, dtype)
+    return p, a
+
+
+def ssm_block_apply(cfg, p, x, *, mode, cache=None):
+    h = cm.norm_apply(cfg.norm, p["ln"], x)
+    o, new_cache = ssm_mod.ssm_apply(cfg, p["ssm"], h, mode=mode,
+                                     cache=cache)
+    x = x + o
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model init
+
+
+def init_model(key, cfg):
+    dtype = cm._dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p: dict = {}
+    a: dict = {}
+    p["embed"], a["embed"] = cm.embed_init(ks[0], cfg.vocab, cfg.d_model,
+                                           dtype)
+    p["final_norm"], a["final_norm"] = cm.norm_init(cfg.norm, cfg.d_model,
+                                                    dtype)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+        p["blocks"], a["blocks"] = stack_init(
+            ks[1], cfg.n_layers,
+            lambda k: dense_block_init(k, cfg, dtype))
+    elif fam == "moe":
+        per_unit = cfg.moe_every
+        assert cfg.n_layers % per_unit == 0, (cfg.n_layers, per_unit)
+        kinds = ["decoder"] * (per_unit - 1) + ["moe"]
+
+        def unit_init(k):
+            kk = jax.random.split(k, per_unit)
+            ps, as_ = {}, {}
+            for i, kind in enumerate(kinds):
+                ps[f"sub{i}"], as_[f"sub{i}"] = dense_block_init(
+                    kk[i], cfg, dtype, kind=kind)
+            return ps, as_
+
+        p["units"], a["units"] = stack_init(ks[1], cfg.n_layers // per_unit,
+                                            unit_init)
+    elif fam == "ssm":
+        p["blocks"], a["blocks"] = stack_init(
+            ks[1], cfg.n_layers, lambda k: ssm_block_init(k, cfg, dtype))
+    elif fam == "hybrid":
+        k_unit = cfg.hybrid_attn_every
+        n_units = cfg.n_layers // k_unit
+        tail = cfg.n_layers - n_units * k_unit
+
+        def unit_init(k):
+            return stack_init(k, k_unit,
+                              lambda kk: ssm_block_init(kk, cfg, dtype))
+
+        p["units"], a["units"] = stack_init(ks[1], n_units, unit_init)
+        if tail:
+            p["tail"], a["tail"] = stack_init(
+                ks[2], tail, lambda k: ssm_block_init(k, cfg, dtype))
+        # ONE parameter-shared attention block (zamba2)
+        p["shared_attn"], a["shared_attn"] = dense_block_init(
+            ks[3], cfg, dtype)
+    elif fam == "encdec":
+        p["enc_blocks"], a["enc_blocks"] = stack_init(
+            ks[1], cfg.enc_layers,
+            lambda k: dense_block_init(k, cfg, dtype, kind="encoder"))
+        p["blocks"], a["blocks"] = stack_init(
+            ks[2], cfg.n_layers,
+            lambda k: dense_block_init(k, cfg, dtype, kind="cross-decoder"))
+        p["enc_norm"], a["enc_norm"] = cm.norm_init(cfg.norm, cfg.d_model,
+                                                    dtype)
+    else:
+        raise ValueError(fam)
+
+    if not cfg.tie_embeddings:
+        p["unembed"], a["unembed"] = cm.embed_init(ks[4], cfg.vocab,
+                                                   cfg.d_model, dtype)
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# Stacked application (scan over layers / units)
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "block":
+        return jax.checkpoint(fn)
+    return fn
+
+
+def _scan_stack(cfg, stack_params, x, apply_one, caches=None, length=None):
+    """Scan a stacked block tree; caches (if given) are stacked alike."""
+
+    def body(x, inp):
+        p_i, c_i = inp
+        x, new_c, aux = apply_one(p_i, x, c_i)
+        return x, (new_c, aux)
+
+    body = _maybe_remat(cfg, body)
+    xs = (stack_params, caches) if caches is not None else \
+        (stack_params, _none_like_stack(stack_params, length))
+    n = jax.tree.leaves(stack_params)[0].shape[0]
+    x, (new_caches, auxs) = jax.lax.scan(
+        body, x, xs, unroll=n if cfg.scan_unroll else 1)
+    return x, new_caches, jnp.sum(auxs)
+
+
+def _none_like_stack(stack_params, length):
+    leaf = jax.tree.leaves(stack_params)[0]
+    n = leaf.shape[0]
+    return jnp.zeros((n,), jnp.float32)   # dummy per-layer carry
+
+
+def _sinusoid(t: int, d: int, offset=0) -> Array:
+    pos = (jnp.arange(t) + offset)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((t, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[: (d + 1) // 2]))
+    return pe
+
+
+def _embed_inputs(cfg, params, batch):
+    """Token (+vision) embedding; returns (x, positions, label_mask)."""
+    tokens = batch["tokens"]
+    x = cm.embed_apply(params["embed"], tokens)
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    if cfg.family == "vlm":
+        vis = batch["vision_embeds"].astype(x.dtype)     # (B, Tv, d)
+        x = jnp.concatenate([vis, x], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros(vis.shape[:2], jnp.float32), mask], axis=1)
+        positions = batch["positions"]                   # (B, 3, T) M-RoPE
+    else:
+        t = x.shape[1]
+        positions = jnp.arange(t)[None, :]
+    if cfg.rope == "none":  # whisper: sinusoidal absolute positions
+        x = x + _sinusoid(x.shape[1], x.shape[2]).astype(x.dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, positions, mask
+
+
+def _apply_stacks(cfg, params, x, *, mode, positions, caches=None,
+                  enc_memory=None):
+    """Run the full block stack. Returns (x, new_caches, aux)."""
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.attn_window if mode != "train" else None
+
+    if fam in ("dense", "vlm", "encdec"):
+        cross = None
+
+        def one(p_i, x, c_i):
+            cache = c_i if caches is not None else None
+            cross_kv = cross(p_i) if cross else None
+            x, nc, aux = dense_block_apply(
+                cfg, p_i, x, mode=mode, positions=positions,
+                cache=cache, cross_kv=cross_kv, window=window)
+            return x, (nc if caches is not None else jnp.zeros((), jnp.float32)), aux
+
+        if fam == "encdec":
+            def cross(p_i):
+                hd = cfg.head_dim_
+                k = attn._split_heads(
+                    cm.dense_apply(p_i["xattn"]["wk"], enc_memory),
+                    cfg.n_kv_heads)
+                v = attn._split_heads(
+                    cm.dense_apply(p_i["xattn"]["wv"], enc_memory),
+                    cfg.n_kv_heads)
+                return (k, v)
+        else:
+            cross = None
+        x, new_caches, aux = _scan_stack(cfg, params["blocks"], x, one,
+                                         caches)
+        return x, new_caches, aux
+
+    if fam == "moe":
+        kinds = ["decoder"] * (cfg.moe_every - 1) + ["moe"]
+
+        def one(p_u, x, c_u):
+            aux = jnp.zeros((), jnp.float32)
+            ncs = {}
+            for i in range(len(kinds)):
+                cache = c_u[f"sub{i}"] if caches is not None else None
+                x, nc, a1 = dense_block_apply(
+                    cfg, p_u[f"sub{i}"], x, mode=mode, positions=positions,
+                    cache=cache, window=window)
+                ncs[f"sub{i}"] = nc if caches is not None else \
+                    jnp.zeros((), jnp.float32)
+                aux = aux + a1
+            return x, ncs, aux
+
+        return _scan_stack(cfg, params["units"], x, one, caches)
+
+    if fam == "ssm":
+        def one(p_i, x, c_i):
+            cache = c_i if caches is not None else None
+            x, nc = ssm_block_apply(cfg, p_i, x, mode=mode, cache=cache)
+            return x, (nc if caches is not None else
+                       jnp.zeros((), jnp.float32)), jnp.zeros((), jnp.float32)
+
+        x, new_caches, aux = _scan_stack(cfg, params["blocks"], x, one,
+                                         caches)
+        return x, new_caches, aux
+
+    if fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def unit_one(p_u, x, c_u):
+            # k_unit mamba blocks then the shared attention block
+            def inner(x, inp):
+                p_i, c_i = inp
+                cache = c_i if caches is not None else None
+                x, nc = ssm_block_apply(cfg, p_i, x, mode=mode, cache=cache)
+                return x, (nc if caches is not None else
+                           jnp.zeros((), jnp.float32))
+
+            ssm_caches = c_u["ssm"] if caches is not None else \
+                _none_like_stack(p_u, None)
+            k_unit = jax.tree.leaves(p_u["ssm_stack"])[0].shape[0]
+            x, new_ssm = jax.lax.scan(
+                inner, x, (p_u["ssm_stack"], ssm_caches),
+                unroll=k_unit if cfg.scan_unroll else 1)
+            attn_cache = c_u["attn"] if caches is not None else None
+            x, new_attn, aux = dense_block_apply(
+                cfg, shared, x, mode=mode, positions=positions,
+                cache=attn_cache, window=window)
+            ncs = {"ssm": new_ssm,
+                   "attn": (new_attn if caches is not None else
+                            jnp.zeros((), jnp.float32))}
+            return x, ncs, aux
+
+        # rewrap unit params so the inner scan sees a clean stacked tree
+        units = {"ssm_stack": params["units"]}
+        caches_u = caches["units"] if caches is not None else None
+
+        def one(p_u, x, c_u):
+            return unit_one(p_u, x, c_u)
+
+        x, new_units, aux = _scan_stack(cfg, units_tree(params), x, one,
+                                        caches_u)
+        new_caches = {"units": new_units}
+        if "tail" in params:
+            def tail_one(p_i, x, c_i):
+                cache = c_i if caches is not None else None
+                x, nc = ssm_block_apply(cfg, p_i, x, mode=mode, cache=cache)
+                return x, (nc if caches is not None else
+                           jnp.zeros((), jnp.float32)), \
+                    jnp.zeros((), jnp.float32)
+
+            caches_t = caches["tail"] if caches is not None else None
+            x, new_tail, a2 = _scan_stack(cfg, params["tail"], x, tail_one,
+                                          caches_t)
+            aux = aux + a2
+            new_caches["tail"] = new_tail
+        return x, new_caches, aux
+
+    raise ValueError(fam)
+
+
+def units_tree(params):
+    return {"ssm_stack": params["units"]}
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+
+
+def _encode(cfg, params, frames):
+    """Whisper encoder over stub frame embeddings (B, S, d)."""
+    x = frames
+    if cfg.rope == "none":
+        x = x + _sinusoid(x.shape[1], x.shape[2]).astype(x.dtype)
+    pos = jnp.arange(x.shape[1])[None, :]
+
+    def one(p_i, x, c_i):
+        x, _, aux = dense_block_apply(cfg, p_i, x, mode="encoder",
+                                      positions=pos)
+        return x, jnp.zeros((), jnp.float32), aux
+
+    x, _, _ = _scan_stack(cfg, params["enc_blocks"], x, one, None)
+    return cm.norm_apply(cfg.norm, params["enc_norm"], x)
+
+
+def loss_fn(cfg, params, batch):
+    """Training forward + chunked CE. batch keys per family:
+    dense/moe/ssm/hybrid: tokens, labels
+    vlm:    tokens, vision_embeds, positions, labels
+    encdec: frames, tokens, labels
+    """
+    enc_memory = None
+    if cfg.is_encdec:
+        enc_memory = _encode(cfg, params, batch["frames"].astype(
+            cm._dtype(cfg.dtype)))
+    x, positions, mask = _embed_inputs(cfg, params, batch)
+    x, _, aux = _apply_stacks(cfg, params, x, mode="train",
+                              positions=positions, enc_memory=enc_memory)
+    x = cm.norm_apply(cfg.norm, params["final_norm"], x)
+    table = params["embed"]["table"] if cfg.tie_embeddings else \
+        params["unembed"]["table"]
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # labels cover only the text positions; prepend ignore labels
+        tv = x.shape[1] - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.zeros((labels.shape[0], tv), labels.dtype), labels], axis=1)
+    loss, metrics = losses.chunked_cross_entropy(
+        x, table, labels, chunk=cfg.logits_chunk, mask=mask,
+        unroll=cfg.scan_unroll)
+    loss = loss + 1e-2 * aux
+    metrics["aux"] = aux
+    return loss, metrics
+
+
+def make_caches(cfg, batch: int, s_max: int, dtype=jnp.bfloat16,
+                quantized_kv: bool = False):
+    """Decode caches matching the layer-stack structure."""
+    hd = cfg.head_dim_
+
+    def kv():
+        return attn.make_cache(batch, s_max, cfg.n_kv_heads, hd, dtype,
+                               quantized=quantized_kv)
+
+    def stack(n, make_one):
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[make_one() for _ in range(n)])
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "encdec"):
+        return stack(cfg.n_layers, kv)
+    if fam == "moe":
+        per_unit = cfg.moe_every
+        unit = lambda: {f"sub{i}": kv() for i in range(per_unit)}
+        return stack(cfg.n_layers // per_unit, unit)
+    if fam == "ssm":
+        return stack(cfg.n_layers,
+                     lambda: ssm_mod.make_ssm_cache(cfg, batch, dtype))
+    if fam == "hybrid":
+        k_unit = cfg.hybrid_attn_every
+        n_units = cfg.n_layers // k_unit
+        tail = cfg.n_layers - n_units * k_unit
+        unit = lambda: {
+            "ssm": stack(k_unit,
+                         lambda: ssm_mod.make_ssm_cache(cfg, batch, dtype)),
+            "attn": kv()}
+        out = {"units": stack(n_units, unit)}
+        if tail:
+            out["tail"] = stack(
+                tail, lambda: ssm_mod.make_ssm_cache(cfg, batch, dtype))
+        return out
+    raise ValueError(fam)
+
+
+def prefill(cfg, params, batch, caches):
+    """Consume the prompt, fill caches, return logits of the last token."""
+    enc_memory = None
+    if cfg.is_encdec:
+        enc_memory = _encode(cfg, params, batch["frames"].astype(
+            cm._dtype(cfg.dtype)))
+    x, positions, _ = _embed_inputs(cfg, params, batch)
+    x, new_caches, _ = _apply_stacks(cfg, params, x, mode="prefill",
+                                     positions=positions, caches=caches,
+                                     enc_memory=enc_memory)
+    x = cm.norm_apply(cfg.norm, params["final_norm"], x)
+    table = params["embed"]["table"] if cfg.tie_embeddings else \
+        params["unembed"]["table"]
+    logits = cm.unembed_logits({"table": table}, x[:, -1:, :])
+    return new_caches, logits
+
+
+def decode_step(cfg, params, caches, batch):
+    """One token: batch['tokens'] (B, 1). Returns (caches, logits)."""
+    enc_memory = batch.get("enc_memory") if cfg.is_encdec else None
+    tokens = batch["tokens"]
+    x = cm.embed_apply(params["embed"], tokens)
+    pos = batch["position"]                   # (1,) or (B, 3, 1) for mrope
+    if cfg.rope == "none":
+        x = x + _sinusoid(1, x.shape[2], offset=pos.reshape(-1)[0]
+                          ).astype(x.dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+    x, new_caches, _ = _apply_stacks(cfg, params, x, mode="decode",
+                                     positions=pos, caches=caches,
+                                     enc_memory=enc_memory)
+    x = cm.norm_apply(cfg.norm, params["final_norm"], x)
+    table = params["embed"]["table"] if cfg.tie_embeddings else \
+        params["unembed"]["table"]
+    logits = cm.unembed_logits({"table": table}, x)
+    return new_caches, logits

@@ -1,0 +1,104 @@
+"""Mixture-of-Experts layer (GShard-style einsum dispatch).
+
+Top-k routing with a capacity factor; dispatch/combine are one-hot
+einsums so XLA SPMD lowers the expert contraction to all-to-all when
+experts are sharded over the ``model`` axis and tokens over ``data``
+(DESIGN.md Sec. 6 EP). Tokens are processed in fixed groups to bound the
+(S, E, C) dispatch tensor.
+
+Variants: shared expert (llama4-maverick) and parallel dense-residual MLP
+(arctic) are handled in blocks.py; this module is the routed core.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+Array = jax.Array
+
+
+def moe_init(key, cfg, dtype):
+    e = cfg.moe_experts
+    ks = jax.random.split(key, 4)
+    router, a_router = cm.dense_init(ks[0], cfg.d_model, e, "embed",
+                                     "expert", bias=False, dtype=jnp.float32)
+    # expert weights: stacked (E, d, ff) / (E, ff, d)
+    mult = 3 if cfg.act == "swiglu" else 2
+    wi = cm.trunc_normal(ks[1], (e, cfg.d_model, cfg.d_ff), 1.0, dtype)
+    wo = cm.trunc_normal(ks[2], (e, cfg.d_ff, cfg.d_model), 1.0, dtype)
+    p = {"router": router, "wi": wi, "wo": wo}
+    a = {"router": a_router, "wi": ("expert", "embed", "mlp"),
+         "wo": ("expert", "mlp", "embed")}
+    if mult == 3:
+        p["wg"] = cm.trunc_normal(ks[3], (e, cfg.d_model, cfg.d_ff), 1.0,
+                                  dtype)
+        a["wg"] = ("expert", "embed", "mlp")
+    return p, a
+
+
+def moe_apply(cfg, p, x: Array, *, group_size: int = 4096,
+              dropless: bool = False):
+    """x: (B, T, d) -> (B, T, d), plus aux load-balancing loss.
+
+    ``dropless=True`` (decode): capacity = group size, so no token is ever
+    dropped — a single decode token must not be subject to batch-
+    composition-dependent drops.
+    """
+    b, t, d = x.shape
+    e = cfg.moe_experts
+    k = cfg.moe_top_k
+    n_tok = b * t
+    g = max(1, min(group_size, n_tok))
+    while n_tok % g:
+        g //= 2
+    n_groups = n_tok // g
+    if dropless:
+        cap = g
+    else:
+        cap = max(1, int(g * k * cfg.moe_capacity_factor / e))
+
+    xt = x.reshape(n_groups, g, d)
+    logits = jnp.einsum("nsd,de->nse", xt.astype(jnp.float32), p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # iterative top-k with capacity assignment
+    dispatch = jnp.zeros((n_groups, g, e, cap), x.dtype)
+    combine = jnp.zeros((n_groups, g, e, cap), jnp.float32)
+    remaining = probs
+    # position counters per expert accumulate across the k rounds
+    fill = jnp.zeros((n_groups, e), jnp.int32)
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)                     # (n, g)
+        gate = jnp.take_along_axis(remaining, idx[..., None],
+                                   axis=-1)[..., 0]              # (n, g)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)         # (n, g, e)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + fill[:, None, :]  # (n, g, e)
+        fill = fill + jnp.sum(onehot, axis=1)
+        within = pos < cap
+        pos_c = jnp.clip(pos, 0, cap - 1)
+        sel = (onehot > 0) & within                              # (n, g, e)
+        cap_oh = jax.nn.one_hot(pos_c, cap, dtype=jnp.float32)   # (n,g,e,cap)
+        contrib = sel[..., None] * cap_oh
+        dispatch = dispatch + contrib.astype(x.dtype)
+        combine = combine + contrib * gate[..., None, None]
+        remaining = remaining * (1.0 - onehot.astype(remaining.dtype))
+
+    # dispatch tokens -> (E, n, cap, d); all-to-all under EP sharding
+    xe = jnp.einsum("ngd,ngec->encd", xt, dispatch)
+    h = jnp.einsum("encd,edf->encf", xe, p["wi"])
+    if "wg" in p:
+        h = jax.nn.silu(h) * jnp.einsum("encd,edf->encf", xe, p["wg"])
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("encf,efd->encd", h, p["wo"])
+    y = jnp.einsum("encd,ngec->ngd", ye, combine.astype(ye.dtype))
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                 # mean router prob
+    ce = jnp.mean(
+        jax.nn.one_hot(jnp.argmax(probs, -1), e, dtype=jnp.float32),
+        axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b, t, d), aux

@@ -1,0 +1,264 @@
+"""Mamba-1 / Mamba-2 state-space blocks.
+
+Train/prefill uses an associative scan over time (log-depth on TPU);
+decode is the O(1) single-step recurrence on carried state — this is what
+makes the long_500k cells sub-quadratic (DESIGN.md Sec. 5).
+
+Mamba-1 (falcon-mamba): per-channel diagonal A (d_inner, n_state), input-
+dependent B/C/dt (selective scan).
+Mamba-2 (zamba2): multi-head SSD simplification — scalar a_t per head,
+rank-1 (B_t x_t^T) state update, shared across head_dim.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+Array = jax.Array
+
+
+class SSMCache(NamedTuple):
+    conv: Array    # (B, K-1, d_inner) last conv inputs
+    state: Array   # mamba1: (B, d_inner, n) | mamba2: (B, H, dh, n)
+
+
+def ssm_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    p_in, a_in = cm.dense_init(ks[0], d, 2 * di, "embed", "ssm_inner",
+                               bias=False, dtype=dtype)
+    p_out, a_out = cm.dense_init(ks[1], di, d, "ssm_inner", "embed",
+                                 bias=False, dtype=dtype)
+    conv_w = cm.trunc_normal(ks[2], (cfg.ssm_conv, di), 1.0, dtype)
+    p = {"in_proj": p_in, "out_proj": p_out, "conv_w": conv_w,
+         "conv_b": jnp.zeros((di,), dtype)}
+    a = {"in_proj": a_in, "out_proj": a_out,
+         "conv_w": (None, "ssm_inner"), "conv_b": ("ssm_inner",)}
+
+    if cfg.ssm_variant == "mamba1":
+        # A_log: (di, n); x-dependent B, C, dt
+        p["a_log"] = jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)).copy())
+        a["a_log"] = ("ssm_inner", None)
+        p_bc, a_bc = cm.dense_init(ks[3], di, 2 * n + 1, "ssm_inner", None,
+                                   bias=False, dtype=dtype)
+        p["bcdt_proj"], a["bcdt_proj"] = p_bc, a_bc
+        p_dt, a_dt = cm.dense_init(ks[4], 1, di, None, "ssm_inner",
+                                   bias=True, dtype=dtype)
+        p["dt_proj"], a["dt_proj"] = p_dt, a_dt
+        p["d_skip"] = jnp.ones((di,), jnp.float32)
+        a["d_skip"] = ("ssm_inner",)
+    else:  # mamba2
+        h = cfg.ssm_heads
+        p["a_log"] = jnp.zeros((h,), jnp.float32)
+        a["a_log"] = (None,)
+        p_bc, a_bc = cm.dense_init(ks[3], di, 2 * n + h, "ssm_inner", None,
+                                   bias=False, dtype=dtype)
+        p["bcdt_proj"], a["bcdt_proj"] = p_bc, a_bc
+        p["d_skip"] = jnp.ones((h,), jnp.float32)
+        a["d_skip"] = (None,)
+        p["norm_scale"] = jnp.ones((di,), dtype)
+        a["norm_scale"] = ("ssm_inner",)
+    return p, a
+
+
+def _causal_conv(x: Array, w: Array, b: Array,
+                 carry: Optional[Array] = None):
+    """x: (B, T, di); w: (K, di) depthwise causal conv.
+    Returns (y, new_carry) with carry = last K-1 inputs."""
+    k = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    # depthwise: y[t] = sum_j w[j] * xp[t+j]
+    y = sum(xp[:, j:j + x.shape[1], :] * w[j] for j in range(k))
+    new_carry = xp[:, -(k - 1):, :] if k > 1 else carry
+    return y + b, new_carry
+
+
+def _scan_linear(a: Array, b: Array, h0: Optional[Array] = None):
+    """h_t = a_t * h_{t-1} + b_t via associative scan over axis 1 (time).
+
+    a, b: (B, T, ...). Returns h (B, T, ...)."""
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def op(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h
+
+
+def mamba1_core(cfg, p, xz: Array, cache: Optional[SSMCache], mode: str):
+    di = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    x, z = jnp.split(xz, 2, axis=-1)
+    conv_carry = cache.conv if cache is not None else None
+    xc, new_conv = _causal_conv(x, p["conv_w"], p["conv_b"], conv_carry)
+    xc = jax.nn.silu(xc)
+
+    bcdt = cm.dense_apply(p["bcdt_proj"], xc)      # (B,T,2n+1)
+    bmat = bcdt[..., :n].astype(jnp.float32)       # (B,T,n)
+    cmat = bcdt[..., n:2 * n].astype(jnp.float32)
+    dt_in = bcdt[..., 2 * n:]                      # (B,T,1)
+    dt = jax.nn.softplus(cm.dense_apply(p["dt_proj"], dt_in)
+                         .astype(jnp.float32))     # (B,T,di)
+    a = -jnp.exp(p["a_log"])                       # (di,n)
+    xf = xc.astype(jnp.float32)
+
+    # discretization: abar = exp(dt A), bbar x = dt * B * x
+    abar = jnp.exp(dt[..., None] * a)                       # (B,T,di,n)
+    bx = dt[..., None] * bmat[..., None, :] * xf[..., None]  # (B,T,di,n)
+
+    if mode == "decode":
+        h = abar[:, 0] * cache.state + bx[:, 0]             # (B,di,n)
+        y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None]
+        new_state = h
+    else:
+        h0 = cache.state if cache is not None else None
+        h = _scan_linear(abar, bx, h0)                      # (B,T,di,n)
+        y = jnp.einsum("btdn,btn->btd", h, cmat)
+        new_state = h[:, -1]
+
+    y = y + p["d_skip"] * xf
+    y = y.astype(xz.dtype) * jax.nn.silu(z)
+    return y, SSMCache(conv=new_conv, state=new_state)
+
+
+def _ssd_chunked(abar, dtx, bmat, cmat, h0, chunk: int, unroll: bool):
+    """Mamba-2 SSD in matmul form (beyond-paper memory optimization).
+
+    Instead of materializing the (B, T, H, dh, n) state sequence, split T
+    into chunks of Q and compute per chunk
+
+        y_t = decay(t) * C_t . H_in                (inter-chunk, carried)
+            + sum_{s<=t} M_ts (B_s . C_t) dtx_s    (intra-chunk, matmul)
+
+    with M_ts the causal decay mask — the (Q, Q, H) score tensor replaces
+    the (Q, H, dh, n) state tensor: ~dh*n/Q times fewer bytes.
+
+    abar: (B,T,H) decay; dtx: (B,T,H,dh); bmat/cmat: (B,T,n).
+    Returns (y (B,T,H,dh), h_final (B,H,dh,n)).
+    """
+    b, t, h = abar.shape
+    dh = dtx.shape[-1]
+    n = bmat.shape[-1]
+    q = min(chunk, t)
+    while t % q:
+        q //= 2
+    nc = t // q
+
+    la = jnp.log(jnp.maximum(abar, 1e-30)).reshape(b, nc, q, h)
+    dtxc = dtx.reshape(b, nc, q, h, dh)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+    cum = jnp.cumsum(la, axis=2)                       # (B,nc,Q,H)
+
+    def body(hin, xs):
+        la_c, cum_c, dtx_c, b_c, c_c = xs              # per-chunk slices
+        # inter-chunk: y_t += decay(0..t) * C_t @ h_in
+        decay_in = jnp.exp(cum_c)                      # (B,Q,H)
+        y_inter = jnp.einsum("bqn,bhdn->bqhd", c_c, hin) \
+            * decay_in[..., None]
+        # intra-chunk: scores (B,H,Q,Q) with causal decay mask
+        scores = jnp.einsum("bqn,bsn->bqs", c_c, b_c)  # (B,Q,Q)
+        m = cum_c[:, :, None, :] - cum_c[:, None, :, :]  # (B,Q,S,H)
+        causal = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])
+        mask = jnp.where(causal[None, :, :, None], jnp.exp(m), 0.0)
+        y_intra = jnp.einsum("bqs,bqsh,bshd->bqhd", scores, mask, dtx_c)
+        # chunk-final state: h_out = decay(full) h_in + sum decay(s..Q) B_s dtx_s
+        decay_out = jnp.exp(cum_c[:, -1:, :] - cum_c)  # (B,Q,H)
+        hout = hin * jnp.exp(cum_c[:, -1])[:, :, None, None]
+        hout = hout + jnp.einsum("bsh,bshd,bsn->bhdn", decay_out, dtx_c,
+                                 b_c)
+        return hout, y_inter + y_intra
+
+    xs = (jnp.moveaxis(la, 1, 0), jnp.moveaxis(cum, 1, 0),
+          jnp.moveaxis(dtxc, 1, 0), jnp.moveaxis(bc, 1, 0),
+          jnp.moveaxis(cc, 1, 0))
+    h_fin, ys = jax.lax.scan(body, h0, xs,
+                             unroll=nc if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, dh)
+    return y, h_fin
+
+
+def mamba2_core(cfg, p, xz: Array, cache: Optional[SSMCache], mode: str):
+    di = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    nh = cfg.ssm_heads
+    dh = di // nh
+    x, z = jnp.split(xz, 2, axis=-1)
+    conv_carry = cache.conv if cache is not None else None
+    xc, new_conv = _causal_conv(x, p["conv_w"], p["conv_b"], conv_carry)
+    xc = jax.nn.silu(xc)
+
+    bcdt = cm.dense_apply(p["bcdt_proj"], xc)
+    bmat = bcdt[..., :n].astype(jnp.float32)             # (B,T,n)
+    cmat = bcdt[..., n:2 * n].astype(jnp.float32)        # (B,T,n)
+    dt = jax.nn.softplus(bcdt[..., 2 * n:].astype(jnp.float32))  # (B,T,H)
+    a = -jnp.exp(p["a_log"])                             # (H,)
+    xh = xc.astype(jnp.float32).reshape(*xc.shape[:2], nh, dh)  # (B,T,H,dh)
+
+    abar = jnp.exp(dt * a)                               # (B,T,H)
+
+    if mode == "decode":
+        bx = dt[:, 0, :, None, None] * xh[:, 0, :, :, None] \
+            * bmat[:, 0, None, None, :]                  # (B,H,dh,n)
+        h = abar[:, 0, :, None, None] * cache.state + bx
+        y = jnp.einsum("bhdn,bn->bhd", h, cmat[:, 0])[:, None]
+        y = y.reshape(y.shape[0], 1, di)
+        new_state = h
+    elif cfg.ssm_impl == "chunked":
+        h0 = cache.state if cache is not None else \
+            jnp.zeros((xz.shape[0], nh, dh, n), jnp.float32)
+        dtx = dt[..., None] * xh                         # (B,T,H,dh)
+        y, new_state = _ssd_chunked(abar, dtx, bmat, cmat, h0,
+                                    chunk=cfg.ssm_chunk,
+                                    unroll=cfg.scan_unroll)
+        y = y.reshape(*y.shape[:2], di)
+    else:
+        # reference: full associative scan over materialized states
+        bx = dt[..., None, None] * xh[..., None] \
+            * bmat[..., None, None, :]                   # (B,T,H,dh,n)
+        h0 = cache.state if cache is not None else None
+        h = _scan_linear(abar[..., None, None], bx, h0)  # (B,T,H,dh,n)
+        y = jnp.einsum("bthdn,btn->bthd", h, cmat)
+        y = y.reshape(*y.shape[:2], di)
+        new_state = h[:, -1]
+
+    y = y + (p["d_skip"][:, None] * xh).reshape(*xc.shape[:2], di)
+    y = cm.norm_apply("rmsnorm", {"scale": p["norm_scale"]},
+                      y.astype(xz.dtype))
+    y = y * jax.nn.silu(z)
+    return y, SSMCache(conv=new_conv, state=new_state)
+
+
+def ssm_apply(cfg, p, x: Array, *, mode: str,
+              cache: Optional[SSMCache] = None):
+    """x: (B, T, d) -> (B, T, d). Returns (y, new_cache)."""
+    xz = cm.dense_apply(p["in_proj"], x)
+    core = mamba1_core if cfg.ssm_variant == "mamba1" else mamba2_core
+    y, new_cache = core(cfg, p, xz, cache, mode)
+    return cm.dense_apply(p["out_proj"], y), new_cache
+
+
+def make_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    di = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype)
+    if cfg.ssm_variant == "mamba1":
+        state = jnp.zeros((batch, di, n), jnp.float32)
+    else:
+        nh = cfg.ssm_heads
+        state = jnp.zeros((batch, nh, di // nh, n), jnp.float32)
+    return SSMCache(conv=conv, state=state)

@@ -1,0 +1,3 @@
+from .adamw import AdamW, AdamWState, warmup_cosine  # noqa: F401
+from .compression import (compress_tree_psum, compressed_psum,  # noqa
+                          init_residuals, quantize_int8)

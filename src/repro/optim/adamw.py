@@ -1,0 +1,79 @@
+"""AdamW with decoupled weight decay, global-norm clipping, bf16-safe.
+
+Moments are kept in float32 regardless of param dtype (mixed precision:
+bf16 params + f32 optimizer state). State shardings mirror the params'
+(ZeRO: whatever FSDP sharding the plan assigns to a param applies to its
+moments too).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Any
+    v: Any
+
+
+class AdamW(NamedTuple):
+    lr: Any                      # callable step -> lr, or float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(count=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm:
+            gnorm = jnp.sqrt(sum(jnp.sum(g * g)
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.clip_norm
+                                / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gnorm = jnp.zeros(())
+        count = state.count + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        m = jax.tree.map(lambda mm, g: self.b1 * mm + (1 - self.b1) * g,
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: self.b2 * vv + (1 - self.b2) * g * g,
+                         state.v, grads)
+
+        def upd(p, mm, vv):
+            mhat = mm / b1c
+            vhat = vv / b2c
+            step = mhat / (jnp.sqrt(vhat) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(count=count, m=m, v=v), \
+            {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    """Linear warmup then cosine decay to floor*peak."""
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr \
+            * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

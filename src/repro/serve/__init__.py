@@ -1,0 +1,2 @@
+from .engine import Engine, Request  # noqa: F401
+from .kv_select import select_diverse_blocks  # noqa: F401

@@ -1,0 +1,74 @@
+"""Batched serving engine: prefill + decode with KV caches.
+
+A deliberately small but real engine: request queue, padded batching,
+greedy/temperature sampling, per-request stop handling, int8 KV option.
+The heavy lifting (sharded steps) comes from launch.steps; on CPU tests
+this runs the same code unsharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (T,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: Optional[np.ndarray] = None
+
+
+class Engine:
+    def __init__(self, cfg, params, *, max_batch: int = 8,
+                 max_seq: int = 256, kv_dtype=jnp.float32,
+                 quantized_kv: bool = False, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.kv_dtype = kv_dtype
+        self.quantized_kv = quantized_kv
+        self.key = jax.random.key(seed)
+        self._prefill = jax.jit(
+            lambda p, b, c: M.prefill(cfg, p, b, c))
+        self._decode = jax.jit(
+            lambda p, c, b: M.decode_step(cfg, p, c, b))
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits[:, -1, :], axis=-1)
+        self.key, k = jax.random.split(self.key)
+        return jax.random.categorical(k, logits[:, -1, :] / temperature)
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve a batch of requests (padded to a common prompt length)."""
+        assert len(requests) <= self.max_batch
+        b = len(requests)
+        t = max(len(r.prompt) for r in requests)
+        prompts = np.zeros((b, t), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, t - len(r.prompt):] = r.prompt  # left-pad
+        caches = M.make_caches(self.cfg, b, self.max_seq, self.kv_dtype,
+                               quantized_kv=self.quantized_kv)
+        batch = {"tokens": jnp.asarray(prompts)}
+        caches, logits = self._prefill(self.params, batch, caches)
+        max_new = max(r.max_new_tokens for r in requests)
+        outs = np.zeros((b, max_new), np.int32)
+        tok = self._sample(logits, requests[0].temperature)
+        outs[:, 0] = np.asarray(tok)
+        for step in range(1, max_new):
+            dec = {"tokens": jnp.asarray(tok)[:, None],
+                   "position": jnp.asarray([t + step - 1], jnp.int32)}
+            caches, logits = self._decode(self.params, caches, dec)
+            tok = self._sample(logits, requests[0].temperature)
+            outs[:, step] = np.asarray(tok)
+        for i, r in enumerate(requests):
+            r.out_tokens = outs[i, :r.max_new_tokens]
+        return requests

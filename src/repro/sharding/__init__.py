@@ -1,0 +1,2 @@
+from .api import (Plan, activation_context, constrain,  # noqa: F401
+                  param_shardings, spec_for_param, tp_plan)

@@ -1,0 +1,153 @@
+"""Logical-axis sharding: rules, context, and constraint helpers.
+
+``Plan`` maps logical axis names (used by model init/apply code) to mesh
+axes of the production mesh (pod, data, model). Model code calls
+``constrain(x, ("batch", "seq", "embed"))`` — a no-op unless a plan+mesh
+context is active, so the same model runs unsharded on CPU tests and
+fully sharded under the dry-run/launcher.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+    rules: dict
+    fsdp: bool = False            # additionally shard big dense dims on data
+    fsdp_axis: str = "data"
+    fsdp_min_size: int = 1024     # don't FSDP-shard tiny params
+
+    def mesh_axes(self, logical: Optional[str]):
+        return self.rules.get(logical) if logical else None
+
+
+def tp_plan(*, data_axes=("pod", "data"), model_axis="model",
+            fsdp: bool = False, seq_shard: bool = False,
+            embed_shard: bool = False, tp_full: bool = False) -> Plan:
+    """The production plan: TP over `model`, DP over (pod, data),
+    optional FSDP (zero-3) and sequence sharding.
+
+    ``embed_shard`` (2-D TP experiment): activations' embed dim sharded
+    over the data axis to match the FSDP weight layout (measured and
+    REFUTED for batched decode — kept for the record, EXPERIMENTS §Perf).
+
+    ``tp_full`` (serving): weights tensor-parallel over ALL mesh axes
+    (fused head/mlp/vocab dims divide 256/512 cleanly for the assigned
+    archs). Params are fully sharded with NO ZeRO gathers; matmuls psum
+    small activations instead — the winning decode layout.
+    """
+    wide = tuple(data_axes) + (model_axis,)
+    w_axis = wide if tp_full else model_axis
+    rules = {
+        "batch": None if (embed_shard or tp_full) else data_axes,
+        "cache_batch": None if tp_full else data_axes,
+        "seq": model_axis if seq_shard else None,
+        "kv_seq": wide if tp_full else model_axis,   # KV cache seq dim
+        "embed": "data" if embed_shard else None,
+        "heads": w_axis,
+        "kv_heads": w_axis,
+        "mlp": w_axis,
+        "vocab": w_axis,
+        "expert": w_axis,
+        "ssm_inner": w_axis,
+        "layers": None,
+    }
+    return Plan(rules=rules, fsdp=fsdp and not tp_full)
+
+
+def spec_for_param(plan: Plan, axes: tuple, shape: tuple) -> P:
+    """PartitionSpec for one parameter from its logical axes tuple.
+
+    A mesh axis may appear at most once per spec: when two logical dims
+    map to the same mesh axis (e.g. MoE 'expert' and 'mlp' both -> model)
+    the FIRST (leftmost) keeps it and later ones are replicated.
+
+    FSDP: additionally shard the largest still-unsharded dim over the
+    fsdp axis when the parameter is large enough (ZeRO-3 style).
+    """
+    entries = [plan.mesh_axes(a) for a in axes]
+    used: set = set()
+    for i, e in enumerate(entries):
+        names = e if isinstance(e, (tuple, list)) else (e,) if e else ()
+        if any(n in used for n in names):
+            entries[i] = None
+        else:
+            used.update(names)
+    if plan.fsdp and plan.fsdp_axis not in used:
+        size = 1
+        for s in shape:
+            size *= s
+        if size >= plan.fsdp_min_size:
+            cand = [i for i, e in enumerate(entries) if e is None]
+            if cand:
+                big = max(cand, key=lambda i: shape[i])
+                entries[big] = plan.fsdp_axis
+    return P(*entries)
+
+
+def param_shardings(plan: Plan, mesh: Mesh, params: Any, axes: Any):
+    """NamedSharding tree for a (params, axes) pair, with divisibility
+    fallback: a dim that doesn't divide by its mesh axes is replicated."""
+    def one(p, ax):
+        spec = spec_for_param(plan, ax, p.shape)
+        spec = _fix_divisibility(spec, p.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, params, axes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+def _fix_divisibility(spec: P, shape: tuple, mesh: Mesh) -> P:
+    fixed = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            fixed.append(None)
+        else:
+            fixed.append(entry)
+    return P(*fixed)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints via context
+
+
+@contextlib.contextmanager
+def activation_context(mesh: Mesh, plan: Plan):
+    prev = getattr(_ctx, "val", None)
+    _ctx.val = (mesh, plan)
+    try:
+        yield
+    finally:
+        _ctx.val = prev
+
+
+def constrain(x: jax.Array, logical_axes: tuple) -> jax.Array:
+    ctx = getattr(_ctx, "val", None)
+    if ctx is None:
+        return x
+    mesh, plan = ctx
+    entries = [plan.mesh_axes(a) for a in logical_axes]
+    spec = _fix_divisibility(P(*entries), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,3 @@
+from .loop import LoopConfig, LoopResult, train  # noqa: F401
+from .monitor import (condition_number_bounds, fisher_proxy_bounds,  # noqa
+                      gradient_sketch, make_monitor)

@@ -1,0 +1,100 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+``collective_bytes`` parses a compiled (SPMD-partitioned, per-device) HLO
+module and sums the wire bytes of every collective op, with ring-cost
+multipliers:
+
+    all-reduce          2x buffer   (reduce-scatter + all-gather phases)
+    all-gather          1x larger buffer
+    reduce-scatter      1x larger buffer
+    all-to-all          1x buffer
+    collective-permute  1x buffer
+
+Shapes in partitioned HLO are already per-device, so the returned number
+is bytes-per-device on the wire — the collective roofline numerator.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_kind: wire_bytes} plus 'total' and 'count'."""
+    out: dict = defaultdict(float)
+    count = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        kind = None
+        for c in _COLLECTIVES:
+            # match op name with optional `-start`/`-done` suffix
+            if re.search(rf"\b{c}(-start)?\(", rhs):
+                kind = c
+                break
+        if kind is None:
+            continue
+        if re.search(rf"\b{kind}-done\(", rhs):
+            continue  # avoid double counting async pairs
+        shapes = _SHAPE_RE.findall(s)
+        if not shapes:
+            continue
+        biggest = max(_shape_bytes(d, dims) for d, dims in shapes)
+        out[kind] += _MULT[kind] * biggest
+        count += 1
+    out["total"] = sum(v for k, v in out.items() if k in _COLLECTIVES)
+    out["count"] = count
+    return dict(out)
+
+
+def op_flops_table(hlo_text: str) -> dict:
+    """Rough per-op-kind dot FLOP census (fallback when cost_analysis is
+    unavailable): sums 2*M*N*K over dot/convolution ops."""
+    flops = 0.0
+    dot_re = re.compile(
+        r"= ([a-z0-9]+)\[([0-9,]*)\][^=]*\b(dot|convolution)\(")
+    for line in hlo_text.splitlines():
+        m = dot_re.search(line)
+        if not m:
+            continue
+        # output shape elements * 2 * contraction size: contraction size
+        # is not in the output; approximate from operand shapes
+        shapes = _SHAPE_RE.findall(line)
+        if len(shapes) < 3:
+            continue
+        out_elems = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                out_elems *= int(d)
+        lhs_elems = 1
+        if shapes[1][1]:
+            for d in shapes[1][1].split(","):
+                lhs_elems *= int(d)
+        out_nonbatch = max(out_elems, 1)
+        k = max(lhs_elems // max(out_nonbatch, 1), 1)
+        flops += 2.0 * out_elems * k
+    return {"dot_flops_estimate": flops}

@@ -1,0 +1,48 @@
+import os
+import sys
+from pathlib import Path
+
+# Tests must see ONE device (the dry-run alone forces 512); make sure a
+# stray XLA_FLAGS doesn't leak in.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)  # CPU oracles run in f64;
+# TPU-target code paths pass explicit f32/bf16 dtypes throughout.
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from hypothesis import settings  # noqa: E402
+
+settings.register_profile("fast", max_examples=15, deadline=None)
+settings.load_profile("fast")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_spd(n: int, kappa: float = 100.0, seed: int = 0,
+             density: float = 1.0) -> np.ndarray:
+    """Random SPD matrix with controlled condition number."""
+    rng = np.random.default_rng(seed)
+    if density < 1.0:
+        m = rng.standard_normal((n, n)) * (rng.random((n, n)) < density)
+        a = (m + m.T) / 2
+        w = np.linalg.eigvalsh(a)
+        # shift to make lambda_min = lambda_max_target / kappa
+        span = w[-1] - w[0]
+        lam_min = max(span, 1e-3) / (kappa - 1)
+        return a + np.eye(n) * (lam_min - w[0])
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    evals = np.geomspace(1.0 / kappa, 1.0, n)
+    return (q * evals) @ q.T
+
+
+@pytest.fixture
+def spd_factory():
+    return make_spd

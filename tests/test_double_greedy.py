@@ -1,0 +1,58 @@
+"""Retrospective double greedy (Alg. 8/9) vs exact baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Dense, run_double_greedy
+from repro.data import random_sparse_spd
+
+
+@pytest.fixture(scope="module")
+def setup():
+    n = 40
+    a = random_sparse_spd(n, density=0.2, lam_min=5e-2, seed=9)
+    # normalize diagonal ~1 so log-det gains are O(1) both signs
+    d = np.sqrt(np.diag(a))
+    a = a / np.outer(d, d) + 0.05 * np.eye(n)
+    w = np.linalg.eigvalsh(a)
+    return a, float(w[0] * 0.9), float(w[-1] * 1.1), n
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_matches_exact(setup, seed):
+    a, lmn, lmx, n = setup
+    op = Dense(jnp.asarray(a))
+    key = jax.random.key(seed)
+    rq = run_double_greedy(op, key, lmn, lmx, max_iters=n + 2)
+    re = run_double_greedy(op, key, lmn, lmx, max_iters=n + 2, exact=True)
+    assert bool(jnp.all(rq.selected == re.selected))
+    assert int(rq.uncertified) == 0
+
+
+def test_value_reasonable(setup):
+    """Selected set should beat random subsets of the same size."""
+    a, lmn, lmx, n = setup
+    op = Dense(jnp.asarray(a))
+    res = run_double_greedy(op, jax.random.key(0), lmn, lmx,
+                            max_iters=n + 2)
+    k = int(res.selected.sum())
+    ld_sel = float(res.log_det)
+    rng = np.random.default_rng(0)
+
+    def logdet_subset(idx):
+        sub = a[np.ix_(idx, idx)]
+        return float(np.linalg.slogdet(sub)[1])
+
+    rand_vals = [logdet_subset(rng.choice(n, k, replace=False))
+                 for _ in range(30)]
+    assert ld_sel >= np.mean(rand_vals)
+
+
+def test_quadrature_work_sublinear(setup):
+    a, lmn, lmx, n = setup
+    op = Dense(jnp.asarray(a))
+    res = run_double_greedy(op, jax.random.key(1), lmn, lmx,
+                            max_iters=n + 2)
+    avg = int(res.quad_iterations) / n
+    assert avg < n / 2, f"avg iters/element {avg} not << n={n}"

@@ -1,0 +1,85 @@
+"""Retrospective (k-)DPP chains: decision-exactness vs the dense-solve
+baseline (the paper's central correctness property) + efficiency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Dense, sample_dpp, sample_kdpp
+from repro.data import random_sparse_spd
+from conftest import make_spd
+
+
+@pytest.fixture(scope="module")
+def setup():
+    n = 48
+    a = random_sparse_spd(n, density=0.15, lam_min=5e-2, seed=4)
+    w = np.linalg.eigvalsh(a)
+    return a, float(w[0] * 0.9), float(w[-1] * 1.1), n
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dpp_chain_matches_exact(setup, seed):
+    a, lmn, lmx, n = setup
+    op = Dense(jnp.asarray(a))
+    init = jnp.asarray((np.random.default_rng(seed).random(n) < 0.3)
+                       .astype(np.float64))
+    key = jax.random.key(seed)
+    st_q = sample_dpp(op, key, init, 150, lmn, lmx, max_iters=n + 2)
+    st_e = sample_dpp(op, key, init, 150, lmn, lmx, max_iters=n + 2,
+                      exact=True)
+    assert bool(jnp.all(st_q.mask == st_e.mask))
+    assert int(st_q.stats.accepts) == int(st_e.stats.accepts)
+    assert int(st_q.stats.uncertified) == 0
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_kdpp_chain_matches_exact_and_preserves_k(setup, seed):
+    a, lmn, lmx, n = setup
+    op = Dense(jnp.asarray(a))
+    k = 12
+    init = np.zeros(n)
+    init[np.random.default_rng(seed).choice(n, k, replace=False)] = 1.0
+    key = jax.random.key(100 + seed)
+    st_q = sample_kdpp(op, key, jnp.asarray(init), 120, lmn, lmx,
+                       max_iters=n + 2)
+    st_e = sample_kdpp(op, key, jnp.asarray(init), 120, lmn, lmx,
+                       max_iters=n + 2, exact=True)
+    assert bool(jnp.all(st_q.mask == st_e.mask))
+    assert int(st_q.mask.sum()) == k
+    assert int(st_q.stats.uncertified) == 0
+
+
+def test_quadrature_work_sublinear(setup):
+    """Average GQL iterations per decision must be << N (the speedup)."""
+    a, lmn, lmx, n = setup
+    op = Dense(jnp.asarray(a))
+    init = jnp.asarray((np.random.default_rng(0).random(n) < 0.3)
+                       .astype(np.float64))
+    st = sample_dpp(op, jax.random.key(0), init, 200, lmn, lmx,
+                    max_iters=n + 2)
+    avg = int(st.stats.quad_iterations) / 200
+    assert avg < n / 3, f"avg quadrature iters {avg} not << {n}"
+
+
+def test_dpp_prefers_diverse_sets():
+    """On a kernel with two near-duplicate items, the stationary chain
+    should rarely hold both (sanity of the sampler's target)."""
+    n = 12
+    a = make_spd(n, kappa=20.0, seed=2)
+    d = np.sqrt(np.diag(a))
+    a = a / np.outer(d, d)
+    a[0, 1] = a[1, 0] = 0.98        # items 0,1 nearly identical
+    a = a + 0.05 * np.eye(n)
+    w = np.linalg.eigvalsh(a)
+    op = Dense(jnp.asarray(a))
+    both = 0
+    trials = 60
+    for s in range(trials):
+        st = sample_dpp(op, jax.random.key(s),
+                        jnp.zeros(n, jnp.float64) + (jnp.arange(n) < 4),
+                        120, float(w[0] * 0.9), float(w[-1] * 1.1),
+                        max_iters=n + 2)
+        m = np.asarray(st.mask)
+        both += bool(m[0] > 0.5 and m[1] > 0.5)
+    assert both / trials < 0.2

@@ -1,0 +1,146 @@
+"""Property tests of the paper's theorems (Sec. 4) on the GQL core.
+
+Each test maps to a claim: Thm. 2 (bracketing), Thm. 4 / 6 (Radau
+dominance orderings), Cor. 7 (monotonicity), Thm. 3/5 (linear rate),
+Lemma 15 (exactness at i=N), and the Fig. 1(b,c) sensitivity behavior.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Dense, bif_bounds, bif_bounds_trace
+from conftest import make_spd
+
+ATOL = 1e-7
+
+
+def _setup(n, kappa, seed, density=1.0):
+    a = make_spd(n, kappa=kappa, seed=seed, density=density)
+    w = np.linalg.eigvalsh(a)
+    rng = np.random.default_rng(seed + 1)
+    u = rng.standard_normal(n)
+    true = u @ np.linalg.solve(a, u)
+    op = Dense(jnp.asarray(a, jnp.float64))
+    return op, jnp.asarray(u, jnp.float64), w, true
+
+
+@given(n=st.integers(10, 60), kappa=st.floats(5.0, 5e3),
+       seed=st.integers(0, 100))
+def test_bracketing_thm2(n, kappa, seed):
+    op, u, w, true = _setup(n, kappa, seed)
+    tr = bif_bounds_trace(op, u, w[0] * 0.99, w[-1] * 1.01, num_iters=n)
+    g, grr, glr, glo = [np.asarray(x) for x in tr]
+    scale = abs(true) + 1.0
+    assert (g <= true + ATOL * scale).all()
+    assert (grr <= true + ATOL * scale).all()
+    assert (glr >= true - ATOL * scale).all()
+    assert (glo >= true - ATOL * scale).all()
+
+
+@given(n=st.integers(10, 50), kappa=st.floats(5.0, 1e3),
+       seed=st.integers(0, 100))
+def test_monotone_cor7(n, kappa, seed):
+    op, u, w, true = _setup(n, kappa, seed)
+    tr = bif_bounds_trace(op, u, w[0] * 0.99, w[-1] * 1.01, num_iters=n)
+    g, grr, glr, glo = [np.asarray(x) for x in tr]
+    tol = (abs(true) + 1.0) * 1e-7
+    assert (np.diff(g) >= -tol).all()
+    assert (np.diff(grr) >= -tol).all()
+    assert (np.diff(glr) <= tol).all()
+    assert (np.diff(glo) <= tol).all()
+
+
+@given(n=st.integers(10, 50), kappa=st.floats(5.0, 1e3),
+       seed=st.integers(0, 100))
+def test_radau_dominance_thm4_thm6(n, kappa, seed):
+    op, u, w, true = _setup(n, kappa, seed)
+    tr = bif_bounds_trace(op, u, w[0] * 0.99, w[-1] * 1.01, num_iters=n)
+    g, grr, glr, glo = [np.asarray(x) for x in tr]
+    tol = (abs(true) + 1.0) * 1e-7
+    # Thm 4: g_i <= g_i^rr <= g_{i+1}
+    assert (grr[:-1] >= g[:-1] - tol).all()
+    assert (grr[:-1] <= g[1:] + tol).all()
+    # Thm 6: g_{i+1}^lo <= g_i^lr <= g_i^lo
+    assert (glr[:-1] <= glo[:-1] + tol).all()
+    assert (glr[:-1] >= glo[1:] - tol).all()
+
+
+@pytest.mark.parametrize("kappa", [10.0, 100.0, 1000.0])
+def test_linear_rate_thm3_thm5(kappa):
+    n = 80
+    op, u, w, true = _setup(n, kappa, seed=7)
+    tr = bif_bounds_trace(op, u, w[0] * 0.999, w[-1] * 1.001, num_iters=n)
+    g, grr, glr, _ = [np.asarray(x) for x in tr]
+    gN = true
+    rho = (np.sqrt(kappa) - 1) / (np.sqrt(kappa) + 1)
+    kplus = w[-1] / (w[0] * 0.999)
+    for i in range(0, n, 5):
+        bound = 2 * rho ** (i + 1)
+        assert (gN - g[i]) / gN <= bound + 1e-9, (i, kappa)
+        assert (gN - grr[i]) / gN <= bound + 1e-9       # Thm 5
+        assert (glr[i] - gN) / gN <= 2 * kplus * rho ** (i + 1) + 1e-9
+
+
+def test_exactness_lemma15():
+    n = 40
+    op, u, w, true = _setup(n, 50.0, seed=3)
+    tr = bif_bounds_trace(op, u, w[0] * 0.99, w[-1] * 1.01,
+                          num_iters=n + 5)
+    g, grr, glr, glo = [np.asarray(x) for x in tr]
+    for seq in (g, grr, glr, glo):
+        assert abs(seq[-1] - true) / abs(true) < 1e-8
+
+
+def test_sensitivity_fig1bc():
+    """Conservative spectral intervals still bracket (Fig. 1 b,c)."""
+    n = 60
+    op, u, w, true = _setup(n, 200.0, seed=11)
+    for lmn, lmx in [(w[0] * 0.1, w[-1] * 1.01),
+                     (w[0] * 0.99, w[-1] * 10.0),
+                     (w[0] * 0.1, w[-1] * 10.0)]:
+        tr = bif_bounds_trace(op, u, lmn, lmx, num_iters=n)
+        g, grr, glr, glo = [np.asarray(x) for x in tr]
+        s = abs(true) + 1.0
+        assert (grr <= true + 1e-7 * s).all()
+        assert (glr >= true - 1e-7 * s).all()
+        # Gauss ignores the interval entirely: same values regardless
+        tr2 = bif_bounds_trace(op, u, w[0] * 0.99, w[-1] * 1.01,
+                               num_iters=n)
+        np.testing.assert_allclose(np.asarray(tr2.gauss), g, rtol=1e-10)
+
+
+def test_adaptive_bounds_batched():
+    n = 50
+    a = make_spd(n, kappa=300.0, seed=5)
+    w = np.linalg.eigvalsh(a)
+    rng = np.random.default_rng(6)
+    u = rng.standard_normal((8, n))
+    true = np.einsum("bi,bi->b", u, np.linalg.solve(a, u.T).T)
+    op = Dense(jnp.broadcast_to(jnp.asarray(a), (8, n, n)))
+    res = bif_bounds(op, jnp.asarray(u), w[0] * 0.99, w[-1] * 1.01,
+                     max_iters=n + 2, rtol=1e-3)
+    lo, hi = np.asarray(res.lower), np.asarray(res.upper)
+    assert (lo <= true + 1e-7).all() and (hi >= true - 1e-7).all()
+    assert ((hi - lo) <= 1e-3 * np.abs(lo) + 1e-9).all()
+    assert np.asarray(res.converged).all()
+    assert (np.asarray(res.iterations) < n).all()   # early exit happened
+
+
+def test_reorthogonalization_float32():
+    """Sec. 5.4: full reorth keeps f32 bounds sane on ill-conditioned A."""
+    n = 80
+    a = make_spd(n, kappa=1e4, seed=9)
+    w = np.linalg.eigvalsh(a)
+    u = np.random.default_rng(2).standard_normal(n)
+    true = u @ np.linalg.solve(a, u)
+    op = Dense(jnp.asarray(a, jnp.float32))
+    tr = bif_bounds_trace(op, jnp.asarray(u, jnp.float32),
+                          float(w[0] * 0.99), float(w[-1] * 1.01),
+                          num_iters=60, reorth=True)
+    grr = np.asarray(tr.radau_lower)
+    glr = np.asarray(tr.radau_upper)
+    # f32 + reorth: bounds should still (loosely) bracket
+    assert grr[-1] <= true * 1.05
+    assert glr[-1] >= true * 0.95

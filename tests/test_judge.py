@@ -1,0 +1,108 @@
+"""The retrospective judges must reproduce exact-arithmetic decisions
+(the paper's correctness claim for Alg. 2/4/7/9) while spending far
+fewer iterations than full tridiagonalization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import Dense, Masked, judge_double_greedy, \
+    judge_kdpp_swap, judge_threshold
+from conftest import make_spd
+
+
+def _exact_bif(a, u):
+    return u @ np.linalg.solve(a, u)
+
+
+@given(seed=st.integers(0, 200))
+def test_threshold_judge_matches_exact(seed):
+    n = 40
+    a = make_spd(n, kappa=200.0, seed=seed)
+    w = np.linalg.eigvalsh(a)
+    rng = np.random.default_rng(seed)
+    u = rng.standard_normal(n)
+    true = _exact_bif(a, u)
+    # thresholds straddling the true value at many scales
+    ts = true + np.array([-1.0, -1e-3, 1e-3, 1.0]) * max(abs(true), 1.0)
+    res = judge_threshold(
+        Dense(jnp.broadcast_to(jnp.asarray(a), (4, n, n))),
+        jnp.broadcast_to(jnp.asarray(u), (4, n)), jnp.asarray(ts),
+        w[0] * 0.99, w[-1] * 1.01, max_iters=n + 2)
+    np.testing.assert_array_equal(np.asarray(res.decision), ts < true)
+    assert np.asarray(res.certified).all()
+
+
+def test_judge_early_exit_iterations():
+    """Far thresholds should resolve in O(1) iterations (the speedup)."""
+    n = 120
+    a = make_spd(n, kappa=100.0, seed=1)
+    w = np.linalg.eigvalsh(a)
+    u = np.random.default_rng(1).standard_normal(n)
+    true = _exact_bif(a, u)
+    res_far = judge_threshold(Dense(jnp.asarray(a)), jnp.asarray(u),
+                              jnp.asarray(true * 10), w[0] * 0.99,
+                              w[-1] * 1.01, max_iters=n + 2)
+    res_near = judge_threshold(Dense(jnp.asarray(a)), jnp.asarray(u),
+                               jnp.asarray(true * 0.999), w[0] * 0.99,
+                               w[-1] * 1.01, max_iters=n + 2)
+    assert int(res_far.iterations) <= 10
+    assert int(res_far.iterations) < int(res_near.iterations)
+    assert not bool(res_far.decision)
+    assert bool(res_near.decision)
+
+
+@given(seed=st.integers(0, 100))
+def test_kdpp_judge_matches_exact(seed):
+    n = 30
+    a = make_spd(n, kappa=100.0, seed=seed)
+    w = np.linalg.eigvalsh(a)
+    rng = np.random.default_rng(seed + 7)
+    mask = (rng.random(n) < 0.5).astype(np.float64)
+    mask[:2] = [1.0, 0.0]
+    u = rng.standard_normal(n) * mask
+    v = rng.standard_normal(n) * mask
+    p = float(rng.uniform(0.05, 0.95))
+    a_sub = a * np.outer(mask, mask) + np.diag(1.0 - mask)
+    bif_u, bif_v = _exact_bif(a_sub, u), _exact_bif(a_sub, v)
+    t = float(p * bif_v - bif_u)
+    for off in (-0.5, 0.5):
+        op = Masked(Dense(jnp.asarray(a)), jnp.asarray(mask))
+        res = judge_kdpp_swap(op, jnp.asarray(u), op, jnp.asarray(v),
+                              jnp.asarray(t + off), jnp.asarray(p),
+                              w[0] * 0.99, w[-1] * 1.01, max_iters=n + 2)
+        assert bool(res.decision) == (t + off < p * bif_v - bif_u)
+
+
+@given(seed=st.integers(0, 100))
+def test_dg_judge_matches_exact(seed):
+    n = 24
+    a = make_spd(n, kappa=50.0, seed=seed)
+    # normalize so diag schur complements are positive and O(1)
+    d = np.sqrt(np.diag(a))
+    a = a / np.outer(d, d) + 0.05 * np.eye(n)
+    w = np.linalg.eigvalsh(a)
+    rng = np.random.default_rng(seed + 3)
+    x_mask = np.zeros(n)
+    x_mask[rng.choice(n, 5, replace=False)] = 1.0
+    y_mask = np.ones(n)
+    y_mask[rng.choice(n, 3, replace=False)] = 0.0
+    i = int(np.argmax(x_mask == 0))
+    x_mask[i] = 0.0
+    y_mask[i] = 0.0
+    col = a[:, i]
+    u = col * x_mask
+    v = col * y_mask
+    t = a[i, i]
+    p = float(rng.uniform(0.05, 0.95))
+    ax = a * np.outer(x_mask, x_mask) + np.diag(1 - x_mask)
+    ay = a * np.outer(y_mask, y_mask) + np.diag(1 - y_mask)
+    gain_p = np.log(max(t - _exact_bif(ax, u), 1e-300))
+    gain_m = -np.log(max(t - _exact_bif(ay, v), 1e-300))
+    exact_add = p * max(gain_m, 0.0) <= (1 - p) * max(gain_p, 0.0)
+    res = judge_double_greedy(
+        Masked(Dense(jnp.asarray(a)), jnp.asarray(x_mask)), jnp.asarray(u),
+        Masked(Dense(jnp.asarray(a)), jnp.asarray(y_mask)), jnp.asarray(v),
+        jnp.asarray(t), jnp.asarray(p), w[0] * 0.99, w[-1] * 1.01,
+        max_iters=n + 2)
+    assert bool(res.decision) == exact_add

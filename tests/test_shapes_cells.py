@@ -1,0 +1,69 @@
+"""Shape-cell table, applicability rules, and input-spec structure."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.launch import shapes
+
+
+def test_cell_table_exact():
+    assert shapes.SHAPES["train_4k"].seq == 4096
+    assert shapes.SHAPES["train_4k"].batch == 256
+    assert shapes.SHAPES["prefill_32k"].seq == 32768
+    assert shapes.SHAPES["prefill_32k"].batch == 32
+    assert shapes.SHAPES["decode_32k"].seq == 32768
+    assert shapes.SHAPES["decode_32k"].batch == 128
+    assert shapes.SHAPES["long_500k"].seq == 524288
+    assert shapes.SHAPES["long_500k"].batch == 1
+
+
+def test_long500k_applicability():
+    ok_archs = {a for a in list_archs()
+                if shapes.cell_applicable(get_arch(a), "long_500k")[0]}
+    assert ok_archs == {"falcon-mamba-7b", "zamba2-1.2b"}
+    for a in list_archs():
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shapes.cell_applicable(get_arch(a), s)[0]
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_input_specs_no_allocation(arch, shape):
+    cfg = get_arch(arch)
+    ok, _ = shapes.cell_applicable(cfg, shape)
+    if not ok:
+        pytest.skip("n/a")
+    kind, specs = shapes.input_specs(cfg, shape)
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+    cell = shapes.SHAPES[shape]
+    if kind == "train":
+        toks = specs["batch"]["tokens"]
+        assert toks.shape[0] == cell.batch
+        if cfg.family == "vlm":
+            tv = specs["batch"]["vision_embeds"].shape[1]
+            assert toks.shape[1] + tv == cell.seq
+        else:
+            assert toks.shape[1] == cell.seq
+    else:
+        assert specs["batch"]["tokens"].shape == (cell.batch, 1)
+        assert "caches" in specs
+
+
+def test_delta_cfgs_units():
+    """Delta-config unit math (replicated from dryrun to avoid importing
+    the XLA_FLAGS-setting module in-process)."""
+    for arch, expect_units in [("llama3-405b", 126), ("arctic-480b", 35),
+                               ("llama4-maverick-400b-a17b", 24),
+                               ("whisper-medium", 24.0)]:
+        cfg = get_arch(arch)
+        unit = {"moe": cfg.moe_every,
+                "hybrid": cfg.hybrid_attn_every}.get(cfg.family, 1) or 1
+        if cfg.family == "encdec":
+            units = float(cfg.n_layers)
+        else:
+            units = cfg.n_layers / unit
+        assert units == expect_units, (arch, units)
+    z = get_arch("zamba2-1.2b")
+    assert abs(z.n_layers / z.hybrid_attn_every - 38 / 6) < 1e-9
