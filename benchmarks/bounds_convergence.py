@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Dense, bif_bounds_trace
+from repro.core import BIFSolver, Dense
 from repro.data import random_sparse_spd
 
 from .common import row, time_fn
@@ -19,6 +19,7 @@ def run(quick: bool = True):
     true = float(u @ np.linalg.solve(a, u))
     op = Dense(jnp.asarray(a))
     uu = jnp.asarray(u)
+    solver = BIFSolver.create(max_iters=n)
 
     settings = {
         "fig1a_exact_interval": (w[0] - 1e-5, w[-1] + 1e-5),
@@ -28,13 +29,15 @@ def run(quick: bool = True):
     rows = []
     tables = {}
     for name, (lmn, lmx) in settings.items():
-        tr = bif_bounds_trace(op, uu, float(lmn), float(lmx), num_iters=n)
+        tr = solver.trace(op, uu, num_iters=n, lam_min=float(lmn),
+                          lam_max=float(lmx))
         g, grr, glr, glo = [np.asarray(x) for x in tr]
         gap = (glr - grr) / abs(true)
         it_1pct = int(np.argmax(gap < 1e-2)) + 1 if (gap < 1e-2).any() \
             else -1
-        t = time_fn(lambda: bif_bounds_trace(op, uu, float(lmn),
-                                             float(lmx), num_iters=25),
+        t = time_fn(lambda: solver.trace(op, uu, num_iters=25,
+                                         lam_min=float(lmn),
+                                         lam_max=float(lmx)),
                     repeats=3)
         rows.append(row(name, t * 1e6,
                         f"iters_to_1pct_gap={it_1pct};true={true:.4f}"))

@@ -6,7 +6,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Dense, bif_bounds
+from repro.core import BIFSolver, Dense
 from .conftest_shim import make_spd
 
 from .common import row, time_fn
@@ -20,8 +20,9 @@ def run(quick: bool = True):
         w = np.linalg.eigvalsh(a)
         u = np.random.default_rng(0).standard_normal(n)
         op = Dense(jnp.asarray(a))
-        res = bif_bounds(op, jnp.asarray(u), float(w[0] * 0.99),
-                         float(w[-1] * 1.01), max_iters=n, rtol=1e-6)
+        res = BIFSolver.create(max_iters=n, rtol=1e-6).solve(
+            op, jnp.asarray(u), lam_min=float(w[0] * 0.99),
+            lam_max=float(w[-1] * 1.01))
         iters = int(res.iterations)
         rho = (np.sqrt(kappa) - 1) / (np.sqrt(kappa) + 1)
         # theory: iters ~ log(tol/2kappa+) / log(rho)
@@ -36,9 +37,10 @@ def run(quick: bool = True):
         u = np.random.default_rng(1).standard_normal(nn)
         op = Dense(jnp.asarray(a))
         import jax
-        f = jax.jit(lambda uu: bif_bounds(op, uu, float(w[0] * 0.99),
-                                          float(w[-1] * 1.01),
-                                          max_iters=60, rtol=1e-4).lower)
+        solver = BIFSolver.create(max_iters=60, rtol=1e-4)
+        f = jax.jit(lambda uu: solver.solve(
+            op, uu, lam_min=float(w[0] * 0.99),
+            lam_max=float(w[-1] * 1.01)).lower)
         t = time_fn(f, jnp.asarray(u), repeats=3)
         rows.append(row(f"bif_bounds_wall_n_{nn}", t * 1e6,
                         "per-iteration cost ~ dense matvec O(n^2)"))

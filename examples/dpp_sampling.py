@@ -14,7 +14,8 @@ import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import Dense, sample_dpp, sample_kdpp
+from repro.core import BIFSolver, Dense, SolverConfig, sample_dpp, \
+    sample_kdpp
 from repro.data import density, rbf_kernel
 
 N = 500
@@ -33,9 +34,12 @@ init = jnp.asarray((np.random.default_rng(0).random(N) < 1 / 3)
 key = jax.random.key(0)
 steps = 300
 
+# The chains thread one quadrature policy through every MH decision.
+solver = BIFSolver(SolverConfig(max_iters=N + 2))
+
 for name, fn in (("DPP", sample_dpp), ("k-DPP", sample_kdpp)):
     run_q = jax.jit(lambda k: fn(op, k, init, steps, lmn, lmx,
-                                 max_iters=N + 2))
+                                 max_iters=N + 2, solver=solver))
     run_e = jax.jit(lambda k: fn(op, k, init, steps, lmn, lmx,
                                  max_iters=N + 2, exact=True))
     st_q = run_q(key)

@@ -8,7 +8,7 @@ import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import Dense, bif_bounds, bif_bounds_trace, judge_threshold
+from repro.core import BIFSolver, Dense, SolverConfig
 from repro.data import random_sparse_spd
 
 # The paper's Sec. 4.4 setup: 100x100, 10% dense, lambda_min = 1e-2.
@@ -21,8 +21,13 @@ true = u @ np.linalg.solve(A, u)
 op = Dense(jnp.asarray(A))
 uu = jnp.asarray(u)
 
+# One solver object carries the whole policy: stopping rule, spectrum
+# source, preconditioning, and kernel backend.
+solver = BIFSolver(SolverConfig(max_iters=N, rtol=1e-3))
+
 # Fig. 1: all four Gauss-type estimates, iteration by iteration.
-tr = bif_bounds_trace(op, uu, w[0] * 0.999, w[-1] * 1.001, num_iters=30)
+tr = solver.trace(op, uu, num_iters=30, lam_min=w[0] * 0.999,
+                  lam_max=w[-1] * 1.001)
 print(f"true BIF = {true:.6f}\n")
 print("iter   gauss(lo)    radau(lo)    radau(hi)    lobatto(hi)")
 for i in [0, 1, 4, 9, 14, 19, 24, 29]:
@@ -32,15 +37,19 @@ for i in [0, 1, 4, 9, 14, 19, 24, 29]:
           f"{float(tr.lobatto[i]):12.4f}")
 
 # Adaptive: stop as soon as the bracket is tight enough.
-res = bif_bounds(op, uu, w[0] * 0.999, w[-1] * 1.001, max_iters=N,
-                 rtol=1e-3)
+res = solver.solve(op, uu, lam_min=w[0] * 0.999, lam_max=w[-1] * 1.001)
 print(f"\nadaptive: [{float(res.lower):.5f}, {float(res.upper):.5f}] "
       f"in {int(res.iterations)} iterations (N={N})")
 
+# No eigendecomposition at hand? Let the solver estimate the interval.
+auto = solver.replace(spectrum="lanczos").solve(op, uu)
+print(f"auto-spectrum: [{float(auto.lower):.5f}, {float(auto.upper):.5f}] "
+      f"in {int(auto.iterations)} iterations")
+
 # Retrospective judge: decide `t < u^T A^-1 u` without the exact value.
 for t in (true * 0.5, true * 2.0):
-    j = judge_threshold(op, uu, jnp.asarray(t), w[0] * 0.999,
-                        w[-1] * 1.001, max_iters=N)
+    j = solver.judge_threshold(op, uu, jnp.asarray(t),
+                               lam_min=w[0] * 0.999, lam_max=w[-1] * 1.001)
     print(f"judge(t={t:9.3f} < BIF) -> {bool(j.decision)} "
           f"(certified={bool(j.certified)}, "
           f"iterations={int(j.iterations)})")

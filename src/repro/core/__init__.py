@@ -1,25 +1,62 @@
 """Paper core: Gauss-type quadrature bounds for bilinear inverse forms.
 
+The central abstraction is the **unified retrospective solver**: every
+workload — adaptive brackets, threshold judges, pair judges — is one
+configurable driver that iterates Gauss/Radau/Lobatto quadrature until the
+bracket on ``u^T A^-1 u`` resolves the caller's decision (paper Alg. 2):
+
+    from repro.core import BIFSolver, SolverConfig, Dense
+
+    solver = BIFSolver(SolverConfig(
+        max_iters=64, rtol=1e-3,        # stopping policy
+        spectrum='lanczos',             # or 'explicit'|'gershgorin'|'ridge'
+        precondition='jacobi',          # or 'none'        (Sec. 5.4)
+        backend='pallas',               # or 'reference'   (fused VPU update)
+    ))
+    res = solver.solve(op, u)                       # SolveResult: bracket,
+    #                                                 iterations, certified
+    res = solver.solve(op, u, decide=lambda lo, hi: (t < lo) | (t >= hi))
+    jt  = solver.judge_threshold(op, u, t)          # Alg. 4
+    jk  = solver.judge_kdpp_swap(op_a, u, op_b, v, t, p)    # Alg. 7
+    jd  = solver.judge_double_greedy(op_x, u, op_y, v, t, p)  # Alg. 9
+    tr  = solver.trace(op, u, num_iters=30)         # Fig. 1 sequences
+
+``BIFSolver``/``SolverConfig`` are frozen and pytree-static: safe to close
+over or pass through ``jit``/``vmap``/``scan``.
+
 Public API:
 
+  solver.{BIFSolver, SolverConfig, SolveResult, JudgeResult,
+          QuadratureTrace}                         -- THE entry point
   operators.{Dense, SparseCOO, Masked, Shifted, Jacobi, MatvecFn}
-  gql.{gql_init, gql_step, GQLState}            -- Alg. 5 stepping
-  bounds.{bif_bounds, bif_bounds_trace}         -- brackets on u^T A^-1 u
-  judge.{judge_threshold, judge_kdpp_swap, judge_double_greedy}
+  gql.{gql_init, gql_step, GQLState}               -- Alg. 5 stepping
   dpp.{sample_dpp, sample_kdpp, dpp_step, kdpp_step}
   double_greedy.double_greedy
   spectrum.{lanczos_extremal, gershgorin_bounds, ridge_bounds}
+  loop_utils.tree_freeze                           -- lane freezing (once)
+
+Deprecated shims (thin wrappers over ``BIFSolver``, kept for stability):
+
+  bounds.{bif_bounds, bif_bounds_trace, bif_refine_until}
+  judge.{judge_threshold, judge_kdpp_swap, judge_double_greedy}
   precond.preconditioned_bif_bounds
 """
-from . import bounds, double_greedy, dpp, gql, judge, lanczos, operators, \
-    precond, spectrum  # noqa: F401
+from . import bounds, double_greedy, dpp, gql, judge, lanczos, loop_utils, \
+    operators, precond, solver, spectrum  # noqa: F401
 
-from .bounds import BIFBounds, BIFTrace, bif_bounds, bif_bounds_trace  # noqa: F401
-from .double_greedy import DGResult, double_greedy as run_double_greedy  # noqa: F401
-from .dpp import ChainState, sample_dpp, sample_kdpp  # noqa: F401
-from .judge import JudgeResult, judge_double_greedy, judge_kdpp_swap, \
-    judge_threshold  # noqa: F401
+from .solver import BIFSolver, JudgeResult, PairState, QuadratureTrace, \
+    SolveResult, SolverConfig  # noqa: F401
+from .loop_utils import tree_freeze  # noqa: F401
 from .operators import Dense, Jacobi, Masked, MatvecFn, Shifted, SparseCOO, \
     sparse_from_dense  # noqa: F401
+from .dpp import ChainState, sample_dpp, sample_kdpp  # noqa: F401
+from .double_greedy import DGResult, double_greedy as run_double_greedy  # noqa: F401
 from .spectrum import SpectrumBounds, gershgorin_bounds, lanczos_extremal, \
     ridge_bounds  # noqa: F401
+
+# Deprecated entry points (shims over BIFSolver; see their docstrings).
+from .bounds import BIFBounds, BIFTrace, bif_bounds, bif_bounds_trace, \
+    bif_refine_until  # noqa: F401
+from .judge import judge_double_greedy, judge_kdpp_swap, \
+    judge_threshold  # noqa: F401
+from .precond import preconditioned_bif_bounds  # noqa: F401

@@ -1,27 +1,25 @@
-"""User-facing BIF bound computation (fixed-trace and adaptive).
+"""Legacy BIF bound entry points — thin shims over ``solver.BIFSolver``.
 
 ``bif_bounds_trace`` reproduces paper Fig. 1 (all four estimate sequences);
-``bif_bounds`` is the production entry point: a ``lax.while_loop`` that
-stops as soon as every lane's bracket [g^rr, g^lr] is tight enough — the
-building block of the retrospective framework (Alg. 2).
+``bif_bounds`` adaptively brackets ``u^T A^-1 u``; ``bif_refine_until`` is
+the generic retrospective loop (Alg. 2).  All three are deprecated aliases
+kept for API stability: new code should configure a
+:class:`repro.core.solver.BIFSolver` and call ``solve``/``trace`` directly
+(which also unlocks spectrum estimation, Jacobi preconditioning, and the
+fused Pallas backend through one interface).
 """
 from __future__ import annotations
 
 from typing import Callable, NamedTuple
 
 import jax
-import jax.numpy as jnp
 
-from . import gql as _gql
+from . import solver as _solver
 
 Array = jax.Array
 
-
-class BIFTrace(NamedTuple):
-    gauss: Array       # (iters, ...) lower
-    radau_lower: Array  # (iters, ...) right Gauss-Radau
-    radau_upper: Array  # (iters, ...) left Gauss-Radau
-    lobatto: Array     # (iters, ...) upper
+# Re-exported so existing ``bounds.BIFTrace`` consumers keep working.
+BIFTrace = _solver.QuadratureTrace
 
 
 class BIFBounds(NamedTuple):
@@ -33,65 +31,27 @@ class BIFBounds(NamedTuple):
 
 def bif_bounds_trace(op, u: Array, lam_min, lam_max, num_iters: int,
                      reorth: bool = False) -> BIFTrace:
-    """Run exactly ``num_iters`` GQL iterations, returning every estimate."""
-    st = _gql.gql_init(op, u, lam_min, lam_max)
-    scale = st.u_norm_sq
+    """Run exactly ``num_iters`` GQL iterations, returning every estimate.
 
-    basis0 = None
-    if reorth:
-        # Rows 0..num_iters hold v_0 .. v_{num_iters}; unfilled rows are zero.
-        basis0 = jnp.zeros(u.shape[:-1] + (num_iters + 1, u.shape[-1]), u.dtype)
-        basis0 = jax.lax.dynamic_update_index_in_dim(
-            basis0, st.lz.v_prev, 0, axis=-2)  # v_0
-        basis0 = jax.lax.dynamic_update_index_in_dim(
-            basis0, st.lz.v, 1, axis=-2)       # v_1
-
-    def body(carry, i):
-        st, basis = carry
-        st1 = _gql.gql_step(op, st, lam_min, lam_max, basis=basis)
-        if reorth:
-            basis = jax.lax.dynamic_update_index_in_dim(
-                basis, st1.lz.v, i + 2, axis=-2)  # v_{i+2}
-        out = (st1.g * scale, st1.g_rr * scale, st1.g_lr * scale,
-               st1.g_lo * scale)
-        return (st1, basis), out
-
-    first = (st.g * scale, st.g_rr * scale, st.g_lr * scale, st.g_lo * scale)
-    (_, _), rest = jax.lax.scan(body, (st, basis0),
-                                jnp.arange(num_iters - 1))
-    seqs = [jnp.concatenate([f[None], r], axis=0) for f, r in zip(first, rest)]
-    return BIFTrace(*seqs)
+    .. deprecated:: use ``BIFSolver(SolverConfig(reorth=...)).trace(...)``.
+    """
+    return _solver.BIFSolver.create(reorth=reorth).trace(
+        op, u, num_iters, lam_min=lam_min, lam_max=lam_max)
 
 
 def bif_bounds(op, u: Array, lam_min, lam_max, *, max_iters: int,
                rtol: float = 1e-2, atol: float = 0.0) -> BIFBounds:
-    """Adaptive bracket on u^T A^-1 u, batched with lockstep early exit."""
+    """Adaptive bracket on u^T A^-1 u, batched with lockstep early exit.
 
-    def needs_more(st: _gql.GQLState) -> Array:
-        gap = (st.g_lr - st.g_rr) * st.u_norm_sq
-        tight = gap <= jnp.maximum(atol, rtol * jnp.abs(_gql.lower_bound(st)))
-        return ~st.done & ~tight & (st.it < max_iters)
-
-    st = _gql.gql_init(op, u, lam_min, lam_max)
-
-    def cond(st):
-        return jnp.any(needs_more(st))
-
-    def body(st):
-        st1 = _gql.gql_step(op, st, lam_min, lam_max)
-        # freeze lanes that no longer need refinement
-        frozen = ~needs_more(st)
-        return jax.tree.map(
-            lambda new, old: jnp.where(
-                jnp.reshape(frozen, frozen.shape + (1,) * (new.ndim - frozen.ndim)),
-                old, new),
-            st1, st)
-
-    st = jax.lax.while_loop(cond, body, st)
-    gap = (st.g_lr - st.g_rr) * st.u_norm_sq
-    conv = st.done | (gap <= jnp.maximum(atol, rtol * jnp.abs(_gql.lower_bound(st))))
-    return BIFBounds(lower=_gql.lower_bound(st), upper=_gql.upper_bound(st),
-                     iterations=st.it, converged=conv)
+    .. deprecated:: use ``BIFSolver(SolverConfig(...)).solve(op, u, ...)``,
+       whose ``SolveResult`` also carries the Gauss/Lobatto estimates,
+       certification, and the final quadrature state.
+    """
+    res = _solver.BIFSolver.create(
+        max_iters=max_iters, rtol=rtol, atol=atol).solve(
+            op, u, lam_min=lam_min, lam_max=lam_max)
+    return BIFBounds(lower=res.lower, upper=res.upper,
+                     iterations=res.iterations, converged=res.converged)
 
 
 def bif_refine_until(op, u: Array, lam_min, lam_max, *, max_iters: int,
@@ -102,23 +62,9 @@ def bif_refine_until(op, u: Array, lam_min, lam_max, *, max_iters: int,
     Returns the final GQLState; the caller extracts its decision from the
     final bracket, which is guaranteed to contain the true BIF, so the
     decision matches the exact-value decision whenever decided_fn resolved.
+
+    .. deprecated:: use ``BIFSolver(...).solve(op, u, decide=decided_fn,
+       ...)`` and read ``SolveResult.state``.
     """
-    st = _gql.gql_init(op, u, lam_min, lam_max)
-
-    def needs_more(st):
-        dec = decided_fn(_gql.lower_bound(st), _gql.upper_bound(st))
-        return ~st.done & ~dec & (st.it < max_iters)
-
-    def cond(st):
-        return jnp.any(needs_more(st))
-
-    def body(st):
-        st1 = _gql.gql_step(op, st, lam_min, lam_max)
-        frozen = ~needs_more(st)
-        return jax.tree.map(
-            lambda new, old: jnp.where(
-                jnp.reshape(frozen, frozen.shape + (1,) * (new.ndim - frozen.ndim)),
-                old, new),
-            st1, st)
-
-    return jax.lax.while_loop(cond, body, st)
+    return _solver.BIFSolver.create(max_iters=max_iters).solve(
+        op, u, decide=decided_fn, lam_min=lam_min, lam_max=lam_max).state

@@ -13,9 +13,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import judge as _judge
 from . import operators as _ops
-from .dpp import _exact_bif
+from . import solver as _solver
+from .dpp import _as_solver, _exact_bif
 
 Array = jax.Array
 
@@ -36,8 +36,10 @@ def _logdet_masked(op, mask: Array) -> Array:
 
 
 def double_greedy(op, key: Array, lam_min, lam_max, *, max_iters: int,
-                  exact: bool = False) -> DGResult:
+                  exact: bool = False,
+                  solver: _solver.BIFSolver | None = None) -> DGResult:
     """Run Alg. 8 over the full ground set [N] (sequential by definition)."""
+    quad = _as_solver(solver, max_iters)
     n = op.n
     d = op.diag()
     keys = jax.random.split(key, n)
@@ -63,13 +65,13 @@ def double_greedy(op, key: Array, lam_min, lam_max, *, max_iters: int,
                                 jnp.log(jnp.maximum(t - bif_y, 1e-30)), big_neg)
             add = p * jnp.maximum(gain_m, 0.0) <= \
                 (1 - p) * jnp.maximum(gain_p, 0.0)
-            res = _judge.JudgeResult(decision=add,
-                                     certified=jnp.ones((), bool),
-                                     iterations=jnp.zeros((), jnp.int32))
+            res = _solver.JudgeResult(decision=add,
+                                      certified=jnp.ones((), bool),
+                                      iterations=jnp.zeros((), jnp.int32))
         else:
-            res = _judge.judge_double_greedy(
+            res = quad.judge_double_greedy(
                 _ops.Masked(op, x_mask), u, _ops.Masked(op, y_wo), v, t, p,
-                lam_min, lam_max, max_iters=max_iters)
+                lam_min=lam_min, lam_max=lam_max)
 
         x_new = jnp.where(res.decision, x_mask + hot, x_mask)
         y_new = jnp.where(res.decision, y_mask, y_wo)

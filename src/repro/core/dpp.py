@@ -26,10 +26,18 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import judge as _judge
 from . import operators as _ops
+from . import solver as _solver
 
 Array = jax.Array
+
+
+def _as_solver(solver: _solver.BIFSolver | None,
+               max_iters: int) -> _solver.BIFSolver:
+    """Chain steps take either a configured BIFSolver or a bare max_iters."""
+    if solver is None:
+        return _solver.BIFSolver.create(max_iters=max_iters)
+    return solver
 
 
 class ChainStats(NamedTuple):
@@ -69,7 +77,8 @@ def _exact_bif(op, mask: Array, u: Array) -> Array:
 
 
 def dpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
-             exact: bool = False) -> ChainState:
+             exact: bool = False,
+             solver: _solver.BIFSolver | None = None) -> ChainState:
     """One add/remove MH move (Alg. 3)."""
     n = op.n
     key, k_y, k_p = jax.random.split(state.key, 3)
@@ -91,12 +100,12 @@ def dpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
     if exact:
         bif = _exact_bif(op, m_wo, u)
         decision = t < bif
-        res = _judge.JudgeResult(decision=decision,
-                                 certified=jnp.ones((), bool),
-                                 iterations=jnp.zeros((), jnp.int32))
+        res = _solver.JudgeResult(decision=decision,
+                                  certified=jnp.ones((), bool),
+                                  iterations=jnp.zeros((), jnp.int32))
     else:
-        res = _judge.judge_threshold(mop, u, t, lam_min, lam_max,
-                                     max_iters=max_iters)
+        res = _as_solver(solver, max_iters).judge_threshold(
+            mop, u, t, lam_min=lam_min, lam_max=lam_max)
 
     accept = jnp.where(in_y, res.decision, ~res.decision)
     new_mask = jnp.where(in_y,
@@ -112,7 +121,8 @@ def dpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
 
 
 def kdpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
-              exact: bool = False) -> ChainState:
+              exact: bool = False,
+              solver: _solver.BIFSolver | None = None) -> ChainState:
     """One swap move of the k-DPP chain (Alg. 6/7): remove v in Y, add
     u not in Y; accept iff p < (L_uu - bif_u) / (L_vv - bif_v)."""
     n = op.n
@@ -139,12 +149,12 @@ def kdpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
         bif_u = _exact_bif(op, m_wo, col_u)
         bif_v = _exact_bif(op, m_wo, col_v)
         decision = t < p * bif_v - bif_u
-        res = _judge.JudgeResult(decision=decision,
-                                 certified=jnp.ones((), bool),
-                                 iterations=jnp.zeros((), jnp.int32))
+        res = _solver.JudgeResult(decision=decision,
+                                  certified=jnp.ones((), bool),
+                                  iterations=jnp.zeros((), jnp.int32))
     else:
-        res = _judge.judge_kdpp_swap(mop, col_u, mop, col_v, t, p,
-                                     lam_min, lam_max, max_iters=max_iters)
+        res = _as_solver(solver, max_iters).judge_kdpp_swap(
+            mop, col_u, mop, col_v, t, p, lam_min=lam_min, lam_max=lam_max)
 
     new_mask = jnp.where(res.decision, m_wo + hot_u, state.mask)
     st = state.stats
@@ -157,12 +167,12 @@ def kdpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
 
 
 def run_chain(step_fn, op, key: Array, init_mask: Array, num_steps: int,
-              lam_min, lam_max, *, max_iters: int,
-              exact: bool = False) -> ChainState:
+              lam_min, lam_max, *, max_iters: int, exact: bool = False,
+              solver: _solver.BIFSolver | None = None) -> ChainState:
     """Drive ``num_steps`` moves under ``lax.scan`` (jit-friendly)."""
     def body(state, _):
         return step_fn(op, state, lam_min, lam_max, max_iters=max_iters,
-                       exact=exact), None
+                       exact=exact, solver=solver), None
 
     state0 = init_chain(key, init_mask)
     state, _ = jax.lax.scan(body, state0, None, length=num_steps)
@@ -170,12 +180,16 @@ def run_chain(step_fn, op, key: Array, init_mask: Array, num_steps: int,
 
 
 def sample_dpp(op, key, init_mask, num_steps, lam_min, lam_max, *,
-               max_iters: int, exact: bool = False) -> ChainState:
+               max_iters: int, exact: bool = False,
+               solver: _solver.BIFSolver | None = None) -> ChainState:
     return run_chain(dpp_step, op, key, init_mask, num_steps, lam_min,
-                     lam_max, max_iters=max_iters, exact=exact)
+                     lam_max, max_iters=max_iters, exact=exact,
+                     solver=solver)
 
 
 def sample_kdpp(op, key, init_mask, num_steps, lam_min, lam_max, *,
-                max_iters: int, exact: bool = False) -> ChainState:
+                max_iters: int, exact: bool = False,
+                solver: _solver.BIFSolver | None = None) -> ChainState:
     return run_chain(kdpp_step, op, key, init_mask, num_steps, lam_min,
-                     lam_max, max_iters=max_iters, exact=exact)
+                     lam_max, max_iters=max_iters, exact=exact,
+                     solver=solver)

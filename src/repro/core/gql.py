@@ -135,15 +135,23 @@ def recurrence_update(alpha_n, beta_n, beta_p, g, c, delta, d_lr, d_rr,
 
 
 def gql_step(op, st: GQLState, lam_min: Array, lam_max: Array,
-             basis: Array | None = None) -> GQLState:
-    """Iterations i>=2 of Alg. 5; frozen lanes pass through unchanged."""
+             basis: Array | None = None, recurrence=None) -> GQLState:
+    """Iterations i>=2 of Alg. 5; frozen lanes pass through unchanged.
+
+    ``recurrence`` lets callers swap the scalar-update implementation (same
+    signature and return as ``recurrence_update``); the solver uses it to
+    route the arithmetic through the fused Pallas kernel
+    (``kernels/gql_update.py``) instead of the reference path.
+    """
+    if recurrence is None:
+        recurrence = recurrence_update
     lam_min = jnp.asarray(lam_min, st.g.dtype)
     lam_max = jnp.asarray(lam_max, st.g.dtype)
     lz = _lz.lanczos_step(op, st.lz, basis=basis)
     # Quantities of the *new* iteration (i+1): lz.alpha / lz.beta are
     # alpha_{i+1} / beta_{i+1}; lz.beta_prev is beta_i.
     (g_new, c_new, delta_new, d_lr_new, d_rr_new,
-     g_rr, g_lr, g_lo) = recurrence_update(
+     g_rr, g_lr, g_lo) = recurrence(
         lz.alpha, lz.beta, lz.beta_prev, st.g, st.c, st.delta,
         st.delta_lr, st.delta_rr, lam_min, lam_max)
 

@@ -1,4 +1,5 @@
-"""Retrospective comparison judges (paper Alg. 2 / 4 / 7 / 9).
+"""Retrospective comparison judges (paper Alg. 2 / 4 / 7 / 9) — thin shims
+over ``solver.BIFSolver``.
 
 Each judge decides a comparison involving BIFs by iterating Gauss-Radau
 quadrature only until the bracket [g^rr, g^lr] resolves it — the consumer
@@ -9,62 +10,28 @@ All judges are batched (leading dims) and jit/vmap-safe. ``max_iters``
 bounds work; if a lane is still undecided at exhaustion (bracket width at
 machine precision), we fall back to the bracket midpoint — with
 ``max_iters >= N`` this never triggers in exact arithmetic (Lemma 15).
+
+.. deprecated:: the module-level functions are kept for API stability; new
+   code should call the identically-named ``BIFSolver`` methods, which add
+   spectrum estimation and backend selection through the shared config.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
-
 import jax
-import jax.numpy as jnp
 
-from . import gql as _gql
+from . import solver as _solver
 
 Array = jax.Array
 
-
-class JudgeResult(NamedTuple):
-    decision: Array     # bool
-    certified: Array    # bool — True if resolved by bounds (not fallback)
-    iterations: Array   # int32 total quadrature iterations spent
-
-
-def _freeze(st_new, st_old, frozen):
-    return jax.tree.map(
-        lambda new, old: jnp.where(
-            jnp.reshape(frozen, frozen.shape + (1,) * (new.ndim - frozen.ndim)),
-            old, new),
-        st_new, st_old)
+# Re-exported result type (defined next to the driver it comes from).
+JudgeResult = _solver.JudgeResult
 
 
 def judge_threshold(op, u: Array, t: Array, lam_min, lam_max, *,
                     max_iters: int) -> JudgeResult:
     """Alg. 4 (DPPJUDGE): True iff  t < u^T A^-1 u."""
-    st = _gql.gql_init(op, u, lam_min, lam_max)
-
-    def resolved(st):
-        return (t < _gql.lower_bound(st)) | (t >= _gql.upper_bound(st))
-
-    def needs_more(st):
-        return ~st.done & ~resolved(st) & (st.it < max_iters)
-
-    def cond(st):
-        return jnp.any(needs_more(st))
-
-    def body(st):
-        st1 = _gql.gql_step(op, st, lam_min, lam_max)
-        return _freeze(st1, st, ~needs_more(st))
-
-    st = jax.lax.while_loop(cond, body, st)
-    lo, hi = _gql.lower_bound(st), _gql.upper_bound(st)
-    decision = jnp.where(t < lo, True,
-                         jnp.where(t >= hi, False, t < 0.5 * (lo + hi)))
-    return JudgeResult(decision=decision, certified=resolved(st),
-                       iterations=st.it)
-
-
-class _PairState(NamedTuple):
-    a: Any  # GQLState for the u-side
-    b: Any  # GQLState for the v-side
+    return _solver.BIFSolver.create(max_iters=max_iters).judge_threshold(
+        op, u, t, lam_min=lam_min, lam_max=lam_max)
 
 
 def judge_kdpp_swap(op_a, u: Array, op_b, v: Array, t: Array, p: Array,
@@ -75,60 +42,8 @@ def judge_kdpp_swap(op_a, u: Array, op_b, v: Array, t: Array, p: Array,
     tighten the side whose weighted gap dominates — u-side if
     d_u > p * d_v, else v-side.
     """
-    st = _PairState(a=_gql.gql_init(op_a, u, lam_min, lam_max),
-                    b=_gql.gql_init(op_b, v, lam_min, lam_max))
-
-    def bounds(st):
-        # accept-safe requires t < p*lower_v - upper_u;
-        # reject-safe requires t >= p*upper_v - lower_u.
-        lo = p * _gql.lower_bound(st.b) - _gql.upper_bound(st.a)
-        hi = p * _gql.upper_bound(st.b) - _gql.lower_bound(st.a)
-        return lo, hi
-
-    def resolved(st):
-        lo, hi = bounds(st)
-        return (t < lo) | (t >= hi)
-
-    def exhausted(st):
-        return (st.a.done | (st.a.it >= max_iters)) & \
-               (st.b.done | (st.b.it >= max_iters))
-
-    def needs_more(st):
-        return ~resolved(st) & ~exhausted(st)
-
-    def cond(st):
-        return jnp.any(needs_more(st))
-
-    def body(st):
-        d_u = _gql.gap(st.a)
-        d_v = _gql.gap(st.b)
-        pick_u = (d_u > p * d_v) & ~st.a.done & (st.a.it < max_iters)
-        pick_u = pick_u | (st.b.done | (st.b.it >= max_iters))
-        a1 = _gql.gql_step(op_a, st.a, lam_min, lam_max)
-        b1 = _gql.gql_step(op_b, st.b, lam_min, lam_max)
-        nm = needs_more(st)
-        a2 = _freeze(a1, st.a, ~(nm & pick_u))
-        b2 = _freeze(b1, st.b, ~(nm & ~pick_u))
-        return _PairState(a=a2, b=b2)
-
-    st = jax.lax.while_loop(cond, body, st)
-    lo, hi = bounds(st)
-    decision = jnp.where(t < lo, True,
-                         jnp.where(t >= hi, False, t < 0.5 * (lo + hi)))
-    return JudgeResult(decision=decision, certified=resolved(st),
-                       iterations=st.a.it + st.b.it)
-
-
-def _log_gain_bounds(t: Array, lo_bif: Array, hi_bif: Array):
-    """Bounds on log(t - bif) given bif in [lo_bif, hi_bif]; the true Schur
-    complement t - bif is positive, but a loose *upper* BIF bound can push
-    t - hi_bif <= 0, in which case the log lower bound is -inf."""
-    big_neg = jnp.asarray(-1e30, lo_bif.dtype)
-    arg_hi = t - lo_bif
-    arg_lo = t - hi_bif
-    hi = jnp.where(arg_hi > 0, jnp.log(jnp.maximum(arg_hi, 1e-30)), big_neg)
-    lo = jnp.where(arg_lo > 0, jnp.log(jnp.maximum(arg_lo, 1e-30)), big_neg)
-    return lo, hi
+    return _solver.BIFSolver.create(max_iters=max_iters).judge_kdpp_swap(
+        op_a, u, op_b, v, t, p, lam_min=lam_min, lam_max=lam_max)
 
 
 def judge_double_greedy(op_x, u: Array, op_y, v: Array, t: Array, p: Array,
@@ -137,60 +52,7 @@ def judge_double_greedy(op_x, u: Array, op_y, v: Array, t: Array, p: Array,
 
         p * [Delta^-]_+ <= (1 - p) * [Delta^+]_+
 
-    with Delta^+ = log(t - u^T A_X^-1 u)   (gain of adding to X)
-         Delta^- = -log(t - v^T A_Y'^-1 v) (gain of removing from Y)
-
-    (Sec. 5.2 of the paper swaps the +/- formulas relative to its own
-    Sec. 2 definitions; we follow Sec. 2 / Buchbinder et al., which the
-    exact-baseline tests verify.)
+    See ``BIFSolver.judge_double_greedy`` for the formula notes.
     """
-    st = _PairState(a=_gql.gql_init(op_x, u, lam_min, lam_max),
-                    b=_gql.gql_init(op_y, v, lam_min, lam_max))
-
-    def gain_bounds(st):
-        lo_p, hi_p = _log_gain_bounds(t, _gql.lower_bound(st.a),
-                                      _gql.upper_bound(st.a))
-        lo_log_y, hi_log_y = _log_gain_bounds(t, _gql.lower_bound(st.b),
-                                              _gql.upper_bound(st.b))
-        # Delta^- = -log(...): bounds swap
-        lo_m, hi_m = -hi_log_y, -lo_log_y
-        relu = lambda x: jnp.maximum(x, 0.0)
-        return relu(lo_p), relu(hi_p), relu(lo_m), relu(hi_m)
-
-    def resolved(st):
-        lo_p, hi_p, lo_m, hi_m = gain_bounds(st)
-        add_safe = p * hi_m <= (1 - p) * lo_p
-        rem_safe = p * lo_m > (1 - p) * hi_p
-        return add_safe | rem_safe
-
-    def exhausted(st):
-        return (st.a.done | (st.a.it >= max_iters)) & \
-               (st.b.done | (st.b.it >= max_iters))
-
-    def needs_more(st):
-        return ~resolved(st) & ~exhausted(st)
-
-    def cond(st):
-        return jnp.any(needs_more(st))
-
-    def body(st):
-        lo_p, hi_p, lo_m, hi_m = gain_bounds(st)
-        # tighten Delta^+ side if its weighted gap dominates
-        pick_x = ((1 - p) * (hi_p - lo_p) >= p * (hi_m - lo_m))
-        pick_x = (pick_x & ~st.a.done & (st.a.it < max_iters)) | \
-                 (st.b.done | (st.b.it >= max_iters))
-        a1 = _gql.gql_step(op_x, st.a, lam_min, lam_max)
-        b1 = _gql.gql_step(op_y, st.b, lam_min, lam_max)
-        nm = needs_more(st)
-        a2 = _freeze(a1, st.a, ~(nm & pick_x))
-        b2 = _freeze(b1, st.b, ~(nm & ~pick_x))
-        return _PairState(a=a2, b=b2)
-
-    st = jax.lax.while_loop(cond, body, st)
-    lo_p, hi_p, lo_m, hi_m = gain_bounds(st)
-    add_safe = p * hi_m <= (1 - p) * lo_p
-    rem_safe = p * lo_m > (1 - p) * hi_p
-    mid = (p * 0.5 * (lo_m + hi_m)) <= ((1 - p) * 0.5 * (lo_p + hi_p))
-    decision = jnp.where(add_safe, True, jnp.where(rem_safe, False, mid))
-    return JudgeResult(decision=decision, certified=add_safe | rem_safe,
-                       iterations=st.a.it + st.b.it)
+    return _solver.BIFSolver.create(max_iters=max_iters).judge_double_greedy(
+        op_x, u, op_y, v, t, p, lam_min=lam_min, lam_max=lam_max)

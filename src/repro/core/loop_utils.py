@@ -1,0 +1,27 @@
+"""Shared helpers for lockstep-batched retrospective loops.
+
+Every adaptive driver in this package advances a pytree of per-lane state
+under ``lax.while_loop`` and must keep lanes that already resolved their
+decision *bit-exactly* frozen while other lanes continue (DESIGN.md
+Sec. 3.1). ``tree_freeze`` is the single implementation of that rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_freeze(new, old, frozen):
+    """Select ``old`` leaves wherever ``frozen`` is True, else ``new``.
+
+    ``frozen`` is a boolean array over the batch (lane) dims; each leaf of
+    the state pytree may carry extra trailing dims (e.g. Lanczos vectors of
+    shape (..., N)), which are broadcast by appending singleton axes.
+    ``new`` and ``old`` must share a treedef.
+    """
+    return jax.tree.map(
+        lambda new_leaf, old_leaf: jnp.where(
+            jnp.reshape(frozen,
+                        frozen.shape + (1,) * (new_leaf.ndim - frozen.ndim)),
+            old_leaf, new_leaf),
+        new, old)

@@ -4,14 +4,17 @@ u^T A^-1 u == (Cu)^T (C A C)^-1 (Cu) for symmetric non-singular C; with
 C = diag(A)^{-1/2} (Jacobi) the transformed matrix has unit diagonal and
 typically a far smaller kappa, which the linear rate (√kappa-1)/(√kappa+1)
 turns directly into fewer iterations-to-decide.
+
+This whole module collapsed into one solver configuration::
+
+    BIFSolver(SolverConfig(precondition='jacobi', spectrum='lanczos', ...))
+
+``preconditioned_bif_bounds`` stays as the legacy shim.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from . import bounds as _bounds
-from . import operators as _ops
-from . import spectrum as _spectrum
+from . import solver as _solver
 
 
 def preconditioned_bif_bounds(op, u, *, max_iters: int, rtol: float = 1e-2,
@@ -22,11 +25,14 @@ def preconditioned_bif_bounds(op, u, *, max_iters: int, rtol: float = 1e-2,
     The spectral interval is estimated on the *transformed* operator
     (whose kappa governs convergence). Returns the same BIFBounds as
     ``bounds.bif_bounds`` — the value is invariant under the transform.
+
+    .. deprecated:: use ``BIFSolver(SolverConfig(precondition='jacobi',
+       spectrum='lanczos', ...))`` directly.
     """
-    pop = _ops.Jacobi.create(op)
-    cu = pop.transform_vector(u)
-    if probe is None:
-        probe = jnp.where(jnp.abs(cu) > 0, cu, jnp.ones_like(cu))
-    est = _spectrum.lanczos_extremal(pop, probe, num_iters=spectrum_iters)
-    return _bounds.bif_bounds(pop, cu, est.lam_min, est.lam_max,
-                              max_iters=max_iters, rtol=rtol, atol=atol)
+    res = _solver.BIFSolver.create(
+        max_iters=max_iters, rtol=rtol, atol=atol, precondition="jacobi",
+        spectrum="lanczos", spectrum_iters=spectrum_iters).solve(
+            op, u, probe=probe)
+    return _bounds.BIFBounds(lower=res.lower, upper=res.upper,
+                             iterations=res.iterations,
+                             converged=res.converged)

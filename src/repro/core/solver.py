@@ -1,0 +1,486 @@
+"""Unified retrospective-quadrature solver (the paper's Alg. 2, once).
+
+Every workload in this package — adaptive brackets on ``u^T A^-1 u``,
+threshold judges for DPP chains, swap judges for k-DPP chains, the
+double-greedy gain comparison — is the same loop: iterate Gauss /
+Gauss-Radau / Gauss-Lobatto quadrature until the bracket resolves the
+caller's decision, freezing lanes that are done (DESIGN.md Sec. 5).
+``BIFSolver`` is that loop, exactly once, behind a policy-carrying config:
+
+    solver = BIFSolver(SolverConfig(max_iters=64, rtol=1e-3))
+    res = solver.solve(op, u, lam_min=lmn, lam_max=lmx)   # SolveResult
+    res = solver.solve(op, u, decide=lambda lo, hi: t < lo)
+
+Config axes:
+
+  * ``spectrum``     -- where [lam_min, lam_max] comes from when not given
+                        explicitly: 'explicit' | 'gershgorin' | 'lanczos'
+                        | 'ridge' (spectrum.py estimators, paper Sec. 4.1);
+  * ``precondition`` -- 'none' | 'jacobi' (similarity transform, Sec. 5.4);
+  * ``reorth``       -- full reorthogonalization of the Lanczos basis
+                        (Sec. 5.4 'Instability');
+  * ``backend``      -- 'reference' (pure-jnp ``gql.recurrence_update``)
+                        | 'pallas' (fused ``kernels/gql_update.py`` VPU
+                        kernel) for the per-iteration scalar recurrence.
+
+``BIFSolver`` and ``SolverConfig`` are frozen, hashable, and registered as
+static pytrees, so they cross ``jit`` / ``vmap`` / ``scan`` boundaries and
+can be closure-captured or passed as arguments freely.
+
+The legacy entry points (``bounds.bif_bounds``, ``bounds.bif_refine_until``,
+``judge.judge_threshold``, ``judge.judge_kdpp_swap``,
+``judge.judge_double_greedy``) are thin shims over this driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import gql as _gql
+from . import operators as _ops
+from . import spectrum as _spectrum
+from .loop_utils import tree_freeze
+
+Array = jax.Array
+
+_SPECTRA = ("explicit", "gershgorin", "lanczos", "ridge")
+_PRECONDITIONS = ("none", "jacobi")
+_BACKENDS = ("reference", "pallas")
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Policy knobs for the retrospective driver (all static metadata)."""
+    max_iters: int = 64
+    rtol: float = 1e-2
+    atol: float = 0.0
+    spectrum: str = "explicit"       # 'explicit'|'gershgorin'|'lanczos'|'ridge'
+    precondition: str = "none"       # 'none'|'jacobi'
+    reorth: bool = False
+    backend: str = "reference"       # 'reference'|'pallas'
+    spectrum_iters: int = 16         # Lanczos steps for spectrum estimation
+    ridge: float = 0.0               # known ridge for spectrum='ridge'
+    pallas_interpret: bool | None = None  # None: auto (off-TPU -> interpret)
+
+    def __post_init__(self):
+        if self.spectrum not in _SPECTRA:
+            raise ValueError(f"spectrum must be one of {_SPECTRA}, "
+                             f"got {self.spectrum!r}")
+        if self.precondition not in _PRECONDITIONS:
+            raise ValueError(f"precondition must be one of {_PRECONDITIONS}, "
+                             f"got {self.precondition!r}")
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.max_iters < 1:
+            raise ValueError("max_iters must be >= 1")
+
+
+class SolveResult(NamedTuple):
+    """Rich per-lane outcome of one retrospective solve."""
+    lower: Array          # best lower bound (right Gauss-Radau, Thm. 4)
+    upper: Array          # best upper bound (left Gauss-Radau, Thm. 6)
+    gauss_lower: Array    # plain Gauss lower bound (Thm. 2)
+    lobatto_upper: Array  # Gauss-Lobatto upper bound
+    iterations: Array     # int32 quadrature iterations spent per lane
+    converged: Array      # resolved by bounds OR Krylov space exhausted
+    certified: Array      # resolved by the bounds alone (no exhaustion)
+    state: Any            # final GQLState (for callers that keep refining)
+
+
+class JudgeResult(NamedTuple):
+    decision: Array     # bool
+    certified: Array    # bool — True if resolved by bounds (not fallback)
+    iterations: Array   # int32 total quadrature iterations spent
+
+
+class QuadratureTrace(NamedTuple):
+    gauss: Array        # (iters, ...) lower
+    radau_lower: Array  # (iters, ...) right Gauss-Radau
+    radau_upper: Array  # (iters, ...) left Gauss-Radau
+    lobatto: Array      # (iters, ...) upper
+
+
+class PairState(NamedTuple):
+    a: Any  # GQLState for the first (u-side) system
+    b: Any  # GQLState for the second (v-side) system
+
+
+def _log_gain_bounds(t: Array, lo_bif: Array, hi_bif: Array):
+    """Bounds on log(t - bif) given bif in [lo_bif, hi_bif]; the true Schur
+    complement t - bif is positive, but a loose *upper* BIF bound can push
+    t - hi_bif <= 0, in which case the log lower bound is -inf."""
+    big_neg = jnp.asarray(-1e30, lo_bif.dtype)
+    arg_hi = t - lo_bif
+    arg_lo = t - hi_bif
+    hi = jnp.where(arg_hi > 0, jnp.log(jnp.maximum(arg_hi, 1e-30)), big_neg)
+    lo = jnp.where(arg_lo > 0, jnp.log(jnp.maximum(arg_lo, 1e-30)), big_neg)
+    return lo, hi
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class BIFSolver:
+    """One retrospective quadrature driver; see module docstring."""
+    config: SolverConfig = SolverConfig()
+
+    # -- construction sugar -------------------------------------------------
+
+    @classmethod
+    def create(cls, **config_kwargs) -> "BIFSolver":
+        return cls(SolverConfig(**config_kwargs))
+
+    def replace(self, **config_kwargs) -> "BIFSolver":
+        return BIFSolver(dataclasses.replace(self.config, **config_kwargs))
+
+    # -- backend / problem preparation --------------------------------------
+
+    def _recurrence(self):
+        """Scalar-recurrence implementation per ``config.backend``."""
+        if self.config.backend == "reference":
+            return None  # gql_step default: gql.recurrence_update
+        from ..kernels import ops as _kops  # deferred: pulls in pallas
+        interpret = self.config.pallas_interpret
+
+        def pallas_recurrence(alpha_n, beta_n, beta_p, g, c, delta,
+                              d_lr, d_rr, lam_min, lam_max):
+            shape = g.shape
+
+            def flat(x):
+                return jnp.broadcast_to(jnp.asarray(x, g.dtype),
+                                        shape).reshape((-1,))
+
+            outs = _kops.gql_update(
+                flat(alpha_n), flat(beta_n), flat(beta_p), flat(g), flat(c),
+                flat(delta), flat(d_lr), flat(d_rr), flat(lam_min),
+                flat(lam_max), interpret=interpret)
+            return tuple(o.reshape(shape) for o in outs)
+
+        return pallas_recurrence
+
+    def prepare(self, op, u: Array, lam_min=None, lam_max=None, probe=None):
+        """Apply preconditioning and resolve the spectral interval.
+
+        Returns ``(op, u, lam_min, lam_max)`` ready for ``gql_init``.
+        Explicitly passed ``lam_min``/``lam_max`` always win; missing ends
+        are filled per ``config.spectrum``.
+
+        With ``precondition='jacobi'`` the quadrature runs on the
+        *transformed* operator ``D^-1/2 A D^-1/2``, so an explicitly
+        passed interval must bound THAT spectrum (not A's — the two
+        intervals differ in general). Prefer leaving the interval to an
+        estimating spectrum mode, which runs on the transformed operator
+        automatically.
+        """
+        cfg = self.config
+        if cfg.precondition == "jacobi":
+            pop = _ops.Jacobi.create(op)
+            u = pop.transform_vector(u)
+            op = pop
+        if lam_min is not None and lam_max is not None:
+            return op, u, lam_min, lam_max
+
+        if cfg.spectrum == "explicit":
+            raise ValueError(
+                "spectrum='explicit' requires lam_min and lam_max; pass "
+                "them to solve()/judge_*() or pick an estimating spectrum "
+                "mode ('gershgorin' | 'lanczos' | 'ridge')")
+        if cfg.spectrum == "gershgorin":
+            est = _spectrum.gershgorin_bounds(op)
+            # Gershgorin discs of an SPD matrix may still dip below zero;
+            # f(x)=1/x quadrature needs lam_min > 0, and a tiny positive
+            # lam_min only loosens the upper bounds (Fig. 1b), never breaks
+            # them.
+            est = _spectrum.SpectrumBounds(
+                jnp.maximum(est.lam_min, est.lam_max * 1e-9 + 1e-30),
+                est.lam_max)
+        else:
+            if probe is None:
+                probe = jnp.where(jnp.abs(u) > 0, u, jnp.ones_like(u))
+            if cfg.spectrum == "ridge":
+                est = _spectrum.ridge_bounds(op, cfg.ridge, probe,
+                                             num_iters=cfg.spectrum_iters)
+            else:  # 'lanczos'
+                est = _spectrum.lanczos_extremal(
+                    op, probe, num_iters=cfg.spectrum_iters)
+        lam_min = est.lam_min if lam_min is None else lam_min
+        lam_max = est.lam_max if lam_max is None else lam_max
+        return op, u, lam_min, lam_max
+
+    # -- the single-system driver -------------------------------------------
+
+    def _drive(self, op, st0, needs_decision, lam_min, lam_max,
+               basis0=None):
+        """The ONE retrospective loop (Alg. 2): step lanes of ``st0`` until
+        ``needs_decision(st)`` clears everywhere (or breakdown/exhaustion),
+        freezing resolved lanes bit-exactly.
+        """
+        max_iters = self.config.max_iters
+        rec = self._recurrence()
+
+        def needs_more(st):
+            return ~st.done & needs_decision(st) & (st.it < max_iters)
+
+        if basis0 is None:
+            def cond(st):
+                return jnp.any(needs_more(st))
+
+            def body(st):
+                st1 = _gql.gql_step(op, st, lam_min, lam_max, recurrence=rec)
+                return tree_freeze(st1, st, ~needs_more(st))
+
+            return jax.lax.while_loop(cond, body, st0)
+
+        def cond(carry):
+            return jnp.any(needs_more(carry[0]))
+
+        def body(carry):
+            st, basis, k = carry
+            st1 = _gql.gql_step(op, st, lam_min, lam_max, basis=basis,
+                                recurrence=rec)
+            basis1 = jax.lax.dynamic_update_index_in_dim(
+                basis, st1.lz.v, k + 2, axis=-2)
+            frozen = ~needs_more(st)
+            return (tree_freeze(st1, st, frozen),
+                    tree_freeze(basis1, basis, frozen), k + 1)
+
+        st, _, _ = jax.lax.while_loop(
+            cond, body, (st0, basis0, jnp.zeros((), jnp.int32)))
+        return st
+
+    def _alloc_basis(self, st0, u: Array, num_rows: int):
+        """Reorthogonalization storage: rows 0..num_rows-1 hold v_0..v_M."""
+        basis = jnp.zeros(u.shape[:-1] + (num_rows, u.shape[-1]), u.dtype)
+        basis = jax.lax.dynamic_update_index_in_dim(
+            basis, st0.lz.v_prev, 0, axis=-2)  # v_0
+        return jax.lax.dynamic_update_index_in_dim(
+            basis, st0.lz.v, 1, axis=-2)       # v_1
+
+    def solve(self, op, u: Array,
+              decide: Callable[[Array, Array], Array] | None = None, *,
+              lam_min=None, lam_max=None, probe=None) -> SolveResult:
+        """Retrospective solve for ``u^T A^-1 u``: iterate quadrature until
+        ``decide(lower, upper)`` is True on every lane (or exhaustion).
+
+        ``decide`` gets the current scaled bracket and must return a bool
+        array (True = this lane's decision is resolved).  With
+        ``decide=None`` the driver brackets to the configured
+        ``rtol``/``atol`` tolerance (legacy ``bif_bounds`` behavior).
+        """
+        cfg = self.config
+        op, u, lam_min, lam_max = self.prepare(op, u, lam_min, lam_max,
+                                               probe)
+        st0 = _gql.gql_init(op, u, lam_min, lam_max)
+
+        if decide is None:
+            def resolved(st):
+                gap = _gql.gap(st)
+                return gap <= jnp.maximum(
+                    cfg.atol, cfg.rtol * jnp.abs(_gql.lower_bound(st)))
+        else:
+            def resolved(st):
+                return decide(_gql.lower_bound(st), _gql.upper_bound(st))
+
+        basis0 = self._alloc_basis(st0, u, cfg.max_iters + 1) \
+            if cfg.reorth else None
+        st = self._drive(op, st0, lambda s: ~resolved(s), lam_min, lam_max,
+                         basis0=basis0)
+        certified = resolved(st)
+        return SolveResult(
+            lower=_gql.lower_bound(st), upper=_gql.upper_bound(st),
+            gauss_lower=_gql.lower_bound_gauss(st),
+            lobatto_upper=_gql.upper_bound_lobatto(st),
+            iterations=st.it, converged=st.done | certified,
+            certified=certified, state=st)
+
+    def trace(self, op, u: Array, num_iters: int, *, lam_min=None,
+              lam_max=None, probe=None) -> QuadratureTrace:
+        """Run exactly ``num_iters`` iterations, recording all four estimate
+        sequences (paper Fig. 1).  Honors spectrum/precondition/backend and
+        ``reorth`` from the config."""
+        if num_iters < 1:
+            raise ValueError(f"num_iters must be >= 1, got {num_iters}")
+        cfg = self.config
+        op, u, lam_min, lam_max = self.prepare(op, u, lam_min, lam_max,
+                                               probe)
+        rec = self._recurrence()
+        st = _gql.gql_init(op, u, lam_min, lam_max)
+        scale = st.u_norm_sq
+
+        first = (st.g * scale, st.g_rr * scale, st.g_lr * scale,
+                 st.g_lo * scale)
+        if num_iters == 1:
+            # No scan: a zero-length jnp.arange trips older jax versions and
+            # buys nothing.
+            return QuadratureTrace(*(f[None] for f in first))
+
+        # Rows 0..num_iters hold v_0..v_{num_iters}; unfilled rows zero.
+        basis0 = self._alloc_basis(st, u, num_iters + 1) \
+            if cfg.reorth else None
+
+        def body(carry, i):
+            st, basis = carry
+            st1 = _gql.gql_step(op, st, lam_min, lam_max, basis=basis,
+                                recurrence=rec)
+            if cfg.reorth:
+                basis = jax.lax.dynamic_update_index_in_dim(
+                    basis, st1.lz.v, i + 2, axis=-2)  # v_{i+2}
+            out = (st1.g * scale, st1.g_rr * scale, st1.g_lr * scale,
+                   st1.g_lo * scale)
+            return (st1, basis), out
+
+        (_, _), rest = jax.lax.scan(body, (st, basis0),
+                                    jnp.arange(num_iters - 1))
+        seqs = [jnp.concatenate([f[None], r], axis=0)
+                for f, r in zip(first, rest)]
+        return QuadratureTrace(*seqs)
+
+    # -- single-system judges -----------------------------------------------
+
+    def judge_threshold(self, op, u: Array, t: Array, *, lam_min=None,
+                        lam_max=None, probe=None) -> JudgeResult:
+        """Alg. 4 (DPPJUDGE): True iff  t < u^T A^-1 u."""
+        res = self.solve(op, u, decide=lambda lo, hi: (t < lo) | (t >= hi),
+                         lam_min=lam_min, lam_max=lam_max, probe=probe)
+        decision = jnp.where(
+            t < res.lower, True,
+            jnp.where(t >= res.upper, False,
+                      t < 0.5 * (res.lower + res.upper)))
+        return JudgeResult(decision=decision, certified=res.certified,
+                           iterations=res.iterations)
+
+    # -- the pair driver (gap-weighted two-system refinement) ----------------
+
+    def _prepare_pair(self, op_a, u, op_b, v, lam_min, lam_max):
+        if self.config.precondition != "none":
+            raise NotImplementedError(
+                "preconditioning is per-operator and would shift the two "
+                "systems' quadrature scales differently; pair judges "
+                "require precondition='none'")
+        if self.config.reorth:
+            raise NotImplementedError(
+                "reorth is not implemented for the two-system driver; "
+                "pair judges require reorth=False")
+        if lam_min is None or lam_max is None:
+            _, _, lmn_a, lmx_a = self.prepare(op_a, u, lam_min, lam_max)
+            _, _, lmn_b, lmx_b = self.prepare(op_b, v, lam_min, lam_max)
+            lam_min = jnp.minimum(jnp.asarray(lmn_a), jnp.asarray(lmn_b))
+            lam_max = jnp.maximum(jnp.asarray(lmx_a), jnp.asarray(lmx_b))
+        return lam_min, lam_max
+
+    def solve_pair(self, op_a, u: Array, op_b, v: Array, *,
+                   resolved: Callable[[PairState], Array],
+                   pick_a: Callable[[PairState], Array],
+                   lam_min=None, lam_max=None) -> PairState:
+        """Generic two-system retrospective loop (Alg. 7/9 skeleton).
+
+        Per step, exactly one side of each lane advances: side a if
+        ``pick_a(state)`` (and side a can still move), else side b — the
+        gap-weighted refinement of paper Sec. 5.1.  Stops when
+        ``resolved(state)`` everywhere or both sides are exhausted.
+
+        A missing ``lam_min``/``lam_max`` is estimated per the config's
+        spectrum mode on both operators (the union interval is used).
+        """
+        lam_min, lam_max = self._prepare_pair(op_a, u, op_b, v, lam_min,
+                                              lam_max)
+        max_iters = self.config.max_iters
+        rec = self._recurrence()
+        st0 = PairState(a=_gql.gql_init(op_a, u, lam_min, lam_max),
+                        b=_gql.gql_init(op_b, v, lam_min, lam_max))
+
+        def exhausted(st):
+            return (st.a.done | (st.a.it >= max_iters)) & \
+                   (st.b.done | (st.b.it >= max_iters))
+
+        def needs_more(st):
+            return ~resolved(st) & ~exhausted(st)
+
+        def cond(st):
+            return jnp.any(needs_more(st))
+
+        def body(st):
+            pick = pick_a(st)
+            pick = (pick & ~st.a.done & (st.a.it < max_iters)) | \
+                   (st.b.done | (st.b.it >= max_iters))
+            a1 = _gql.gql_step(op_a, st.a, lam_min, lam_max, recurrence=rec)
+            b1 = _gql.gql_step(op_b, st.b, lam_min, lam_max, recurrence=rec)
+            nm = needs_more(st)
+            return PairState(a=tree_freeze(a1, st.a, ~(nm & pick)),
+                             b=tree_freeze(b1, st.b, ~(nm & ~pick)))
+
+        return jax.lax.while_loop(cond, body, st0)
+
+    def judge_kdpp_swap(self, op_a, u: Array, op_b, v: Array, t: Array,
+                        p: Array, *, lam_min=None,
+                        lam_max=None) -> JudgeResult:
+        """Alg. 7 (kDPP-JudgeGauss): True iff t < p * v^T B^-1 v - u^T A^-1 u."""
+        def bounds(st):
+            # accept-safe requires t < p*lower_v - upper_u;
+            # reject-safe requires t >= p*upper_v - lower_u.
+            lo = p * _gql.lower_bound(st.b) - _gql.upper_bound(st.a)
+            hi = p * _gql.upper_bound(st.b) - _gql.lower_bound(st.a)
+            return lo, hi
+
+        def resolved(st):
+            lo, hi = bounds(st)
+            return (t < lo) | (t >= hi)
+
+        st = self.solve_pair(
+            op_a, u, op_b, v, resolved=resolved,
+            pick_a=lambda st: _gql.gap(st.a) > p * _gql.gap(st.b),
+            lam_min=lam_min, lam_max=lam_max)
+        lo, hi = bounds(st)
+        decision = jnp.where(t < lo, True,
+                             jnp.where(t >= hi, False, t < 0.5 * (lo + hi)))
+        return JudgeResult(decision=decision, certified=resolved(st),
+                           iterations=st.a.it + st.b.it)
+
+    def judge_double_greedy(self, op_x, u: Array, op_y, v: Array, t: Array,
+                            p: Array, *, lam_min=None,
+                            lam_max=None) -> JudgeResult:
+        """Alg. 9 (DG-JudgeGauss): True (add element) iff
+
+            p * [Delta^-]_+ <= (1 - p) * [Delta^+]_+
+
+        with Delta^+ = log(t - u^T A_X^-1 u)   (gain of adding to X)
+             Delta^- = -log(t - v^T A_Y'^-1 v) (gain of removing from Y)
+
+        (Sec. 5.2 of the paper swaps the +/- formulas relative to its own
+        Sec. 2 definitions; we follow Sec. 2 / Buchbinder et al., which the
+        exact-baseline tests verify.)
+        """
+        def gain_bounds(st):
+            lo_p, hi_p = _log_gain_bounds(t, _gql.lower_bound(st.a),
+                                          _gql.upper_bound(st.a))
+            lo_log_y, hi_log_y = _log_gain_bounds(
+                t, _gql.lower_bound(st.b), _gql.upper_bound(st.b))
+            # Delta^- = -log(...): bounds swap
+            lo_m, hi_m = -hi_log_y, -lo_log_y
+            relu = lambda x: jnp.maximum(x, 0.0)  # noqa: E731
+            return relu(lo_p), relu(hi_p), relu(lo_m), relu(hi_m)
+
+        def resolved(st):
+            lo_p, hi_p, lo_m, hi_m = gain_bounds(st)
+            add_safe = p * hi_m <= (1 - p) * lo_p
+            rem_safe = p * lo_m > (1 - p) * hi_p
+            return add_safe | rem_safe
+
+        def pick_a(st):
+            lo_p, hi_p, lo_m, hi_m = gain_bounds(st)
+            # tighten the Delta^+ side if its weighted gap dominates
+            return (1 - p) * (hi_p - lo_p) >= p * (hi_m - lo_m)
+
+        st = self.solve_pair(op_x, u, op_y, v, resolved=resolved,
+                             pick_a=pick_a, lam_min=lam_min, lam_max=lam_max)
+        lo_p, hi_p, lo_m, hi_m = gain_bounds(st)
+        add_safe = p * hi_m <= (1 - p) * lo_p
+        rem_safe = p * lo_m > (1 - p) * hi_p
+        mid = (p * 0.5 * (lo_m + hi_m)) <= ((1 - p) * 0.5 * (lo_p + hi_p))
+        decision = jnp.where(add_safe, True, jnp.where(rem_safe, False, mid))
+        return JudgeResult(decision=decision, certified=add_safe | rem_safe,
+                           iterations=st.a.it + st.b.it)

@@ -20,6 +20,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(a_ref, xj_ref, xi_ref, y_ref, al_ref, acc_y, acc_al):
     i = pl.program_id(1)
@@ -88,7 +92,7 @@ def fused_matvec(a: jax.Array, x: jax.Array, *, bm: int = 128,
             pltpu.VMEM((bm,), jnp.float32),
             pltpu.VMEM((1,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(a, x, x)

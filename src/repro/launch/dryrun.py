@@ -122,6 +122,8 @@ def _lower_and_compile(cfg, shape_name: str, mesh, plan, *,
 
 def _measure(compiled) -> dict:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jaxlib: one dict per device
+        cost = cost[0] if cost else {}
     coll = hlo_utils.collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

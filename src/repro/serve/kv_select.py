@@ -17,6 +17,7 @@ import numpy as np
 
 from ..core import double_greedy as dg
 from ..core import operators as core_ops
+from ..core.solver import BIFSolver, SolverConfig
 
 
 def pool_keys(keys: np.ndarray, block: int = 128) -> np.ndarray:
@@ -29,20 +30,26 @@ def pool_keys(keys: np.ndarray, block: int = 128) -> np.ndarray:
 
 def select_diverse_blocks(keys: np.ndarray, *, block: int = 128,
                           ridge: float = 1e-3, bandwidth: float = 0.5,
-                          seed: int = 0):
+                          seed: int = 0,
+                          solver_config: SolverConfig | None = None):
     """Returns (block_mask, stats): which key blocks to keep.
 
     The retrospective double greedy maximizes log det of the RBF kernel
     over block summaries; `stats.quad_iterations` shows the certified
-    early-stopping at work.
+    early-stopping at work. ``solver_config`` tunes the quadrature engine
+    (e.g. ``SolverConfig(max_iters=32, backend='pallas')`` on TPU serving
+    paths); the default matches the exhaustive-certainty setting.
     """
     pooled = pool_keys(keys, block)
     n = len(pooled)
     d2 = ((pooled[:, None, :] - pooled[None, :, :]) ** 2).sum(-1)
     kmat = np.exp(-d2 / (2 * bandwidth ** 2)) + ridge * np.eye(n)
     op = core_ops.Dense(jnp.asarray(kmat, jnp.float32))
+    if solver_config is None:
+        solver_config = SolverConfig(max_iters=n + 2)
     res = dg.double_greedy(op, jax.random.key(seed), ridge * 0.5,
-                           float(n) + 1.0, max_iters=n + 2)
+                           float(n) + 1.0, max_iters=solver_config.max_iters,
+                           solver=BIFSolver(solver_config))
     mask = np.asarray(res.selected) > 0.5
     return mask, {"quad_iterations": int(res.quad_iterations),
                   "uncertified": int(res.uncertified),

@@ -1,0 +1,96 @@
+"""Minimal stand-in for the ``hypothesis`` API surface this suite uses.
+
+The real library is preferred and used when importable; conftest.py only
+installs this stub when ``hypothesis`` is absent (hermetic CI containers),
+so the property tests degrade to a deterministic seeded sweep instead of
+erroring out at collection.
+
+Covered surface: ``given``, ``settings`` (register_profile/load_profile and
+decorator form), ``strategies.integers`` / ``strategies.floats``.
+"""
+from __future__ import annotations
+
+import functools
+import types
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value, max_value, **_kw):
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, floats=_floats, sampled_from=_sampled_from,
+    booleans=_booleans)
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' lowercase class
+    _profiles: dict = {}
+    _current: dict = {"max_examples": 10}
+
+    def __init__(self, **kwargs):
+        self.kwargs = kwargs
+
+    def __call__(self, fn):
+        fn._stub_settings = self.kwargs
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = {**{"max_examples": 10}, **cls._profiles[name]}
+
+
+def given(*_args, **strategy_kwargs):
+    """Run the test body over a deterministic per-test sample sweep."""
+    if _args:
+        raise NotImplementedError(
+            "the hypothesis stub only supports keyword strategies")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_stub_settings", settings._current).get(
+                "max_examples", settings._current["max_examples"])
+            # Stable across runs/processes (unlike hash()).
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                drawn = {k: s._draw(rng)
+                         for k, s in strategy_kwargs.items()}
+                fn(*args, **kwargs, **drawn)
+        # pytest must not introspect the wrapped signature, or it would
+        # treat the strategy parameters as fixtures.
+        del wrapper.__wrapped__
+        wrapper.hypothesis_stub = True
+        return wrapper
+
+    return decorate
+
+
+HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None,
+                                    filter_too_much=None)

@@ -15,6 +15,18 @@ jax.config.update("jax_enable_x64", True)  # CPU oracles run in f64;
 
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+try:
+    import hypothesis  # noqa: E402,F401
+except ImportError:
+    # Hermetic containers ship without hypothesis; fall back to the local
+    # deterministic stub so the suite still collects and runs (the real
+    # library is used automatically whenever it is installed).
+    import _hypothesis_stub  # noqa: E402
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+
 from hypothesis import settings  # noqa: E402
 
 settings.register_profile("fast", max_examples=15, deadline=None)

@@ -111,6 +111,35 @@ def test_sensitivity_fig1bc():
         np.testing.assert_allclose(np.asarray(tr2.gauss), g, rtol=1e-10)
 
 
+def test_trace_single_iteration_shapes():
+    """Regression: num_iters=1 must skip the scan path and still return
+    well-formed (1, ...) sequences, batched or not, with or without
+    reorthogonalization."""
+    n = 20
+    op, u, w, true = _setup(n, 50.0, seed=1)
+    for reorth in (False, True):
+        tr = bif_bounds_trace(op, u, w[0] * 0.99, w[-1] * 1.01,
+                              num_iters=1, reorth=reorth)
+        for seq in tr:
+            assert seq.shape == (1,)
+        assert float(tr.radau_lower[0]) <= true + 1e-7 * (abs(true) + 1)
+        assert float(tr.radau_upper[0]) >= true - 1e-7 * (abs(true) + 1)
+        # the i=1 row must agree with the first row of a longer trace
+        tr2 = bif_bounds_trace(op, u, w[0] * 0.99, w[-1] * 1.01,
+                               num_iters=5, reorth=reorth)
+        for s1, s5 in zip(tr, tr2):
+            np.testing.assert_array_equal(np.asarray(s1[0]),
+                                          np.asarray(s5[0]))
+    # batched lanes
+    ub = jnp.stack([u, 2.0 * u])
+    opb = Dense(jnp.broadcast_to(op.a, (2,) + op.a.shape))
+    trb = bif_bounds_trace(opb, ub, w[0] * 0.99, w[-1] * 1.01, num_iters=1)
+    for seq in trb:
+        assert seq.shape == (1, 2)
+    with pytest.raises(ValueError, match="num_iters"):
+        bif_bounds_trace(op, u, w[0] * 0.99, w[-1] * 1.01, num_iters=0)
+
+
 def test_adaptive_bounds_batched():
     n = 50
     a = make_spd(n, kappa=300.0, seed=5)

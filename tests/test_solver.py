@@ -1,0 +1,499 @@
+"""BIFSolver redesign tests.
+
+1. Parity: the legacy entry points (now shims over ``BIFSolver``) must
+   reproduce the *pre-refactor* implementations bit-for-bit — same
+   brackets, same decisions, same iteration counts — on Dense and
+   SparseCOO operators. The reference loops below are verbatim copies of
+   the pre-redesign ``bounds.py`` / ``judge.py`` drivers.
+2. Backend consistency: ``backend='pallas'`` (fused kernel) must agree
+   with ``backend='reference'`` (the ``recurrence_update`` oracle).
+3. Config plumbing: spectrum estimation and Jacobi preconditioning go
+   through the same solve() entry point.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BIFSolver, Dense, Masked, SolverConfig, bif_bounds, \
+    bif_refine_until, judge_double_greedy, judge_kdpp_swap, \
+    judge_threshold, preconditioned_bif_bounds, sparse_from_dense, \
+    tree_freeze
+from repro.core import gql as _gql
+from conftest import make_spd
+
+
+# ---------------------------------------------------------------------------
+# Pre-refactor reference implementations (copied from the old bounds.py /
+# judge.py; the freeze helper is inlined as those modules had it).
+
+
+def _legacy_freeze(st_new, st_old, frozen):
+    return jax.tree.map(
+        lambda new, old: jnp.where(
+            jnp.reshape(frozen, frozen.shape + (1,) * (new.ndim - frozen.ndim)),
+            old, new),
+        st_new, st_old)
+
+
+def legacy_bif_bounds(op, u, lam_min, lam_max, *, max_iters, rtol=1e-2,
+                      atol=0.0):
+    def needs_more(st):
+        gap = (st.g_lr - st.g_rr) * st.u_norm_sq
+        tight = gap <= jnp.maximum(atol, rtol * jnp.abs(_gql.lower_bound(st)))
+        return ~st.done & ~tight & (st.it < max_iters)
+
+    st = _gql.gql_init(op, u, lam_min, lam_max)
+
+    def cond(st):
+        return jnp.any(needs_more(st))
+
+    def body(st):
+        st1 = _gql.gql_step(op, st, lam_min, lam_max)
+        return _legacy_freeze(st1, st, ~needs_more(st))
+
+    st = jax.lax.while_loop(cond, body, st)
+    gap = (st.g_lr - st.g_rr) * st.u_norm_sq
+    conv = st.done | (gap <= jnp.maximum(atol,
+                                         rtol * jnp.abs(_gql.lower_bound(st))))
+    return (_gql.lower_bound(st), _gql.upper_bound(st), st.it, conv)
+
+
+def legacy_refine_until(op, u, lam_min, lam_max, *, max_iters, decided_fn):
+    st = _gql.gql_init(op, u, lam_min, lam_max)
+
+    def needs_more(st):
+        dec = decided_fn(_gql.lower_bound(st), _gql.upper_bound(st))
+        return ~st.done & ~dec & (st.it < max_iters)
+
+    def cond(st):
+        return jnp.any(needs_more(st))
+
+    def body(st):
+        st1 = _gql.gql_step(op, st, lam_min, lam_max)
+        return _legacy_freeze(st1, st, ~needs_more(st))
+
+    return jax.lax.while_loop(cond, body, st)
+
+
+def legacy_judge_threshold(op, u, t, lam_min, lam_max, *, max_iters):
+    st = _gql.gql_init(op, u, lam_min, lam_max)
+
+    def resolved(st):
+        return (t < _gql.lower_bound(st)) | (t >= _gql.upper_bound(st))
+
+    def needs_more(st):
+        return ~st.done & ~resolved(st) & (st.it < max_iters)
+
+    def cond(st):
+        return jnp.any(needs_more(st))
+
+    def body(st):
+        st1 = _gql.gql_step(op, st, lam_min, lam_max)
+        return _legacy_freeze(st1, st, ~needs_more(st))
+
+    st = jax.lax.while_loop(cond, body, st)
+    lo, hi = _gql.lower_bound(st), _gql.upper_bound(st)
+    decision = jnp.where(t < lo, True,
+                         jnp.where(t >= hi, False, t < 0.5 * (lo + hi)))
+    return decision, resolved(st), st.it
+
+
+def legacy_judge_kdpp_swap(op_a, u, op_b, v, t, p, lam_min, lam_max, *,
+                           max_iters):
+    sa = _gql.gql_init(op_a, u, lam_min, lam_max)
+    sb = _gql.gql_init(op_b, v, lam_min, lam_max)
+    st = (sa, sb)
+
+    def bounds(st):
+        lo = p * _gql.lower_bound(st[1]) - _gql.upper_bound(st[0])
+        hi = p * _gql.upper_bound(st[1]) - _gql.lower_bound(st[0])
+        return lo, hi
+
+    def resolved(st):
+        lo, hi = bounds(st)
+        return (t < lo) | (t >= hi)
+
+    def exhausted(st):
+        return (st[0].done | (st[0].it >= max_iters)) & \
+               (st[1].done | (st[1].it >= max_iters))
+
+    def needs_more(st):
+        return ~resolved(st) & ~exhausted(st)
+
+    def cond(st):
+        return jnp.any(needs_more(st))
+
+    def body(st):
+        d_u = _gql.gap(st[0])
+        d_v = _gql.gap(st[1])
+        pick_u = (d_u > p * d_v) & ~st[0].done & (st[0].it < max_iters)
+        pick_u = pick_u | (st[1].done | (st[1].it >= max_iters))
+        a1 = _gql.gql_step(op_a, st[0], lam_min, lam_max)
+        b1 = _gql.gql_step(op_b, st[1], lam_min, lam_max)
+        nm = needs_more(st)
+        return (_legacy_freeze(a1, st[0], ~(nm & pick_u)),
+                _legacy_freeze(b1, st[1], ~(nm & ~pick_u)))
+
+    st = jax.lax.while_loop(cond, body, st)
+    lo, hi = bounds(st)
+    decision = jnp.where(t < lo, True,
+                         jnp.where(t >= hi, False, t < 0.5 * (lo + hi)))
+    return decision, resolved(st), st[0].it + st[1].it
+
+
+def _legacy_log_gain_bounds(t, lo_bif, hi_bif):
+    big_neg = jnp.asarray(-1e30, lo_bif.dtype)
+    arg_hi = t - lo_bif
+    arg_lo = t - hi_bif
+    hi = jnp.where(arg_hi > 0, jnp.log(jnp.maximum(arg_hi, 1e-30)), big_neg)
+    lo = jnp.where(arg_lo > 0, jnp.log(jnp.maximum(arg_lo, 1e-30)), big_neg)
+    return lo, hi
+
+
+def legacy_judge_double_greedy(op_x, u, op_y, v, t, p, lam_min, lam_max, *,
+                               max_iters):
+    st = (_gql.gql_init(op_x, u, lam_min, lam_max),
+          _gql.gql_init(op_y, v, lam_min, lam_max))
+
+    def gain_bounds(st):
+        lo_p, hi_p = _legacy_log_gain_bounds(t, _gql.lower_bound(st[0]),
+                                             _gql.upper_bound(st[0]))
+        lo_log_y, hi_log_y = _legacy_log_gain_bounds(
+            t, _gql.lower_bound(st[1]), _gql.upper_bound(st[1]))
+        lo_m, hi_m = -hi_log_y, -lo_log_y
+        relu = lambda x: jnp.maximum(x, 0.0)  # noqa: E731
+        return relu(lo_p), relu(hi_p), relu(lo_m), relu(hi_m)
+
+    def resolved(st):
+        lo_p, hi_p, lo_m, hi_m = gain_bounds(st)
+        add_safe = p * hi_m <= (1 - p) * lo_p
+        rem_safe = p * lo_m > (1 - p) * hi_p
+        return add_safe | rem_safe
+
+    def exhausted(st):
+        return (st[0].done | (st[0].it >= max_iters)) & \
+               (st[1].done | (st[1].it >= max_iters))
+
+    def needs_more(st):
+        return ~resolved(st) & ~exhausted(st)
+
+    def cond(st):
+        return jnp.any(needs_more(st))
+
+    def body(st):
+        lo_p, hi_p, lo_m, hi_m = gain_bounds(st)
+        pick_x = ((1 - p) * (hi_p - lo_p) >= p * (hi_m - lo_m))
+        pick_x = (pick_x & ~st[0].done & (st[0].it < max_iters)) | \
+                 (st[1].done | (st[1].it >= max_iters))
+        a1 = _gql.gql_step(op_x, st[0], lam_min, lam_max)
+        b1 = _gql.gql_step(op_y, st[1], lam_min, lam_max)
+        nm = needs_more(st)
+        return (_legacy_freeze(a1, st[0], ~(nm & pick_x)),
+                _legacy_freeze(b1, st[1], ~(nm & ~pick_x)))
+
+    st = jax.lax.while_loop(cond, body, st)
+    lo_p, hi_p, lo_m, hi_m = gain_bounds(st)
+    add_safe = p * hi_m <= (1 - p) * lo_p
+    rem_safe = p * lo_m > (1 - p) * hi_p
+    mid = (p * 0.5 * (lo_m + hi_m)) <= ((1 - p) * 0.5 * (lo_p + hi_p))
+    decision = jnp.where(add_safe, True, jnp.where(rem_safe, False, mid))
+    return decision, add_safe | rem_safe, st[0].it + st[1].it
+
+
+# ---------------------------------------------------------------------------
+# Fixtures
+
+
+def _problem(n=40, kappa=200.0, seed=0, density=1.0):
+    a = make_spd(n, kappa=kappa, seed=seed, density=density)
+    w = np.linalg.eigvalsh(a)
+    u = np.random.default_rng(seed + 1).standard_normal(n)
+    true = u @ np.linalg.solve(a, u)
+    return a, jnp.asarray(u), float(w[0] * 0.99), float(w[-1] * 1.01), true
+
+
+def _operators(a):
+    """The same matrix as Dense and as padded-COO sparse."""
+    return [Dense(jnp.asarray(a)), sparse_from_dense(a)]
+
+
+# ---------------------------------------------------------------------------
+# 1. Shim-vs-legacy parity
+
+
+@pytest.mark.parametrize("op_kind", ["dense", "sparse"])
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_bif_bounds_parity(op_kind, seed):
+    a, u, lmn, lmx, _ = _problem(seed=seed, density=0.3)
+    op = _operators(a)[op_kind == "sparse"]
+    got = bif_bounds(op, u, lmn, lmx, max_iters=45, rtol=1e-3)
+    lo, hi, it, conv = legacy_bif_bounds(op, u, lmn, lmx, max_iters=45,
+                                         rtol=1e-3)
+    np.testing.assert_array_equal(np.asarray(got.lower), np.asarray(lo))
+    np.testing.assert_array_equal(np.asarray(got.upper), np.asarray(hi))
+    assert int(got.iterations) == int(it)
+    assert bool(got.converged) == bool(conv)
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_bif_bounds_parity_batched(seed):
+    n = 36
+    a = make_spd(n, kappa=150.0, seed=seed)
+    w = np.linalg.eigvalsh(a)
+    u = jnp.asarray(np.random.default_rng(seed).standard_normal((6, n)))
+    op = Dense(jnp.broadcast_to(jnp.asarray(a), (6, n, n)))
+    got = bif_bounds(op, u, w[0] * 0.99, w[-1] * 1.01, max_iters=n + 2,
+                     rtol=1e-4)
+    lo, hi, it, conv = legacy_bif_bounds(op, u, w[0] * 0.99, w[-1] * 1.01,
+                                         max_iters=n + 2, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got.lower), np.asarray(lo))
+    np.testing.assert_array_equal(np.asarray(got.upper), np.asarray(hi))
+    np.testing.assert_array_equal(np.asarray(got.iterations),
+                                  np.asarray(it))
+    np.testing.assert_array_equal(np.asarray(got.converged),
+                                  np.asarray(conv))
+
+
+@pytest.mark.parametrize("op_kind", ["dense", "sparse"])
+def test_refine_until_parity(op_kind):
+    a, u, lmn, lmx, true = _problem(seed=2, density=0.4)
+    op = _operators(a)[op_kind == "sparse"]
+    t = jnp.asarray(true * 1.1)
+
+    def decided(lo, hi):
+        return (t < lo) | (t >= hi)
+
+    st_new = bif_refine_until(op, u, lmn, lmx, max_iters=45,
+                              decided_fn=decided)
+    st_old = legacy_refine_until(op, u, lmn, lmx, max_iters=45,
+                                 decided_fn=decided)
+    assert int(st_new.it) == int(st_old.it)
+    np.testing.assert_array_equal(np.asarray(_gql.lower_bound(st_new)),
+                                  np.asarray(_gql.lower_bound(st_old)))
+    np.testing.assert_array_equal(np.asarray(_gql.upper_bound(st_new)),
+                                  np.asarray(_gql.upper_bound(st_old)))
+
+
+@pytest.mark.parametrize("op_kind", ["dense", "sparse"])
+@pytest.mark.parametrize("factor", [0.5, 0.999, 1.001, 2.0])
+def test_judge_threshold_parity(op_kind, factor):
+    a, u, lmn, lmx, true = _problem(seed=7, density=0.5)
+    op = _operators(a)[op_kind == "sparse"]
+    t = jnp.asarray(true * factor)
+    got = judge_threshold(op, u, t, lmn, lmx, max_iters=45)
+    dec, cert, it = legacy_judge_threshold(op, u, t, lmn, lmx, max_iters=45)
+    assert bool(got.decision) == bool(dec)
+    assert bool(got.certified) == bool(cert)
+    assert int(got.iterations) == int(it)
+
+
+@pytest.mark.parametrize("seed", [0, 4, 9])
+def test_judge_kdpp_swap_parity(seed):
+    n = 30
+    a = make_spd(n, kappa=100.0, seed=seed)
+    w = np.linalg.eigvalsh(a)
+    rng = np.random.default_rng(seed + 7)
+    mask = (rng.random(n) < 0.5).astype(np.float64)
+    mask[:2] = [1.0, 0.0]
+    u = jnp.asarray(rng.standard_normal(n) * mask)
+    v = jnp.asarray(rng.standard_normal(n) * mask)
+    p = jnp.asarray(rng.uniform(0.05, 0.95))
+    t = jnp.asarray(rng.standard_normal() * 0.1)
+    op = Masked(Dense(jnp.asarray(a)), jnp.asarray(mask))
+    got = judge_kdpp_swap(op, u, op, v, t, p, w[0] * 0.99, w[-1] * 1.01,
+                          max_iters=n + 2)
+    dec, cert, it = legacy_judge_kdpp_swap(op, u, op, v, t, p, w[0] * 0.99,
+                                           w[-1] * 1.01, max_iters=n + 2)
+    assert bool(got.decision) == bool(dec)
+    assert bool(got.certified) == bool(cert)
+    assert int(got.iterations) == int(it)
+
+
+@pytest.mark.parametrize("seed", [0, 4, 9])
+def test_judge_double_greedy_parity(seed):
+    n = 24
+    a = make_spd(n, kappa=50.0, seed=seed)
+    d = np.sqrt(np.diag(a))
+    a = a / np.outer(d, d) + 0.05 * np.eye(n)
+    w = np.linalg.eigvalsh(a)
+    rng = np.random.default_rng(seed + 3)
+    x_mask = np.zeros(n)
+    x_mask[rng.choice(n, 5, replace=False)] = 1.0
+    y_mask = np.ones(n)
+    i = int(np.argmax(x_mask == 0))
+    x_mask[i] = 0.0
+    y_mask[i] = 0.0
+    col = a[:, i]
+    u = jnp.asarray(col * x_mask)
+    v = jnp.asarray(col * y_mask)
+    t = jnp.asarray(a[i, i])
+    p = jnp.asarray(rng.uniform(0.05, 0.95))
+    op_x = Masked(Dense(jnp.asarray(a)), jnp.asarray(x_mask))
+    op_y = Masked(Dense(jnp.asarray(a)), jnp.asarray(y_mask))
+    got = judge_double_greedy(op_x, u, op_y, v, t, p, w[0] * 0.99,
+                              w[-1] * 1.01, max_iters=n + 2)
+    dec, cert, it = legacy_judge_double_greedy(
+        op_x, u, op_y, v, t, p, w[0] * 0.99, w[-1] * 1.01, max_iters=n + 2)
+    assert bool(got.decision) == bool(dec)
+    assert bool(got.certified) == bool(cert)
+    assert int(got.iterations) == int(it)
+
+
+# ---------------------------------------------------------------------------
+# 2. Backend consistency: pallas kernel vs reference recurrence
+
+
+@pytest.mark.parametrize("op_kind", ["dense", "sparse"])
+def test_backend_pallas_matches_reference(op_kind):
+    a, u, lmn, lmx, true = _problem(n=48, seed=1, density=0.4)
+    op = _operators(a)[op_kind == "sparse"]
+    ref = BIFSolver(SolverConfig(max_iters=50, rtol=1e-4))
+    pls = ref.replace(backend="pallas", pallas_interpret=True)
+    r_ref = ref.solve(op, u, lam_min=lmn, lam_max=lmx)
+    r_pls = pls.solve(op, u, lam_min=lmn, lam_max=lmx)
+    assert int(r_ref.iterations) == int(r_pls.iterations)
+    np.testing.assert_allclose(np.asarray(r_pls.lower),
+                               np.asarray(r_ref.lower), rtol=1e-10)
+    np.testing.assert_allclose(np.asarray(r_pls.upper),
+                               np.asarray(r_ref.upper), rtol=1e-10)
+    assert float(r_pls.lower) <= true * 1.001
+    assert float(r_pls.upper) >= true * 0.999
+
+
+def test_backend_pallas_matches_reference_batched():
+    n = 40
+    a = make_spd(n, kappa=120.0, seed=6)
+    w = np.linalg.eigvalsh(a)
+    u = jnp.asarray(np.random.default_rng(2).standard_normal((5, n)))
+    op = Dense(jnp.broadcast_to(jnp.asarray(a), (5, n, n)))
+    ref = BIFSolver.create(max_iters=n + 2, rtol=1e-4)
+    pls = ref.replace(backend="pallas", pallas_interpret=True)
+    r_ref = ref.solve(op, u, lam_min=w[0] * 0.99, lam_max=w[-1] * 1.01)
+    r_pls = pls.solve(op, u, lam_min=w[0] * 0.99, lam_max=w[-1] * 1.01)
+    np.testing.assert_array_equal(np.asarray(r_ref.iterations),
+                                  np.asarray(r_pls.iterations))
+    np.testing.assert_allclose(np.asarray(r_pls.lower),
+                               np.asarray(r_ref.lower), rtol=1e-10)
+    np.testing.assert_allclose(np.asarray(r_pls.upper),
+                               np.asarray(r_ref.upper), rtol=1e-10)
+
+
+def test_backend_pallas_trace_matches_oracle():
+    """The trace path wires the kernel against the recurrence_update
+    oracle, mirroring tests/test_kernels.py at the API level."""
+    a, u, lmn, lmx, _ = _problem(n=32, seed=8)
+    op = Dense(jnp.asarray(a))
+    ref = BIFSolver.create(max_iters=32)
+    tr_ref = ref.trace(op, u, 20, lam_min=lmn, lam_max=lmx)
+    tr_pls = ref.replace(backend="pallas", pallas_interpret=True).trace(
+        op, u, 20, lam_min=lmn, lam_max=lmx)
+    for x, y in zip(tr_ref, tr_pls):
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# 3. Config plumbing
+
+
+def test_spectrum_modes_bracket_truth():
+    a, u, _, _, true = _problem(n=40, seed=5)
+    op = Dense(jnp.asarray(a))
+    for mode in ("gershgorin", "lanczos"):
+        res = BIFSolver.create(max_iters=60, rtol=1e-4,
+                               spectrum=mode).solve(op, u)
+        assert float(res.lower) <= true * 1.0001, mode
+        assert float(res.upper) >= true * 0.9999, mode
+
+
+def test_spectrum_explicit_requires_interval():
+    a, u, _, _, _ = _problem(n=20, seed=5)
+    with pytest.raises(ValueError, match="explicit"):
+        BIFSolver.create(max_iters=10).solve(Dense(jnp.asarray(a)), u)
+
+
+def test_jacobi_precondition_matches_legacy_shim():
+    a, u, _, _, true = _problem(n=40, seed=12)
+    op = Dense(jnp.asarray(a))
+    legacy = preconditioned_bif_bounds(op, u, max_iters=60, rtol=1e-4)
+    res = BIFSolver.create(max_iters=60, rtol=1e-4, precondition="jacobi",
+                           spectrum="lanczos").solve(op, u)
+    np.testing.assert_array_equal(np.asarray(res.lower),
+                                  np.asarray(legacy.lower))
+    np.testing.assert_array_equal(np.asarray(res.upper),
+                                  np.asarray(legacy.upper))
+    assert int(res.iterations) == int(legacy.iterations)
+    assert float(res.lower) <= true * 1.0001
+    assert float(res.upper) >= true * 0.9999
+
+
+def test_solver_is_jit_vmap_safe():
+    a, u, lmn, lmx, _ = _problem(n=24, seed=4)
+    op = Dense(jnp.asarray(a))
+    solver = BIFSolver.create(max_iters=26, rtol=1e-3)
+
+    @jax.jit
+    def run(x):
+        return solver.solve(op, x, lam_min=lmn, lam_max=lmx).lower
+
+    eager = float(solver.solve(op, u, lam_min=lmn, lam_max=lmx).lower)
+    assert float(run(u)) == pytest.approx(eager, rel=1e-12)
+    # static hashing: two configured solvers compare/hash by value
+    assert BIFSolver.create(max_iters=26, rtol=1e-3) == solver
+
+
+def test_pair_driver_validates_config_and_estimates_spectrum():
+    a, u, lmn, lmx, _ = _problem(n=20, seed=3)
+    op = Dense(jnp.asarray(a))
+    v = jnp.asarray(np.random.default_rng(9).standard_normal(20))
+    t, p = jnp.asarray(0.1), jnp.asarray(0.5)
+    # unsupported configs fail loudly on every pair entry point,
+    # including the generic public solve_pair
+    for bad in (dict(precondition="jacobi", spectrum="lanczos"),
+                dict(reorth=True)):
+        s = BIFSolver.create(max_iters=10, **bad)
+        with pytest.raises(NotImplementedError):
+            s.judge_kdpp_swap(op, u, op, v, t, p, lam_min=lmn, lam_max=lmx)
+        with pytest.raises(NotImplementedError):
+            s.solve_pair(op, u, op, v,
+                         resolved=lambda st: jnp.asarray(True),
+                         pick_a=lambda st: jnp.asarray(True),
+                         lam_min=lmn, lam_max=lmx)
+    # missing interval + estimating spectrum mode works on the pair path
+    # (a far-off threshold must certify quickly)
+    s = BIFSolver.create(max_iters=22, spectrum="lanczos")
+    res = s.judge_kdpp_swap(op, u, op, v, jnp.asarray(-1e8), p)
+    assert bool(res.certified) and bool(res.decision)
+    # explicit-spectrum mode without an interval stays a clear error
+    with pytest.raises(ValueError, match="explicit"):
+        BIFSolver.create(max_iters=10).judge_kdpp_swap(op, u, op, v, t, p)
+
+
+def test_invalid_config_rejected():
+    with pytest.raises(ValueError):
+        SolverConfig(spectrum="eigh")
+    with pytest.raises(ValueError):
+        SolverConfig(precondition="ssor")
+    with pytest.raises(ValueError):
+        SolverConfig(backend="cuda")
+    with pytest.raises(ValueError):
+        SolverConfig(max_iters=0)
+
+
+def test_tree_freeze_broadcasts_trailing_dims():
+    new = {"a": jnp.ones((3, 4)), "b": jnp.ones((3,))}
+    old = {"a": jnp.zeros((3, 4)), "b": jnp.zeros((3,))}
+    frozen = jnp.asarray([True, False, True])
+    out = tree_freeze(new, old, frozen)
+    np.testing.assert_array_equal(np.asarray(out["a"][:, 0]), [0, 1, 0])
+    np.testing.assert_array_equal(np.asarray(out["b"]), [0, 1, 0])
+
+
+def test_solve_result_reports_rich_stats():
+    a, u, lmn, lmx, true = _problem(n=30, seed=13)
+    res = BIFSolver.create(max_iters=32, rtol=1e-4).solve(
+        Dense(jnp.asarray(a)), u, lam_min=lmn, lam_max=lmx)
+    assert float(res.gauss_lower) <= float(res.lower) + 1e-9
+    assert float(res.upper) <= float(res.lobatto_upper) + 1e-9
+    assert bool(res.converged) and bool(res.certified)
+    assert res.state.it.dtype == jnp.int32
