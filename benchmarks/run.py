@@ -14,6 +14,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 import jax  # noqa: E402
 
@@ -26,7 +27,12 @@ MODULES = [
     "real_kernels",           # Table 1/2 real-data regimes (stand-ins)
     "quadrature_scaling",     # Thm. 3/5 rate check
     "kernel_report",          # Pallas kernel validation + accounting
+    "batched_judges",         # per-candidate loop vs solve_batch (Sec. 6)
 ]
+
+# Suites whose tables are ALSO written to BENCH_<name>.json at the repo
+# root, so the perf trajectory is tracked in-tree across PRs.
+ROOT_TRACKED = {"batched_judges"}
 
 
 def main() -> None:
@@ -56,6 +62,10 @@ def main() -> None:
         if tables:
             (out_dir / f"{mod_name}.json").write_text(
                 json.dumps(tables, indent=1))
+            if mod_name in ROOT_TRACKED:
+                repo_root = Path(__file__).resolve().parent.parent
+                (repo_root / f"BENCH_{mod_name}.json").write_text(
+                    json.dumps(tables, indent=1) + "\n")
     raise SystemExit(1 if failures else 0)
 
 

@@ -24,13 +24,23 @@ bracket on ``u^T A^-1 u`` resolves the caller's decision (paper Alg. 2):
 ``BIFSolver``/``SolverConfig`` are frozen and pytree-static: safe to close
 over or pass through ``jit``/``vmap``/``scan``.
 
+Batched execution (DESIGN.md Sec. 6): ``solve_batch``/``judge_batch``
+run K candidate systems as lockstep lanes of one driver (one stacked
+matvec per iteration, per-lane early exit), and ``judge_argmax`` races
+lanes to a certified best candidate — greedy MAP's inner loop::
+
+    op2 = stack_masks(base_op, masks)               # K submatrices, shared base
+    res = solver.judge_batch(op2, us, ts)           # K judges, one loop
+    am  = solver.judge_argmax(op2, us, shift=d, scale=-1.0)
+
 Public API:
 
   solver.{BIFSolver, SolverConfig, SolveResult, JudgeResult,
-          QuadratureTrace}                         -- THE entry point
-  operators.{Dense, SparseCOO, Masked, Shifted, Jacobi, MatvecFn}
+          ArgmaxResult, QuadratureTrace}            -- THE entry point
+  operators.{Dense, SparseCOO, SparseBELL, Masked, Shifted, Jacobi,
+             MatvecFn, stack_ops, stack_masks}
   gql.{gql_init, gql_step, GQLState}               -- Alg. 5 stepping
-  dpp.{sample_dpp, sample_kdpp, dpp_step, kdpp_step}
+  dpp.{sample_dpp, sample_kdpp, dpp_step, kdpp_step, greedy_map}
   double_greedy.double_greedy
   spectrum.{lanczos_extremal, gershgorin_bounds, ridge_bounds}
   loop_utils.tree_freeze                           -- lane freezing (once)
@@ -41,15 +51,17 @@ Deprecated shims (thin wrappers over ``BIFSolver``, kept for stability):
   judge.{judge_threshold, judge_kdpp_swap, judge_double_greedy}
   precond.preconditioned_bif_bounds
 """
-from . import bounds, double_greedy, dpp, gql, judge, lanczos, loop_utils, \
-    operators, precond, solver, spectrum  # noqa: F401
+from . import bounds, deprecation, double_greedy, dpp, gql, judge, lanczos, \
+    loop_utils, operators, precond, solver, spectrum  # noqa: F401
 
-from .solver import BIFSolver, JudgeResult, PairState, QuadratureTrace, \
-    SolveResult, SolverConfig  # noqa: F401
+from .solver import ArgmaxResult, BIFSolver, JudgeResult, PairState, \
+    QuadratureTrace, SolveResult, SolverConfig  # noqa: F401
 from .loop_utils import tree_freeze  # noqa: F401
-from .operators import Dense, Jacobi, Masked, MatvecFn, Shifted, SparseCOO, \
-    sparse_from_dense  # noqa: F401
-from .dpp import ChainState, sample_dpp, sample_kdpp  # noqa: F401
+from .operators import Dense, Jacobi, Masked, MatvecFn, Shifted, SparseBELL, \
+    SparseCOO, bell_from_dense, sparse_from_dense, stack_masks, \
+    stack_ops  # noqa: F401
+from .dpp import ChainState, GreedyMapResult, greedy_map, sample_dpp, \
+    sample_kdpp  # noqa: F401
 from .double_greedy import DGResult, double_greedy as run_double_greedy  # noqa: F401
 from .spectrum import SpectrumBounds, gershgorin_bounds, lanczos_extremal, \
     ridge_bounds  # noqa: F401

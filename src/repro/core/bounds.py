@@ -15,6 +15,7 @@ from typing import Callable, NamedTuple
 import jax
 
 from . import solver as _solver
+from .deprecation import warn_once as _warn_once
 
 Array = jax.Array
 
@@ -47,6 +48,7 @@ def bif_bounds(op, u: Array, lam_min, lam_max, *, max_iters: int,
        whose ``SolveResult`` also carries the Gauss/Lobatto estimates,
        certification, and the final quadrature state.
     """
+    _warn_once("bounds.bif_bounds", "BIFSolver.solve")
     res = _solver.BIFSolver.create(
         max_iters=max_iters, rtol=rtol, atol=atol).solve(
             op, u, lam_min=lam_min, lam_max=lam_max)
@@ -66,5 +68,6 @@ def bif_refine_until(op, u: Array, lam_min, lam_max, *, max_iters: int,
     .. deprecated:: use ``BIFSolver(...).solve(op, u, decide=decided_fn,
        ...)`` and read ``SolveResult.state``.
     """
+    _warn_once("bounds.bif_refine_until", "BIFSolver.solve(decide=...)")
     return _solver.BIFSolver.create(max_iters=max_iters).solve(
         op, u, decide=decided_fn, lam_min=lam_min, lam_max=lam_max).state

@@ -1,0 +1,27 @@
+"""One-shot DeprecationWarnings for the legacy shim entry points.
+
+The module-level shims (``bounds.bif_bounds``, ``judge.judge_*``,
+``precond.preconditioned_bif_bounds``) stay for API stability but warn
+exactly once per process so migration pressure exists without log spam.
+Internal code must call ``BIFSolver`` directly and never trips these.
+"""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set[str] = set()
+
+
+def warn_once(name: str, replacement: str) -> None:
+    """Emit a DeprecationWarning for ``name``, at most once per process."""
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"repro.core.{name} is deprecated; use {replacement} instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def reset() -> None:
+    """Forget which shims have warned (test hook)."""
+    _WARNED.clear()

@@ -121,10 +121,15 @@ def dpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
 
 
 def kdpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
-              exact: bool = False,
+              exact: bool = False, batched: bool = True,
               solver: _solver.BIFSolver | None = None) -> ChainState:
     """One swap move of the k-DPP chain (Alg. 6/7): remove v in Y, add
-    u not in Y; accept iff p < (L_uu - bif_u) / (L_vv - bif_v)."""
+    u not in Y; accept iff p < (L_uu - bif_u) / (L_vv - bif_v).
+
+    ``batched=True`` (default) scores both candidate systems as two lanes
+    of the batched driver (one stacked matvec per iteration, DESIGN.md
+    Sec. 6); ``batched=False`` keeps the sequential gap-weighted pair
+    driver. Decisions are certified-identical either way."""
     n = op.n
     key, k_v, k_u, k_p = jax.random.split(state.key, 4)
     # Gumbel-max uniform picks from inside / outside the mask.
@@ -152,6 +157,9 @@ def kdpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
         res = _solver.JudgeResult(decision=decision,
                                   certified=jnp.ones((), bool),
                                   iterations=jnp.zeros((), jnp.int32))
+    elif batched:
+        res = _as_solver(solver, max_iters).judge_kdpp_swap_batch(
+            mop, col_u, col_v, t, p, lam_min=lam_min, lam_max=lam_max)
     else:
         res = _as_solver(solver, max_iters).judge_kdpp_swap(
             mop, col_u, mop, col_v, t, p, lam_min=lam_min, lam_max=lam_max)
@@ -177,6 +185,63 @@ def run_chain(step_fn, op, key: Array, init_mask: Array, num_steps: int,
     state0 = init_chain(key, init_mask)
     state, _ = jax.lax.scan(body, state0, None, length=num_steps)
     return state
+
+
+class GreedyMapResult(NamedTuple):
+    mask: Array             # (N,) float — the selected set
+    order: Array            # (k,) int32 — items in selection order
+    gains: Array            # (k,) certified gain bracket midpoints
+    certified: Array        # (k,) bool — per-step argmax certification
+    quad_iterations: Array  # total GQL iterations across all steps
+    uncertified: Array      # steps decided by exhaustion fallback
+
+
+def greedy_map(op, k: int, lam_min, lam_max, *, max_iters: int,
+               exact: bool = False,
+               solver: _solver.BIFSolver | None = None) -> GreedyMapResult:
+    """Greedy MAP for the DPP (paper Alg. 4), batched over candidates.
+
+    Per step, EVERY candidate's marginal gain  L_ii - u_i^T L_Y^-1 u_i
+    (the Schur complement of adding i to Y) is scored as one lane of a
+    single batched driver, and ``judge_argmax`` races the lanes: a
+    candidate freezes as soon as its bracket is dominated, and the step
+    ends when the winner's lower bound clears every rival — certified
+    identical to greedy with exact solves. One (N, N)-stacked matvec per
+    quadrature iteration replaces N sequential judges.
+    """
+    quad = _as_solver(solver, max_iters)
+    n = op.n
+    d = op.diag()
+    # candidate columns, once: row i of A (symmetric) = column i
+    cols = op.matvec(jnp.eye(n, dtype=d.dtype))
+
+    def step(carry, _):
+        mask, = carry
+        u = cols * mask[None, :]            # lane i: col_i restricted to Y
+        valid = mask < 0.5
+        if exact:
+            bif = _exact_bif(op, mask, u)
+            score = jnp.where(valid, d - bif, -jnp.inf)
+            idx = jnp.argmax(score).astype(jnp.int32)
+            gain, cert = score[idx], jnp.ones((), bool)
+            iters = jnp.zeros((), jnp.int32)
+        else:
+            res = quad.judge_argmax(_ops.Masked(op, mask), u, shift=d,
+                                    scale=-1.0, valid=valid,
+                                    lam_min=lam_min, lam_max=lam_max)
+            idx, cert = res.index, res.certified
+            gain = 0.5 * (res.lower[idx] + res.upper[idx])
+            iters = jnp.sum(res.iterations)
+        new_mask = mask + jax.nn.one_hot(idx, n, dtype=mask.dtype)
+        return (new_mask,), (idx, gain, cert, iters)
+
+    mask0 = jnp.zeros((n,), d.dtype)
+    (mask,), (order, gains, cert, iters) = jax.lax.scan(
+        step, (mask0,), None, length=k)
+    return GreedyMapResult(
+        mask=mask, order=order, gains=gains, certified=cert,
+        quad_iterations=jnp.sum(iters),
+        uncertified=jnp.sum((~cert).astype(jnp.int32)))
 
 
 def sample_dpp(op, key, init_mask, num_steps, lam_min, lam_max, *,

@@ -20,6 +20,7 @@ from __future__ import annotations
 import jax
 
 from . import solver as _solver
+from .deprecation import warn_once as _warn_once
 
 Array = jax.Array
 
@@ -30,6 +31,7 @@ JudgeResult = _solver.JudgeResult
 def judge_threshold(op, u: Array, t: Array, lam_min, lam_max, *,
                     max_iters: int) -> JudgeResult:
     """Alg. 4 (DPPJUDGE): True iff  t < u^T A^-1 u."""
+    _warn_once("judge.judge_threshold", "BIFSolver.judge_threshold")
     return _solver.BIFSolver.create(max_iters=max_iters).judge_threshold(
         op, u, t, lam_min=lam_min, lam_max=lam_max)
 
@@ -42,6 +44,7 @@ def judge_kdpp_swap(op_a, u: Array, op_b, v: Array, t: Array, p: Array,
     tighten the side whose weighted gap dominates — u-side if
     d_u > p * d_v, else v-side.
     """
+    _warn_once("judge.judge_kdpp_swap", "BIFSolver.judge_kdpp_swap")
     return _solver.BIFSolver.create(max_iters=max_iters).judge_kdpp_swap(
         op_a, u, op_b, v, t, p, lam_min=lam_min, lam_max=lam_max)
 
@@ -54,5 +57,6 @@ def judge_double_greedy(op_x, u: Array, op_y, v: Array, t: Array, p: Array,
 
     See ``BIFSolver.judge_double_greedy`` for the formula notes.
     """
+    _warn_once("judge.judge_double_greedy", "BIFSolver.judge_double_greedy")
     return _solver.BIFSolver.create(max_iters=max_iters).judge_double_greedy(
         op_x, u, op_y, v, t, p, lam_min=lam_min, lam_max=lam_max)

@@ -52,25 +52,45 @@ _register(Dense, ["a"])
 class SparseCOO:
     """Symmetric sparse matrix in padded COO form, fixed nnz (jit-stable).
 
-    ``rows``/``cols``/``vals`` have shape (nnz,); padding entries carry
-    ``rows == n`` (scattered with drop semantics). Only the single-system
-    (unbatched) layout is supported; batch by ``vmap`` over vals if needed.
+    ``rows``/``cols``/``vals`` have shape (..., nnz); padding entries carry
+    ``rows == n`` (scattered with drop semantics). With a shared pattern
+    (1-D ``rows``/``cols``) any leading batch dims of ``x`` and/or ``vals``
+    broadcast. A *stacked* operator (from ``stack_ops``) carries leading
+    lane dims on the index arrays too; ``x`` must then match those dims.
     """
     rows: Array
     cols: Array
     vals: Array
     n_static: int
-    diag_vals: Array  # (N,) dense diagonal, kept explicitly
+    diag_vals: Array  # (..., N) dense diagonal, kept explicitly
 
     @property
     def n(self) -> int:
         return self.n_static
 
     def matvec(self, x: Array) -> Array:
-        # y[r] += v * x[c]; out-of-range rows dropped.
-        contrib = self.vals * jnp.take(x, self.cols, axis=-1, fill_value=0.0)
-        y = jnp.zeros(x.shape[:-1] + (self.n_static,), x.dtype)
-        return y.at[..., self.rows].add(contrib, mode="drop")
+        if self.rows.ndim == 1:
+            # y[r] += v * x[c]; out-of-range rows dropped. The output
+            # carries the broadcast batch dims of vals AND x.
+            contrib = self.vals * jnp.take(x, self.cols, axis=-1,
+                                           fill_value=0.0)
+            y = jnp.zeros(contrib.shape[:-1] + (self.n_static,), x.dtype)
+            return y.at[..., self.rows].add(contrib, mode="drop")
+        # Batched sparsity pattern: per-lane scatter in lockstep.
+        b = jnp.broadcast_shapes(self.rows.shape[:-1], x.shape[:-1])
+        nnz = self.rows.shape[-1]
+        n = self.n_static
+
+        def flat(a, last):
+            return jnp.broadcast_to(a, b + (last,)).reshape((-1, last))
+
+        def one(r, c, v, xx):
+            contrib = v * jnp.take(xx, c, fill_value=0.0)
+            return jnp.zeros((n,), xx.dtype).at[r].add(contrib, mode="drop")
+
+        y = jax.vmap(one)(flat(self.rows, nnz), flat(self.cols, nnz),
+                          flat(self.vals, nnz), flat(x, x.shape[-1]))
+        return y.reshape(b + (n,))
 
     def diag(self) -> Array:
         return self.diag_vals
@@ -96,6 +116,106 @@ def sparse_from_dense(a, nnz: int | None = None) -> SparseCOO:
     v = np.concatenate([v, np.zeros(pad, dtype=v.dtype)])
     return SparseCOO(jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), n,
                      jnp.asarray(np.diagonal(a, axis1=-2, axis2=-1)))
+
+
+_BELL_MODES = ("reference", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseBELL:
+    """Symmetric sparse matrix in blocked-ELL form (DESIGN.md Sec. 6).
+
+    The layout of ``kernels/spmv_bell.py``: ``data`` (..., R, K, bs, bs)
+    holds up to K non-zero bs x bs blocks per block-row, ``cols``
+    (..., R, K) their block-column indices (padding blocks point at
+    column 0 with zero data). N may be smaller than R*bs; matvec
+    zero-pads and slices at the boundary.
+
+    ``mode`` picks the execution path: 'reference' is the pure-jnp einsum
+    (CPU / oracle), 'pallas' the scalar-prefetch MXU kernel
+    (``interpret=None`` auto-selects interpret mode off-TPU). The solver
+    rebinds both from ``SolverConfig.backend`` via ``configure_backend``.
+
+    Leading lane dims on ``data``/``cols`` (a ``stack_ops`` stack) batch
+    the system; ``x`` must then carry matching lane dims.
+    """
+    data: Array
+    cols: Array
+    diag_vals: Array  # (..., N)
+    n_static: int
+    mode: str = "reference"
+    interpret: bool | None = None
+
+    def __post_init__(self):
+        if self.mode not in _BELL_MODES:
+            raise ValueError(f"mode must be one of {_BELL_MODES}, "
+                             f"got {self.mode!r}")
+
+    @property
+    def n(self) -> int:
+        return self.n_static
+
+    def configured(self, backend: str, interpret: bool | None
+                   ) -> "SparseBELL":
+        mode = "pallas" if backend == "pallas" else "reference"
+        if mode == self.mode and interpret == self.interpret:
+            return self
+        return dataclasses.replace(self, mode=mode, interpret=interpret)
+
+    def matvec(self, x: Array) -> Array:
+        from ..kernels import spmv_bell as _sb  # deferred: pulls in pallas
+        r, _, bs, _ = self.data.shape[-4:]
+        pad = r * bs - x.shape[-1]
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+        if self.mode == "reference":
+            y = _sb.bell_matvec_ref(self.data, self.cols, xp)
+        else:
+            from ..kernels import ops as _kops
+            lanes = jnp.broadcast_shapes(self.data.shape[:-4], xp.shape[:-1])
+            xb = jnp.broadcast_to(xp, lanes + xp.shape[-1:])
+            kern = lambda d, c, v: _kops.bell_matvec(  # noqa: E731
+                d, c, v.astype(jnp.float32), interpret=self.interpret)
+            if not lanes:
+                y = kern(self.data, self.cols, xb)
+            elif self.data.ndim == 4:
+                flat = xb.reshape((-1, xb.shape[-1]))
+                y = jax.vmap(lambda v: kern(self.data, self.cols, v))(flat)
+            else:
+                db = jnp.broadcast_to(self.data, lanes + self.data.shape[-4:])
+                cb = jnp.broadcast_to(self.cols, lanes + self.cols.shape[-2:])
+                y = jax.vmap(kern)(
+                    db.reshape((-1,) + db.shape[-4:]),
+                    cb.reshape((-1,) + cb.shape[-2:]),
+                    xb.reshape((-1, xb.shape[-1])))
+            y = y.reshape(lanes + y.shape[-1:]).astype(x.dtype)
+        return y[..., :self.n_static] if pad else y
+
+    def diag(self) -> Array:
+        return self.diag_vals
+
+
+_register(SparseBELL, ["data", "cols", "diag_vals"],
+          ["n_static", "mode", "interpret"])
+
+
+def bell_from_dense(a, bs: int = 128, k_max: int | None = None,
+                    dtype=None, mode: str = "reference",
+                    interpret: bool | None = None) -> SparseBELL:
+    """Build a blocked-ELL operator from a dense (numpy/jnp) matrix.
+
+    ``dtype=None`` keeps the input dtype (the Pallas kernel itself always
+    accumulates in f32; pass f32 data for the TPU path).
+    """
+    import numpy as np
+
+    from ..kernels import spmv_bell as _sb
+
+    a = np.asarray(a)
+    data, cols, n = _sb.dense_to_bell(
+        a, bs=bs, k_max=k_max, dtype=a.dtype if dtype is None else dtype)
+    return SparseBELL(data, cols, jnp.asarray(np.diagonal(a).copy(),
+                                              data.dtype),
+                      n, mode=mode, interpret=interpret)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,3 +322,59 @@ class MatvecFn:
 
 
 _register(MatvecFn, ["diag_vals"], ["fn", "n_static"])
+
+
+# ---------------------------------------------------------------------------
+# Batched-system helpers (DESIGN.md Sec. 6)
+
+
+def stack_ops(ops):
+    """Stack K same-structure operators into ONE lane-batched operator.
+
+    Every array leaf gains a leading lane axis (``Dense.a`` becomes
+    (K, N, N), ``SparseBELL.data`` (K, R, Kb, bs, bs), ...); static
+    metadata (n, mode, ...) must agree. The result is a single pytree the
+    batched driver can ``matvec`` once per iteration over all K systems.
+    For K masks of one shared base matrix prefer :func:`stack_masks`,
+    which does not copy the base.
+    """
+    ops = list(ops)
+    if not ops:
+        raise ValueError("stack_ops needs at least one operator")
+    treedef = jax.tree.structure(ops[0])
+    for o in ops[1:]:
+        if jax.tree.structure(o) != treedef:
+            raise ValueError(
+                f"stack_ops needs same-structure operators; got {treedef} "
+                f"vs {jax.tree.structure(o)}")
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *ops)
+
+
+def stack_masks(base, masks) -> Masked:
+    """K candidate principal-submatrix masks of ONE base matrix as a
+    single lane-batched ``Masked`` operator (the base is shared, not
+    copied: only the (K, N) mask is materialized per lane).
+
+    ``masks``: (K, N) array or a sequence of (N,) masks. Feed the result
+    plus (K, N)-stacked query vectors to ``BIFSolver.solve_batch`` /
+    ``judge_batch`` to score all K candidates in one driver.
+    """
+    if not isinstance(masks, jax.Array):
+        masks = jnp.stack([jnp.asarray(m) for m in masks])
+    if masks.ndim < 2:
+        raise ValueError(f"stack_masks wants (K, N) masks, got shape "
+                         f"{masks.shape}")
+    return Masked(base, masks)
+
+
+def configure_backend(op, backend: str, interpret: bool | None):
+    """Rebind the execution mode of every ``SparseBELL`` inside ``op``
+    (walking Masked/Shifted/Jacobi wrappers) to the solver's backend."""
+    if isinstance(op, SparseBELL):
+        return op.configured(backend, interpret)
+    if isinstance(op, (Masked, Shifted, Jacobi)):
+        new_base = configure_backend(op.base, backend, interpret)
+        if new_base is op.base:
+            return op
+        return dataclasses.replace(op, base=new_base)
+    return op

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 from . import bounds as _bounds
 from . import solver as _solver
+from .deprecation import warn_once as _warn_once
 
 
 def preconditioned_bif_bounds(op, u, *, max_iters: int, rtol: float = 1e-2,
@@ -29,6 +30,8 @@ def preconditioned_bif_bounds(op, u, *, max_iters: int, rtol: float = 1e-2,
     .. deprecated:: use ``BIFSolver(SolverConfig(precondition='jacobi',
        spectrum='lanczos', ...))`` directly.
     """
+    _warn_once("precond.preconditioned_bif_bounds",
+               "BIFSolver with SolverConfig(precondition='jacobi')")
     res = _solver.BIFSolver.create(
         max_iters=max_iters, rtol=rtol, atol=atol, precondition="jacobi",
         spectrum="lanczos", spectrum_iters=spectrum_iters).solve(

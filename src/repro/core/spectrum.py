@@ -41,6 +41,19 @@ def gershgorin_bounds(op, probe_rows: Array | None = None) -> SpectrumBounds:
     return SpectrumBounds(jnp.min(d - r, axis=-1), jnp.max(d + r, axis=-1))
 
 
+def gershgorin_bounds_spd(op) -> SpectrumBounds:
+    """Gershgorin interval clamped for an SPD matrix.
+
+    Gershgorin discs of an SPD matrix may still dip below zero; f(x)=1/x
+    quadrature needs lam_min > 0, and a tiny positive lam_min only
+    loosens the upper bounds (Fig. 1b), never breaks them. The ONE clamp
+    rule shared by ``BIFSolver.prepare`` and ``serve.BIFEngine``.
+    """
+    est = gershgorin_bounds(op)
+    return SpectrumBounds(
+        jnp.maximum(est.lam_min, est.lam_max * 1e-9 + 1e-30), est.lam_max)
+
+
 def lanczos_extremal(op, probe: Array, num_iters: int = 16,
                      slack: float = 1e-2) -> SpectrumBounds:
     """Ritz-value interval from ``num_iters`` Lanczos steps on ``probe``.

@@ -22,6 +22,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(cols_ref, d_ref, x_ref, o_ref):
     k = pl.program_id(1)
@@ -54,18 +58,47 @@ def bell_matvec(data: jax.Array, cols: jax.Array, x: jax.Array, *,
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((r * bs,), jnp.float32),
+        # the output block for step (r, k) accumulates over k: the block-row
+        # axis is parallel, the block-column walk is not
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(cols, data, x)
 
 
-def dense_to_bell(a, bs: int = 128, k_max: int | None = None):
+def bell_matvec_ref(data: jax.Array, cols: jax.Array, x: jax.Array
+                    ) -> jax.Array:
+    """Reference blocked-ELL SpMV in pure jnp, batched over leading dims.
+
+    ``data``/``cols`` may carry leading batch dims matching ``x``'s (a
+    stacked operator), or none (one matrix shared across all lanes of
+    ``x``). Computes in ``x.dtype`` (the Pallas kernel is fixed to f32).
+    """
+    r, k, bs, _ = data.shape[-4:]
+    xb = x.reshape(x.shape[:-1] + (r, bs))
+    if cols.ndim == 2:
+        gathered = xb[..., cols, :]                     # (..., R, K, bs)
+        y = jnp.einsum("rkij,...rkj->...ri", data.astype(x.dtype), gathered)
+    else:
+        # stacked operator: gather each lane's x blocks by its own table
+        # (x must carry the same leading lane dims as cols)
+        flat_idx = cols.reshape(cols.shape[:-2] + (r * k,))
+        gathered = jnp.take_along_axis(xb, flat_idx[..., None], axis=-2)
+        gathered = gathered.reshape(cols.shape[:-2] + (r, k, bs))
+        y = jnp.einsum("...rkij,...rkj->...ri", data.astype(x.dtype),
+                       gathered)
+    return y.reshape(x.shape[:-1] + (r * bs,))
+
+
+def dense_to_bell(a, bs: int = 128, k_max: int | None = None,
+                  dtype=np.float32):
     """Convert a dense (numpy) symmetric matrix to blocked-ELL arrays.
 
-    Returns (data (R,K,bs,bs) f32, cols (R,K) i32, n). Zero-pads N up to
+    Returns (data (R,K,bs,bs), cols (R,K) i32, n). Zero-pads N up to
     a multiple of ``bs``; rows with fewer than K non-zero blocks are
     padded with zero blocks pointing at column 0.
     """
-    a = np.asarray(a, np.float32)
+    a = np.asarray(a, dtype)
     n = a.shape[0]
     npad = -n % bs
     if npad:
@@ -77,7 +110,7 @@ def dense_to_bell(a, bs: int = 128, k_max: int | None = None):
     per_row = nz.sum(axis=1)
     k = int(per_row.max()) if k_max is None else k_max
     k = max(k, 1)
-    data = np.zeros((r, k, bs, bs), np.float32)
+    data = np.zeros((r, k, bs, bs), a.dtype)
     cols = np.zeros((r, k), np.int32)
     for i in range(r):
         js = np.nonzero(nz[i])[0][:k]

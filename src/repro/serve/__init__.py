@@ -1,2 +1,2 @@
-from .engine import Engine, Request  # noqa: F401
-from .kv_select import select_diverse_blocks  # noqa: F401
+from .engine import BIFEngine, BIFRequest, Engine, Request  # noqa: F401
+from .kv_select import rank_blocks, select_diverse_blocks  # noqa: F401

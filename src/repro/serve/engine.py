@@ -1,9 +1,15 @@
-"""Batched serving engine: prefill + decode with KV caches.
+"""Batched serving engines.
 
-A deliberately small but real engine: request queue, padded batching,
-greedy/temperature sampling, per-request stop handling, int8 KV option.
-The heavy lifting (sharded steps) comes from launch.steps; on CPU tests
-this runs the same code unsharded.
+``Engine``: prefill + decode with KV caches — request queue, padded
+batching, greedy/temperature sampling, per-request stop handling, int8
+KV option. The heavy lifting (sharded steps) comes from launch.steps; on
+CPU tests this runs the same code unsharded.
+
+``BIFEngine``: the quadrature-serving counterpart (DESIGN.md Sec. 6) —
+queues incoming bilinear-inverse-form requests against one kernel
+matrix and flushes them through ``BIFSolver.solve_batch`` in padded
+lanes of ``max_batch``, so K concurrent judges cost one batched driver
+instead of K sequential solves.
 """
 from __future__ import annotations
 
@@ -14,6 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import operators as core_ops
+from ..core import spectrum as core_spectrum
+from ..core.solver import BIFSolver
 from ..models import model as M
 
 
@@ -72,3 +81,117 @@ class Engine:
         for i, r in enumerate(requests):
             r.out_tokens = outs[i, :r.max_new_tokens]
         return requests
+
+
+@dataclasses.dataclass
+class BIFRequest:
+    """One bilinear-inverse-form query against the engine's matrix.
+
+    ``t`` set: threshold judge (decision = t < u^T A^-1 u, Alg. 4);
+    ``t`` None: adaptive bracket to the solver's rtol/atol.
+    ``mask``: optional principal-submatrix mask (the A_Y of a chain).
+    """
+    u: np.ndarray
+    t: Optional[float] = None
+    mask: Optional[np.ndarray] = None
+    # filled by BIFEngine.flush():
+    lower: Optional[float] = None
+    upper: Optional[float] = None
+    decision: Optional[bool] = None
+    certified: Optional[bool] = None
+    iterations: Optional[int] = None
+
+
+class BIFEngine:
+    """Batches BIF requests into ``solve_batch`` flushes.
+
+    Requests accumulate via ``submit`` and are served by ``flush`` in
+    padded lane groups of ``max_batch`` (one compiled driver shape per
+    engine). Mixed traffic is fine: judge lanes resolve on their
+    threshold, bracket lanes on tolerance, and every resolved lane
+    freezes while the rest continue — the per-lane early exit of
+    DESIGN.md Sec. 6. Dummy padding lanes (zero query) resolve at
+    iteration one and cost only their share of the stacked matvec.
+    """
+
+    def __init__(self, op, *, solver: BIFSolver | None = None,
+                 max_batch: int = 64, lam_min: float | None = None,
+                 lam_max: float | None = None):
+        self.op = op
+        self.solver = solver if solver is not None \
+            else BIFSolver.create(max_iters=64, rtol=1e-3)
+        self.max_batch = int(max_batch)
+        if lam_min is None or lam_max is None:
+            # one-time certified interval, valid for every request mask
+            # by interlacing (DESIGN.md Sec. 3.2)
+            est = core_spectrum.gershgorin_bounds_spd(op)
+            if lam_min is None:
+                lam_min = float(est.lam_min)
+            if lam_max is None:
+                lam_max = float(est.lam_max)
+        self.lam_min, self.lam_max = float(lam_min), float(lam_max)
+        self._queue: List[BIFRequest] = []
+        self._dtype = np.dtype(np.asarray(self.op.diag()).dtype)
+        cfg = self.solver.config
+
+        def run(us, masks, ts, has_t):
+            mop = core_ops.Masked(self.op, masks)
+
+            def decide(lo, hi):
+                thr = (ts < lo) | (ts >= hi)
+                tol = (hi - lo) <= jnp.maximum(cfg.atol,
+                                               cfg.rtol * jnp.abs(lo))
+                return jnp.where(has_t, thr, tol)
+
+            res = self.solver.solve_batch(mop, us, decide=decide,
+                                          lam_min=self.lam_min,
+                                          lam_max=self.lam_max)
+            decision = jnp.where(
+                ts < res.lower, True,
+                jnp.where(ts >= res.upper, False,
+                          ts < 0.5 * (res.lower + res.upper)))
+            return (res.lower, res.upper, decision,
+                    decide(res.lower, res.upper), res.iterations)
+
+        self._run = jax.jit(run)
+
+    def submit(self, req: BIFRequest) -> BIFRequest:
+        self._queue.append(req)
+        return req
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self) -> List[BIFRequest]:
+        """Serve every queued request; returns them in submission order."""
+        queue, self._queue = self._queue, []
+        n, b = self.op.n, self.max_batch
+        for start in range(0, len(queue), b):
+            chunk = queue[start:start + b]
+            try:
+                us = np.zeros((b, n), self._dtype)
+                masks = np.ones((b, n), self._dtype)
+                ts = np.zeros((b,), self._dtype)
+                has_t = np.zeros((b,), bool)
+                for i, r in enumerate(chunk):
+                    if r.mask is not None:
+                        masks[i] = r.mask
+                    # restrict the query to the mask: Masked is only the
+                    # true submatrix system for u supported on it (Sec. 3.2)
+                    us[i] = np.asarray(r.u) * masks[i]
+                    if r.t is not None:
+                        ts[i] = r.t
+                        has_t[i] = True
+                lo, hi, dec, cert, it = self._run(
+                    jnp.asarray(us), jnp.asarray(masks), jnp.asarray(ts),
+                    jnp.asarray(has_t))
+            except Exception:
+                # a malformed request must not drop the un-served tail
+                self._queue = queue[start:] + self._queue
+                raise
+            for i, r in enumerate(chunk):
+                r.lower, r.upper = float(lo[i]), float(hi[i])
+                r.decision = bool(dec[i]) if r.t is not None else None
+                r.certified = bool(cert[i])
+                r.iterations = int(it[i])
+        return queue

@@ -18,6 +18,7 @@ import numpy as np
 from ..core import double_greedy as dg
 from ..core import operators as core_ops
 from ..core.solver import BIFSolver, SolverConfig
+from .engine import BIFEngine, BIFRequest
 
 
 def pool_keys(keys: np.ndarray, block: int = 128) -> np.ndarray:
@@ -55,6 +56,41 @@ def select_diverse_blocks(keys: np.ndarray, *, block: int = 128,
                   "uncertified": int(res.uncertified),
                   "log_det": float(res.log_det),
                   "kept": int(mask.sum()), "blocks": n}
+
+
+def rank_blocks(keys: np.ndarray, *, block: int = 128, ridge: float = 1e-3,
+                bandwidth: float = 0.5, max_batch: int = 32,
+                solver_config: SolverConfig | None = None):
+    """Certified redundancy ranking of pooled key blocks, served batched.
+
+    Block i's score is the bilinear form  k_i^T K^-1 k_i  of its kernel
+    column — high means block i is well explained by the others (safe to
+    evict first). All N candidate BIFs go through a :class:`BIFEngine`
+    in padded lane groups of ``max_batch``: one batched driver per
+    flush group instead of N sequential solves.
+
+    Returns ``(order, stats)`` with ``order`` the block indices most-
+    redundant first and per-block certified brackets in ``stats``.
+    """
+    pooled = pool_keys(keys, block)
+    n = len(pooled)
+    d2 = ((pooled[:, None, :] - pooled[None, :, :]) ** 2).sum(-1)
+    kmat = np.exp(-d2 / (2 * bandwidth ** 2)) + ridge * np.eye(n)
+    op = core_ops.Dense(jnp.asarray(kmat, jnp.float32))
+    if solver_config is None:
+        solver_config = SolverConfig(max_iters=n + 2, rtol=1e-3)
+    engine = BIFEngine(op, solver=BIFSolver(solver_config),
+                       max_batch=max_batch)
+    reqs = [engine.submit(BIFRequest(u=kmat[:, i].astype(np.float32)))
+            for i in range(n)]
+    engine.flush()
+    mids = np.array([0.5 * (r.lower + r.upper) for r in reqs])
+    order = np.argsort(-mids)
+    return order, {
+        "brackets": [(r.lower, r.upper) for r in reqs],
+        "iterations": int(sum(r.iterations for r in reqs)),
+        "certified": int(sum(r.certified for r in reqs)),
+        "flushes": -(-n // max_batch), "blocks": n}
 
 
 def apply_block_mask(cache_k: jax.Array, cache_v: jax.Array,

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from ..core import bounds as core_bounds
 from ..core import operators as core_ops
+from ..core import solver as core_solver
 from ..core import spectrum as core_spectrum
 
 
@@ -55,8 +56,11 @@ def fisher_proxy_bounds(example_sketches: jax.Array, probe: jax.Array,
     op = core_ops.MatvecFn(fn=matvec, n_static=k, diag_vals=diag)
     est = core_spectrum.lanczos_extremal(op, probe, num_iters=12)
     lam_min = max(lam * 0.5, 0.0) or float(est.lam_min)
-    return core_bounds.bif_bounds(op, probe, lam_min, float(est.lam_max),
-                                  max_iters=max_iters, rtol=1e-2)
+    res = core_solver.BIFSolver.create(max_iters=max_iters, rtol=1e-2).solve(
+        op, probe, lam_min=lam_min, lam_max=float(est.lam_max))
+    return core_bounds.BIFBounds(lower=res.lower, upper=res.upper,
+                                 iterations=res.iterations,
+                                 converged=res.converged)
 
 
 def condition_number_bounds(example_sketches: jax.Array, lam: float = 1e-3,

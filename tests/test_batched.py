@@ -1,0 +1,259 @@
+"""Batched execution path (DESIGN.md Sec. 6).
+
+1. Parity: ``solve_batch``/``judge_batch`` must reproduce the
+   per-candidate path exactly — same decisions, same per-lane iteration
+   counts, same certification — on Dense, SparseCOO, and SparseBELL,
+   including lanes that exhaust ``max_iters`` while others resolve
+   early. Brackets are bit-exact for SparseCOO (whose scatter matvec
+   reduces shape-independently); for Dense/BELL, XLA's gemv and gemm
+   reduce in different orders, so brackets agree to 1e-12 while every
+   discrete outcome stays exactly equal.
+2. SparseBELL is a pytree: jit/vmap round-trips, stacked operators.
+3. judge_argmax races to the certified winner; greedy MAP matches the
+   exact-solve algorithm.
+4. The batched pair judges decide identically to the gap-weighted pair
+   driver.
+5. BIFEngine flushes mixed judge/bracket traffic in max_batch lanes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BIFSolver, Dense, Masked, SparseBELL, \
+    bell_from_dense, greedy_map, sparse_from_dense, stack_masks, stack_ops
+from repro.serve import BIFEngine, BIFRequest
+from conftest import make_spd
+
+
+def _problem(n=48, k=6, kappa=150.0, seed=0, density=0.3):
+    a = make_spd(n, kappa=kappa, seed=seed, density=density)
+    w = np.linalg.eigvalsh(a)
+    us = np.random.default_rng(seed + 1).standard_normal((k, n))
+    true = np.einsum("ki,ki->k", us, np.linalg.solve(a, us.T).T)
+    return a, jnp.asarray(us), true, float(w[0] * 0.99), float(w[-1] * 1.01)
+
+
+def _ops(a):
+    return {"dense": Dense(jnp.asarray(a)),
+            "sparse": sparse_from_dense(a),
+            "bell": bell_from_dense(a, bs=16)}
+
+
+@pytest.mark.parametrize("op_kind", ["dense", "sparse", "bell"])
+def test_solve_batch_matches_per_candidate(op_kind):
+    a, us, true, lmn, lmx = _problem()
+    op = _ops(a)[op_kind]
+    s = BIFSolver.create(max_iters=50, rtol=1e-4)
+    got = s.solve_batch(op, us, lam_min=lmn, lam_max=lmx)
+    loop = [s.solve(op, us[i], lam_min=lmn, lam_max=lmx)
+            for i in range(us.shape[0])]
+    np.testing.assert_array_equal(
+        np.asarray(got.iterations), [int(r.iterations) for r in loop])
+    np.testing.assert_array_equal(
+        np.asarray(got.certified), [bool(r.certified) for r in loop])
+    for field in ("lower", "upper", "gauss_lower", "lobatto_upper"):
+        batched = np.asarray(getattr(got, field))
+        single = np.array([float(getattr(r, field)) for r in loop])
+        if op_kind == "sparse":
+            np.testing.assert_array_equal(batched, single)
+        else:
+            np.testing.assert_allclose(batched, single, rtol=1e-12)
+    # the vmapped per-lane driver agrees the same way (same lockstep
+    # semantics; same gemm caveat)
+    vm = jax.vmap(lambda u: s.solve(op, u, lam_min=lmn, lam_max=lmx))(us)
+    np.testing.assert_array_equal(np.asarray(vm.iterations),
+                                  np.asarray(got.iterations))
+    np.testing.assert_allclose(np.asarray(vm.lower), np.asarray(got.lower),
+                               rtol=1e-12)
+    assert np.all(np.asarray(got.lower) <= true * (1 + 1e-9))
+    assert np.all(np.asarray(got.upper) >= true * (1 - 1e-9))
+
+
+@pytest.mark.parametrize("op_kind", ["dense", "sparse", "bell"])
+def test_judge_batch_matches_per_candidate_with_exhaustion(op_kind):
+    """One lane's threshold sits on the knife edge (t = true to 1e-12):
+    it must burn to max_iters uncertified while the rest exit early."""
+    a, us, true, lmn, lmx = _problem(k=5)
+    op = _ops(a)[op_kind]
+    s = BIFSolver.create(max_iters=12)
+    ts = jnp.asarray(true * np.array([0.5, 0.95, 1.0 + 1e-12, 1.05, 2.0]))
+    got = s.judge_batch(op, us, ts, lam_min=lmn, lam_max=lmx)
+    loop = [s.judge_threshold(op, us[i], ts[i], lam_min=lmn, lam_max=lmx)
+            for i in range(us.shape[0])]
+    np.testing.assert_array_equal(
+        np.asarray(got.decision), [bool(r.decision) for r in loop])
+    np.testing.assert_array_equal(
+        np.asarray(got.iterations), [int(r.iterations) for r in loop])
+    np.testing.assert_array_equal(
+        np.asarray(got.certified), [bool(r.certified) for r in loop])
+    # the knife-edge lane exhausted; its early-exit neighbors did not
+    assert int(got.iterations[2]) == 12 and not bool(got.certified[2])
+    assert int(got.iterations[0]) < 12 and bool(got.certified[0])
+
+
+def test_solve_batch_on_stacked_ops_and_masks():
+    """K *different* systems (stack_ops) and K submatrices of one base
+    (stack_masks) both run as lanes of one driver."""
+    n, k = 32, 4
+    mats = [make_spd(n, kappa=60.0, seed=s) for s in range(k)]
+    w = [np.linalg.eigvalsh(m) for m in mats]
+    lmn = min(v[0] for v in w) * 0.99
+    lmx = max(v[-1] for v in w) * 1.01
+    us = jnp.asarray(np.random.default_rng(9).standard_normal((k, n)))
+    s = BIFSolver.create(max_iters=n + 2, rtol=1e-4)
+
+    for kind in ("dense", "sparse", "bell"):
+        stacked = stack_ops([_ops(m)[kind] for m in mats])
+        got = s.solve_batch(stacked, us, lam_min=lmn, lam_max=lmx)
+        for i, m in enumerate(mats):
+            true = float(us[i] @ np.linalg.solve(m, np.asarray(us[i])))
+            assert float(got.lower[i]) <= true * 1.0001, kind
+            assert float(got.upper[i]) >= true * 0.9999, kind
+
+    base = Dense(jnp.asarray(mats[0]))
+    masks = (np.random.default_rng(3).random((k, n)) < 0.6).astype(float)
+    mop = stack_masks(base, jnp.asarray(masks))
+    usm = us * masks
+    got = s.solve_batch(mop, usm, lam_min=lmn, lam_max=lmx)
+    loop = [s.solve(Masked(base, jnp.asarray(masks[i])), usm[i],
+                    lam_min=lmn, lam_max=lmx) for i in range(k)]
+    np.testing.assert_array_equal(np.asarray(got.iterations),
+                                  [int(r.iterations) for r in loop])
+    np.testing.assert_allclose(np.asarray(got.lower),
+                               [float(r.lower) for r in loop], rtol=1e-12)
+
+
+def test_sparse_bell_pytree_jit_vmap_roundtrip():
+    a = make_spd(40, kappa=80.0, seed=2, density=0.2)
+    op = bell_from_dense(a, bs=8)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(40))
+
+    leaves, treedef = jax.tree.flatten(op)
+    back = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(back, SparseBELL)
+    assert back.n == op.n and back.mode == op.mode
+
+    ref = a @ np.asarray(x)
+    jit_y = jax.jit(lambda o, v: o.matvec(v))(op, x)
+    np.testing.assert_allclose(np.asarray(jit_y), ref, rtol=1e-9)
+
+    stacked = stack_ops([op, op])
+    xs = jnp.stack([x, 2.0 * x])
+    vm = jax.vmap(lambda o, v: o.matvec(v))(stacked, xs)
+    np.testing.assert_allclose(np.asarray(vm[1]), 2.0 * ref, rtol=1e-9)
+    # mode survives the stack (static metadata)
+    assert stacked.mode == "reference"
+
+
+def test_judge_argmax_certified_and_early_exit():
+    a, us, true, lmn, lmx = _problem(k=8, seed=5)
+    op = Dense(jnp.asarray(a))
+    s = BIFSolver.create(max_iters=50)
+    res = s.judge_argmax(op, us, lam_min=lmn, lam_max=lmx)
+    assert int(res.index) == int(np.argmax(true))
+    assert bool(res.certified)
+    # dominated lanes froze before the winner finished refining
+    iters = np.asarray(res.iterations)
+    assert iters.min() < iters[int(res.index)] or iters.max() <= 2
+    # per-lane shift/scale: maximize d_k - BIF_k (greedy MAP scoring)
+    d = jnp.asarray(30.0 * np.abs(true))
+    res2 = s.judge_argmax(op, us, shift=d, scale=-1.0, lam_min=lmn,
+                          lam_max=lmx)
+    assert int(res2.index) == int(np.argmax(np.asarray(d) - true))
+    # valid mask excludes the winner; next-best lane must win
+    valid = jnp.ones((8,), bool).at[res.index].set(False)
+    res3 = s.judge_argmax(op, us, valid=valid, lam_min=lmn, lam_max=lmx)
+    scores = true.copy()
+    scores[int(res.index)] = -np.inf
+    assert int(res3.index) == int(np.argmax(scores))
+
+
+def test_greedy_map_matches_exact():
+    n = 28
+    a = make_spd(n, kappa=60.0, seed=7)
+    d = np.sqrt(np.diag(a))
+    a = a / np.outer(d, d) + 0.1 * np.eye(n)
+    w = np.linalg.eigvalsh(a)
+    op = Dense(jnp.asarray(a))
+    rq = greedy_map(op, 6, w[0] * 0.99, w[-1] * 1.01, max_iters=n + 2)
+    re = greedy_map(op, 6, w[0] * 0.99, w[-1] * 1.01, max_iters=n + 2,
+                    exact=True)
+    np.testing.assert_array_equal(np.asarray(rq.order), np.asarray(re.order))
+    assert int(rq.uncertified) == 0
+    assert int(rq.mask.sum()) == 6
+
+
+@pytest.mark.parametrize("seed", [0, 4, 9])
+def test_batched_pair_judges_match_pair_driver(seed):
+    n = 30
+    a = make_spd(n, kappa=100.0, seed=seed)
+    w = np.linalg.eigvalsh(a)
+    lmn, lmx = w[0] * 0.99, w[-1] * 1.01
+    rng = np.random.default_rng(seed + 7)
+    mask = (rng.random(n) < 0.5).astype(np.float64)
+    mask[:2] = [1.0, 0.0]
+    u = jnp.asarray(rng.standard_normal(n) * mask)
+    v = jnp.asarray(rng.standard_normal(n) * mask)
+    p = jnp.asarray(rng.uniform(0.05, 0.95))
+    t = jnp.asarray(rng.standard_normal() * 0.1)
+    op = Masked(Dense(jnp.asarray(a)), jnp.asarray(mask))
+    s = BIFSolver.create(max_iters=n + 2)
+    pair = s.judge_kdpp_swap(op, u, op, v, t, p, lam_min=lmn, lam_max=lmx)
+    bat = s.judge_kdpp_swap_batch(op, u, v, t, p, lam_min=lmn, lam_max=lmx)
+    assert bool(pair.decision) == bool(bat.decision)
+    assert bool(bat.certified)
+
+    x_mask = np.zeros(n)
+    x_mask[rng.choice(n, 5, replace=False)] = 1.0
+    y_mask = np.ones(n)
+    i = int(np.argmax(x_mask == 0))
+    x_mask[i], y_mask[i] = 0.0, 0.0
+    col = a[:, i]
+    base = Dense(jnp.asarray(a))
+    pair = s.judge_double_greedy(
+        Masked(base, jnp.asarray(x_mask)), jnp.asarray(col * x_mask),
+        Masked(base, jnp.asarray(y_mask)), jnp.asarray(col * y_mask),
+        jnp.asarray(a[i, i]), p, lam_min=lmn, lam_max=lmx)
+    bat = s.judge_double_greedy_batch(
+        stack_masks(base, jnp.asarray(np.stack([x_mask, y_mask]))),
+        jnp.asarray(np.stack([col * x_mask, col * y_mask])),
+        jnp.asarray(a[i, i]), p, lam_min=lmn, lam_max=lmx)
+    assert bool(pair.decision) == bool(bat.decision)
+
+
+def test_bif_engine_flushes_mixed_traffic_in_chunks():
+    n = 36
+    a = make_spd(n, kappa=90.0, seed=1)
+    op = Dense(jnp.asarray(a))
+    engine = BIFEngine(op, solver=BIFSolver.create(max_iters=n + 2,
+                                                   rtol=1e-4),
+                       max_batch=4)
+    rng = np.random.default_rng(2)
+    us = rng.standard_normal((11, n))
+    true = np.einsum("ki,ki->k", us, np.linalg.solve(a, us.T).T)
+    reqs = []
+    for i, u in enumerate(us):
+        t = float(true[i] * (0.9 if i % 2 else 1.1)) if i % 3 else None
+        reqs.append(engine.submit(BIFRequest(u=u, t=t)))
+    assert engine.pending() == 11
+    out = engine.flush()
+    assert engine.pending() == 0 and len(out) == 11
+    for i, r in enumerate(out):
+        assert r.lower <= true[i] * 1.0001
+        assert r.upper >= true[i] * 0.9999
+        if r.t is None:
+            assert r.decision is None
+        else:
+            assert r.decision == (r.t < true[i])
+            assert r.certified
+    # masked request against a principal submatrix; the engine restricts
+    # the query to the mask itself, so raw (unmasked) u is the natural call
+    mask = (rng.random(n) < 0.5).astype(float)
+    req = engine.submit(BIFRequest(u=us[0], mask=mask))
+    engine.flush()
+    um = us[0] * mask
+    mm = np.diag(mask)
+    am = mm @ a @ mm + np.eye(n) - mm
+    tv = um @ np.linalg.solve(am, um)
+    assert req.lower <= tv * 1.0001 and req.upper >= tv * 0.9999

@@ -1,0 +1,74 @@
+"""The legacy shims warn (DeprecationWarning) exactly once each."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bif_bounds, bif_refine_until, deprecation, \
+    judge_double_greedy, judge_kdpp_swap, judge_threshold, \
+    preconditioned_bif_bounds, Dense
+from conftest import make_spd
+
+
+@pytest.fixture
+def prob():
+    n = 16
+    a = make_spd(n, kappa=30.0, seed=0)
+    w = np.linalg.eigvalsh(a)
+    u = jnp.asarray(np.random.default_rng(1).standard_normal(n))
+    return Dense(jnp.asarray(a)), u, float(w[0] * 0.99), float(w[-1] * 1.01)
+
+
+def _calls(prob):
+    op, u, lmn, lmx = prob
+    t = jnp.asarray(0.5)
+    p = jnp.asarray(0.5)
+    decided = lambda lo, hi: (t < lo) | (t >= hi)  # noqa: E731
+    return {
+        "bif_bounds": lambda: bif_bounds(op, u, lmn, lmx, max_iters=6),
+        "bif_refine_until": lambda: bif_refine_until(
+            op, u, lmn, lmx, max_iters=6, decided_fn=decided),
+        "judge_threshold": lambda: judge_threshold(
+            op, u, t, lmn, lmx, max_iters=6),
+        "judge_kdpp_swap": lambda: judge_kdpp_swap(
+            op, u, op, u, t, p, lmn, lmx, max_iters=6),
+        "judge_double_greedy": lambda: judge_double_greedy(
+            op, u, op, u, t, p, lmn, lmx, max_iters=6),
+        "preconditioned_bif_bounds": lambda: preconditioned_bif_bounds(
+            op, u, max_iters=6),
+    }
+
+
+@pytest.mark.parametrize("name", ["bif_bounds", "bif_refine_until",
+                                  "judge_threshold", "judge_kdpp_swap",
+                                  "judge_double_greedy",
+                                  "preconditioned_bif_bounds"])
+def test_shim_warns_deprecation_once(prob, name):
+    call = _calls(prob)[name]
+    deprecation.reset()
+    with pytest.warns(DeprecationWarning, match=name):
+        call()
+    # second call is silent: once per process, not per call site
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        call()
+
+
+def test_internal_callers_stay_silent(prob):
+    """BIFSolver methods and the applications never trip the shims."""
+    from repro.core import BIFSolver, greedy_map, run_double_greedy, \
+        sample_dpp
+    import jax
+
+    op, u, lmn, lmx = prob
+    deprecation.reset()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        s = BIFSolver.create(max_iters=6)
+        s.solve(op, u, lam_min=lmn, lam_max=lmx)
+        s.judge_threshold(op, u, jnp.asarray(0.5), lam_min=lmn, lam_max=lmx)
+        sample_dpp(op, jax.random.key(0), jnp.zeros((op.n,)), 3, lmn, lmx,
+                   max_iters=6)
+        greedy_map(op, 2, lmn, lmx, max_iters=6)
+        run_double_greedy(op, jax.random.key(0), lmn, lmx, max_iters=6)
