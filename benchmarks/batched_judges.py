@@ -48,8 +48,13 @@ def _bench_one(op, us, ts, solver, lam_min, lam_max):
     def loop():
         return [one(us[i], ts[i]) for i in range(k)]
 
-    batch = jax.jit(lambda: solver.judge_batch(
-        op, us, ts, lam_min=lam_min, lam_max=lam_max))
+    # us/ts are runtime arguments on BOTH sides so XLA can't specialize
+    # the batched call against constant operands
+    batch_fn = jax.jit(lambda us_, ts_: solver.judge_batch(
+        op, us_, ts_, lam_min=lam_min, lam_max=lam_max))
+
+    def batch():
+        return batch_fn(us, ts)
 
     res_loop = loop()
     res_batch = jax.block_until_ready(batch())

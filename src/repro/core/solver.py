@@ -263,6 +263,22 @@ class BIFSolver:
         return jax.lax.dynamic_update_index_in_dim(
             basis, st0.lz.v, 1, axis=-2)       # v_1
 
+    def tolerance_resolved(self, lower: Array, upper: Array) -> Array:
+        """The ``decide=None`` stopping rule: bracket gap within the
+        configured ``atol``/``rtol`` of the lower bound. The single
+        definition shared by ``solve`` and ``serve.BIFEngine`` so the
+        serving path can't drift from the solver's rule."""
+        return (upper - lower) <= jnp.maximum(
+            self.config.atol, self.config.rtol * jnp.abs(lower))
+
+    @staticmethod
+    def threshold_decision(t: Array, lower: Array, upper: Array) -> Array:
+        """Alg. 4 decision from a bracket: certified when ``t`` clears
+        [lower, upper); bracket-midpoint tie-break when it doesn't."""
+        return jnp.where(t < lower, True,
+                         jnp.where(t >= upper, False,
+                                   t < 0.5 * (lower + upper)))
+
     def solve(self, op, u: Array,
               decide: Callable[[Array, Array], Array] | None = None, *,
               lam_min=None, lam_max=None, probe=None) -> SolveResult:
@@ -281,9 +297,8 @@ class BIFSolver:
 
         if decide is None:
             def resolved(st):
-                gap = _gql.gap(st)
-                return gap <= jnp.maximum(
-                    cfg.atol, cfg.rtol * jnp.abs(_gql.lower_bound(st)))
+                return self.tolerance_resolved(_gql.lower_bound(st),
+                                               _gql.upper_bound(st))
         else:
             def resolved(st):
                 return decide(_gql.lower_bound(st), _gql.upper_bound(st))
@@ -349,10 +364,7 @@ class BIFSolver:
         """Alg. 4 (DPPJUDGE): True iff  t < u^T A^-1 u."""
         res = self.solve(op, u, decide=lambda lo, hi: (t < lo) | (t >= hi),
                          lam_min=lam_min, lam_max=lam_max, probe=probe)
-        decision = jnp.where(
-            t < res.lower, True,
-            jnp.where(t >= res.upper, False,
-                      t < 0.5 * (res.lower + res.upper)))
+        decision = self.threshold_decision(t, res.lower, res.upper)
         return JudgeResult(decision=decision, certified=res.certified,
                            iterations=res.iterations)
 
@@ -486,9 +498,7 @@ class BIFSolver:
         res = self.solve_batch(op, uv, decide=resolved, lam_min=lam_min,
                                lam_max=lam_max)
         blo, bhi = bounds(res.lower, res.upper)
-        decision = jnp.where(t < blo, True,
-                             jnp.where(t >= bhi, False,
-                                       t < 0.5 * (blo + bhi)))
+        decision = self.threshold_decision(t, blo, bhi)
         return JudgeResult(decision=decision,
                            certified=(t < blo) | (t >= bhi),
                            iterations=jnp.sum(res.iterations, axis=-1,
@@ -617,8 +627,7 @@ class BIFSolver:
             pick_a=lambda st: _gql.gap(st.a) > p * _gql.gap(st.b),
             lam_min=lam_min, lam_max=lam_max)
         lo, hi = bounds(st)
-        decision = jnp.where(t < lo, True,
-                             jnp.where(t >= hi, False, t < 0.5 * (lo + hi)))
+        decision = self.threshold_decision(t, lo, hi)
         return JudgeResult(decision=decision, certified=resolved(st),
                            iterations=st.a.it + st.b.it)
 

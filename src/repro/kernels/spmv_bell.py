@@ -54,15 +54,18 @@ def bell_matvec(data: jax.Array, cols: jax.Array, x: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((bs,), lambda r, k, cols: (r,)),
     )
+    extra = {}
+    if _CompilerParams is not None:
+        # the output block for step (r, k) accumulates over k: the block-row
+        # axis is parallel, the block-column walk is not
+        extra["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
     return pl.pallas_call(
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((r * bs,), jnp.float32),
-        # the output block for step (r, k) accumulates over k: the block-row
-        # axis is parallel, the block-column walk is not
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
+        **extra,
     )(cols, data, x)
 
 

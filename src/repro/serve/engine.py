@@ -100,6 +100,9 @@ class BIFRequest:
     decision: Optional[bool] = None
     certified: Optional[bool] = None
     iterations: Optional[int] = None
+    # set when a flush failed on this request's chunk (the request is
+    # dropped from the queue; resubmit to retry a transient failure)
+    error: Optional[Exception] = None
 
 
 class BIFEngine:
@@ -132,30 +135,47 @@ class BIFEngine:
         self.lam_min, self.lam_max = float(lam_min), float(lam_max)
         self._queue: List[BIFRequest] = []
         self._dtype = np.dtype(np.asarray(self.op.diag()).dtype)
-        cfg = self.solver.config
+        solver = self.solver
 
         def run(us, masks, ts, has_t):
             mop = core_ops.Masked(self.op, masks)
 
             def decide(lo, hi):
+                # judge lanes resolve on their threshold, bracket lanes
+                # on the solver's own tolerance rule
                 thr = (ts < lo) | (ts >= hi)
-                tol = (hi - lo) <= jnp.maximum(cfg.atol,
-                                               cfg.rtol * jnp.abs(lo))
-                return jnp.where(has_t, thr, tol)
+                return jnp.where(has_t, thr,
+                                 solver.tolerance_resolved(lo, hi))
 
-            res = self.solver.solve_batch(mop, us, decide=decide,
-                                          lam_min=self.lam_min,
-                                          lam_max=self.lam_max)
-            decision = jnp.where(
-                ts < res.lower, True,
-                jnp.where(ts >= res.upper, False,
-                          ts < 0.5 * (res.lower + res.upper)))
+            res = solver.solve_batch(mop, us, decide=decide,
+                                     lam_min=self.lam_min,
+                                     lam_max=self.lam_max)
+            decision = BIFSolver.threshold_decision(ts, res.lower,
+                                                    res.upper)
             return (res.lower, res.upper, decision,
                     decide(res.lower, res.upper), res.iterations)
 
         self._run = jax.jit(run)
 
     def submit(self, req: BIFRequest) -> BIFRequest:
+        """Queue one request. Shapes are validated here so a malformed
+        request is rejected at the door instead of poisoning a flush."""
+        n = self.op.n
+        u = np.asarray(req.u)
+        if u.shape != (n,):
+            raise ValueError(
+                f"BIFRequest.u must have shape ({n},), got {u.shape}")
+        if req.mask is not None and np.asarray(req.mask).shape != (n,):
+            raise ValueError(
+                f"BIFRequest.mask must have shape ({n},), got "
+                f"{np.asarray(req.mask).shape}")
+        if req.t is not None:
+            try:
+                req.t = float(req.t)
+            except (TypeError, ValueError) as e:
+                raise ValueError(
+                    f"BIFRequest.t must be a scalar, got {req.t!r}") from e
+        req.error = None
         self._queue.append(req)
         return req
 
@@ -163,7 +183,12 @@ class BIFEngine:
         return len(self._queue)
 
     def flush(self) -> List[BIFRequest]:
-        """Serve every queued request; returns them in submission order."""
+        """Serve every queued request; returns them in submission order.
+
+        If the driver fails on a chunk, that chunk's requests get their
+        ``error`` set and are dropped (resubmit to retry), the untried
+        tail stays queued, and the exception propagates.
+        """
         queue, self._queue = self._queue, []
         n, b = self.op.n, self.max_batch
         for start in range(0, len(queue), b):
@@ -185,9 +210,16 @@ class BIFEngine:
                 lo, hi, dec, cert, it = self._run(
                     jnp.asarray(us), jnp.asarray(masks), jnp.asarray(ts),
                     jnp.asarray(has_t))
-            except Exception:
-                # a malformed request must not drop the un-served tail
-                self._queue = queue[start:] + self._queue
+            except Exception as e:
+                # keep the un-served tail, but NOT the failing chunk: a
+                # poison request requeued at the head would re-raise on
+                # every flush and wedge everything behind it. The chunk's
+                # requests carry the error so callers can tell "dropped
+                # by a failed flush" from "never flushed" and resubmit
+                # the innocent ones after a transient driver failure.
+                for r in chunk:
+                    r.error = e
+                self._queue = queue[start + len(chunk):] + self._queue
                 raise
             for i, r in enumerate(chunk):
                 r.lower, r.upper = float(lo[i]), float(hi[i])

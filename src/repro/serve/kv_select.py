@@ -63,11 +63,20 @@ def rank_blocks(keys: np.ndarray, *, block: int = 128, ridge: float = 1e-3,
                 solver_config: SolverConfig | None = None):
     """Certified redundancy ranking of pooled key blocks, served batched.
 
-    Block i's score is the bilinear form  k_i^T K^-1 k_i  of its kernel
-    column — high means block i is well explained by the others (safe to
-    evict first). All N candidate BIFs go through a :class:`BIFEngine`
-    in padded lane groups of ``max_batch``: one batched driver per
-    flush group instead of N sequential solves.
+    Block i's score is the leverage-style bilinear form
+    ``k_i[-i]^T K_{-i}^-1 k_i[-i]``: its kernel column against the
+    system with block i itself *excluded* (via the request mask) — high
+    means block i is well explained by the others (safe to evict first).
+    Excluding i matters: against the full K the form collapses to
+    ``K_ii = 1 + ridge`` identically for every block. All N candidate
+    BIFs go through a :class:`BIFEngine` in padded lane groups of
+    ``max_batch``: one batched driver per flush group instead of N
+    sequential solves.
+
+    Note each call builds a fresh :class:`BIFEngine` around the dense
+    n x n kernel and jit-compiles its flush driver, so the trace/compile
+    cost is paid per call; the fixed ``max_iters`` ceiling keeps that
+    driver small even for large caches.
 
     Returns ``(order, stats)`` with ``order`` the block indices most-
     redundant first and per-block certified brackets in ``stats``.
@@ -78,10 +87,12 @@ def rank_blocks(keys: np.ndarray, *, block: int = 128, ridge: float = 1e-3,
     kmat = np.exp(-d2 / (2 * bandwidth ** 2)) + ridge * np.eye(n)
     op = core_ops.Dense(jnp.asarray(kmat, jnp.float32))
     if solver_config is None:
-        solver_config = SolverConfig(max_iters=n + 2, rtol=1e-3)
+        solver_config = SolverConfig(max_iters=min(n + 2, 64), rtol=1e-3)
     engine = BIFEngine(op, solver=BIFSolver(solver_config),
                        max_batch=max_batch)
-    reqs = [engine.submit(BIFRequest(u=kmat[:, i].astype(np.float32)))
+    masks = 1.0 - np.eye(n, dtype=np.float32)
+    reqs = [engine.submit(BIFRequest(u=kmat[:, i].astype(np.float32),
+                                     mask=masks[i]))
             for i in range(n)]
     engine.flush()
     mids = np.array([0.5 * (r.lower + r.upper) for r in reqs])

@@ -257,3 +257,51 @@ def test_bif_engine_flushes_mixed_traffic_in_chunks():
     am = mm @ a @ mm + np.eye(n) - mm
     tv = um @ np.linalg.solve(am, um)
     assert req.lower <= tv * 1.0001 and req.upper >= tv * 0.9999
+
+
+def test_bif_engine_rejects_malformed_requests_at_submit():
+    n = 12
+    a = make_spd(n, kappa=10.0, seed=5)
+    engine = BIFEngine(Dense(jnp.asarray(a)), max_batch=4)
+    with pytest.raises(ValueError, match="u must have shape"):
+        engine.submit(BIFRequest(u=np.ones(n + 1)))
+    with pytest.raises(ValueError, match="mask must have shape"):
+        engine.submit(BIFRequest(u=np.ones(n), mask=np.ones(n - 1)))
+    with pytest.raises(ValueError, match="t must be a scalar"):
+        engine.submit(BIFRequest(u=np.ones(n), t=np.array([1.0, 2.0])))
+    # a rejected request never enters the queue, so it can't wedge a flush
+    assert engine.pending() == 0
+    good = engine.submit(BIFRequest(u=np.ones(n)))
+    engine.flush()
+    assert good.lower is not None and good.lower <= good.upper
+
+
+def test_bif_engine_failed_flush_marks_chunk_and_keeps_tail():
+    n = 12
+    a = make_spd(n, kappa=10.0, seed=6)
+    engine = BIFEngine(Dense(jnp.asarray(a)), max_batch=2)
+    rng = np.random.default_rng(7)
+    reqs = [engine.submit(BIFRequest(u=rng.standard_normal(n)))
+            for _ in range(5)]
+    orig, calls = engine._run, [0]
+
+    def flaky(*args):
+        calls[0] += 1
+        if calls[0] == 2:  # second chunk fails
+            raise RuntimeError("transient driver failure")
+        return orig(*args)
+
+    engine._run = flaky
+    with pytest.raises(RuntimeError, match="transient"):
+        engine.flush()
+    # failing chunk dropped with its error set; untried tail still queued
+    assert engine.pending() == 1
+    assert [r.error is not None for r in reqs] == [False] * 2 + [True] * 2 \
+        + [False]
+    engine._run = orig
+    engine.flush()
+    assert reqs[4].lower is not None
+    # resubmitting a failed request clears the marker and serves it
+    engine.submit(reqs[2])
+    engine.flush()
+    assert reqs[2].error is None and reqs[2].lower is not None

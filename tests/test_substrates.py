@@ -13,7 +13,7 @@ from repro.data import (DataConfig, DPPBatchStream, DPPSelector,
                         TokenStream, density, graph_laplacian, rbf_kernel)
 from repro.models import model as M
 from repro.optim import compression
-from repro.serve import Engine, Request, select_diverse_blocks
+from repro.serve import Engine, Request, rank_blocks, select_diverse_blocks
 from conftest import make_spd
 
 
@@ -122,6 +122,22 @@ def test_kv_select_diversity():
     assert stats["uncertified"] == 0
     half = len(mask) // 2
     assert mask[:half].sum() >= 1 and mask[half:].sum() >= 1
+
+
+def test_kv_rank_blocks_flags_near_duplicate_as_redundant():
+    rng = np.random.default_rng(3)
+    block, n, d = 4, 6, 8
+    dirs = rng.standard_normal((n, d))
+    dirs[-1] = dirs[0] + 0.01 * rng.standard_normal(d)  # near-duplicate pair
+    keys = np.repeat(dirs, block, axis=0).astype(np.float32)
+    keys += 0.001 * rng.standard_normal(keys.shape).astype(np.float32)
+    order, stats = rank_blocks(keys, block=block, max_batch=4)
+    # one of the duplicated pair must rank most redundant, and the pair's
+    # leverage scores must clearly separate from the distinct blocks'
+    assert order[0] in (0, n - 1)
+    mids = np.array([0.5 * (lo + hi) for lo, hi in stats["brackets"]])
+    rest = [i for i in range(1, n - 1)]
+    assert min(mids[0], mids[-1]) > mids[rest].max() + 0.1
 
 
 # ---------------------------------------------- spectrum / preconditioning
