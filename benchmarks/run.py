@@ -28,11 +28,12 @@ MODULES = [
     "quadrature_scaling",     # Thm. 3/5 rate check
     "kernel_report",          # Pallas kernel validation + accounting
     "batched_judges",         # per-candidate loop vs solve_batch (Sec. 6)
+    "sharded_judges",         # 1-dev vs 8-virtual-device lanes (Sec. 7)
 ]
 
 # Suites whose tables are ALSO written to BENCH_<name>.json at the repo
 # root, so the perf trajectory is tracked in-tree across PRs.
-ROOT_TRACKED = {"batched_judges"}
+ROOT_TRACKED = {"batched_judges", "sharded_judges"}
 
 
 def main() -> None:

@@ -1,0 +1,144 @@
+"""1-device vs 8-virtual-device scaling of the sharded batched judges
+(DESIGN.md Sec. 7).
+
+Times ``judge_batch`` on one device against ``judge_batch_sharded`` on
+an 8-virtual-CPU-device lane mesh for N in {256, 1024} x K in {8, 64}.
+On virtual devices (one physical CPU carved up by
+``--xla_force_host_platform_device_count``) NO speedup is expected —
+the lanes time-share the same cores and pay the all-gather/psum of the
+lockstep continue flag on top; the table is the artifact: it records
+the collective overhead that real multi-chip lanes must amortize, and
+it regresses loudly if the sharded driver's step count or overhead
+blows up.
+
+Because the device count must be fixed BEFORE jax initializes, each
+timing runs in a subprocess of this file (``--worker``) with its own
+``XLA_FLAGS``; the parent assembles the table
+(``BENCH_sharded_judges.json`` at the repo root via run.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SIZES = [(256, 8), (256, 64), (1024, 8), (1024, 64)]
+
+
+def _worker_main(mode: str, sizes) -> None:
+    """Runs inside a subprocess whose XLA_FLAGS are already set."""
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    ndev = len(jax.devices())
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import BIFSolver, Dense, gershgorin_bounds
+
+    def problem(n, k, seed=0, bandwidth=128):
+        # block-banded diagonally dominant SPD: the certified Gershgorin
+        # interval is tight (same generator as batched_judges)
+        rng = np.random.default_rng(seed)
+        m = rng.standard_normal((n, n))
+        band = np.abs(np.arange(n)[:, None]
+                      - np.arange(n)[None, :]) < bandwidth
+        a = (m + m.T) / 2 * band
+        a[np.diag_indices(n)] = np.abs(a).sum(axis=1) + 0.1
+        us = rng.standard_normal((k, n))
+        true = np.einsum("ki,ki->k", us, np.linalg.solve(a, us.T).T)
+        ts = true * np.where(rng.random(k) < 0.5, 0.97, 1.03)
+        return a, jnp.asarray(us), jnp.asarray(ts)
+
+    def time_fn(fn, repeats=3, warmup=1):
+        import time
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        return times[len(times) // 2]
+
+    solver = BIFSolver.create(max_iters=64, rtol=1e-3)
+    if mode == "sharded":
+        from repro.launch.mesh import make_lane_mesh
+        mesh = make_lane_mesh()
+
+    out = {"devices": ndev, "mode": mode, "results": {}}
+    for n, k in sizes:
+        a, us, ts = problem(n, k)
+        op = Dense(jnp.asarray(a))
+        est = gershgorin_bounds(op)
+        lmn, lmx = float(est.lam_min), float(est.lam_max)
+        if mode == "sharded":
+            fn = jax.jit(lambda us_, ts_, op=op: solver.judge_batch_sharded(
+                op, us_, ts_, mesh=mesh, lam_min=lmn, lam_max=lmx))
+        else:
+            fn = jax.jit(lambda us_, ts_, op=op: solver.judge_batch(
+                op, us_, ts_, lam_min=lmn, lam_max=lmx))
+        res = jax.block_until_ready(fn(us, ts))
+        out["results"][f"dense_n{n}_k{k}"] = {
+            "wall_s": round(time_fn(lambda: fn(us, ts)), 5),
+            "iters_max": int(np.asarray(res.iterations).max()),
+            "decisions_true": int(np.asarray(res.decision).sum()),
+        }
+    print("JSON:" + json.dumps(out))
+
+
+def _spawn(mode: str, devices: int, sizes):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={devices}"
+    proc = subprocess.run(
+        [sys.executable, str(Path(__file__).resolve()), "--worker", mode,
+         json.dumps(sizes)],
+        capture_output=True, text=True, timeout=1200, env=env)
+    for line in proc.stdout.splitlines():
+        if line.startswith("JSON:"):
+            return json.loads(line[5:])
+    raise RuntimeError(
+        f"sharded_judges worker ({mode}, {devices} devices) failed:\n"
+        f"{proc.stdout[-500:]}\n{proc.stderr[-2000:]}")
+
+
+def run(quick: bool = True):
+    # the acceptance grid N in {256,1024} x K in {8,64} runs in BOTH
+    # modes; --full adds nothing (the grid IS the artifact)
+    sizes = SIZES
+    single = _spawn("single", 1, sizes)
+    sharded = _spawn("sharded", 8, sizes)
+    rows, tables = [], {}
+    for key in single["results"]:
+        s1, s8 = single["results"][key], sharded["results"][key]
+        assert s1["decisions_true"] == s8["decisions_true"], \
+            f"sharded decisions diverged on {key}"
+        entry = {
+            "wall_s_1dev": s1["wall_s"],
+            "wall_s_8vdev": s8["wall_s"],
+            # >1 means the virtual-device collectives cost that much on
+            # one physical CPU; real multi-chip lanes buy this back
+            "vdev_overhead": round(s8["wall_s"] / max(s1["wall_s"], 1e-9),
+                                   2),
+            "iters_max_1dev": s1["iters_max"],
+            "iters_max_8vdev": s8["iters_max"],
+        }
+        tables[key] = entry
+        rows.append({"name": f"sharded_judges_{key}",
+                     "us_per_call": round(s8["wall_s"] * 1e6, 2),
+                     "derived": f"vdev_overhead_{entry['vdev_overhead']}x"})
+    return rows, tables
+
+
+if __name__ == "__main__":
+    if len(sys.argv) >= 3 and sys.argv[1] == "--worker":
+        _worker_main(sys.argv[2], json.loads(sys.argv[3]))
+    else:
+        rows, tables = run()
+        print(json.dumps(tables, indent=1))

@@ -33,10 +33,23 @@ lanes to a certified best candidate — greedy MAP's inner loop::
     res = solver.judge_batch(op2, us, ts)           # K judges, one loop
     am  = solver.judge_argmax(op2, us, shift=d, scale=-1.0)
 
+Device sharding (DESIGN.md Sec. 7): the K lanes split across a 1-D
+``lanes`` mesh via ``shard_map`` — ``solve_batch_sharded`` /
+``judge_batch_sharded`` / ``judge_argmax_sharded`` (or the bound
+``ShardedBIFSolver``), with per-lane results matching the single-device
+batched path exactly::
+
+    mesh = launch.mesh.make_lane_mesh()             # all local devices
+    am = solver.judge_argmax_sharded(op2, us, shift=d, scale=-1.0,
+                                     mesh=mesh)
+
 Public API:
 
   solver.{BIFSolver, SolverConfig, SolveResult, JudgeResult,
           ArgmaxResult, QuadratureTrace}            -- THE entry point
+  sharded.{ShardedBIFSolver, solve_batch_sharded, judge_batch_sharded,
+           judge_argmax_sharded, judge_kdpp_swap_batch_sharded}
+  operators.{lane_specs, shard_ops}                 -- lane placement
   operators.{Dense, SparseCOO, SparseBELL, Masked, Shifted, Jacobi,
              MatvecFn, stack_ops, stack_masks}
   gql.{gql_init, gql_step, GQLState}               -- Alg. 5 stepping
@@ -52,14 +65,15 @@ Deprecated shims (thin wrappers over ``BIFSolver``, kept for stability):
   precond.preconditioned_bif_bounds
 """
 from . import bounds, deprecation, double_greedy, dpp, gql, judge, lanczos, \
-    loop_utils, operators, precond, solver, spectrum  # noqa: F401
+    loop_utils, operators, precond, sharded, solver, spectrum  # noqa: F401
 
 from .solver import ArgmaxResult, BIFSolver, JudgeResult, PairState, \
     QuadratureTrace, SolveResult, SolverConfig  # noqa: F401
+from .sharded import ShardedBIFSolver  # noqa: F401
 from .loop_utils import tree_freeze  # noqa: F401
 from .operators import Dense, Jacobi, Masked, MatvecFn, Shifted, SparseBELL, \
-    SparseCOO, bell_from_dense, sparse_from_dense, stack_masks, \
-    stack_ops  # noqa: F401
+    SparseCOO, bell_from_dense, lane_specs, shard_ops, sparse_from_dense, \
+    stack_masks, stack_ops  # noqa: F401
 from .dpp import ChainState, GreedyMapResult, greedy_map, sample_dpp, \
     sample_kdpp  # noqa: F401
 from .double_greedy import DGResult, double_greedy as run_double_greedy  # noqa: F401

@@ -122,14 +122,21 @@ def dpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
 
 def kdpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
               exact: bool = False, batched: bool = True,
-              solver: _solver.BIFSolver | None = None) -> ChainState:
+              solver: _solver.BIFSolver | None = None, mesh=None,
+              lane_axis: str = "lanes") -> ChainState:
     """One swap move of the k-DPP chain (Alg. 6/7): remove v in Y, add
     u not in Y; accept iff p < (L_uu - bif_u) / (L_vv - bif_v).
 
     ``batched=True`` (default) scores both candidate systems as two lanes
     of the batched driver (one stacked matvec per iteration, DESIGN.md
     Sec. 6); ``batched=False`` keeps the sequential gap-weighted pair
-    driver. Decisions are certified-identical either way."""
+    driver. ``mesh`` places the batched lanes on a lane mesh (DESIGN.md
+    Sec. 7) — useful when the chain state already lives on the mesh.
+    Decisions are certified-identical every way."""
+    if mesh is not None and (exact or not batched):
+        raise ValueError(
+            "mesh requires the batched driver: pass batched=True, "
+            "exact=False (the exact and pair drivers run single-device)")
     n = op.n
     key, k_v, k_u, k_p = jax.random.split(state.key, 4)
     # Gumbel-max uniform picks from inside / outside the mask.
@@ -157,6 +164,11 @@ def kdpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
         res = _solver.JudgeResult(decision=decision,
                                   certified=jnp.ones((), bool),
                                   iterations=jnp.zeros((), jnp.int32))
+    elif batched and mesh is not None:
+        from . import sharded as _sharded
+        res = _sharded.judge_kdpp_swap_batch_sharded(
+            _as_solver(solver, max_iters), mop, col_u, col_v, t, p,
+            mesh=mesh, axis=lane_axis, lam_min=lam_min, lam_max=lam_max)
     elif batched:
         res = _as_solver(solver, max_iters).judge_kdpp_swap_batch(
             mop, col_u, col_v, t, p, lam_min=lam_min, lam_max=lam_max)
@@ -198,7 +210,8 @@ class GreedyMapResult(NamedTuple):
 
 def greedy_map(op, k: int, lam_min, lam_max, *, max_iters: int,
                exact: bool = False,
-               solver: _solver.BIFSolver | None = None) -> GreedyMapResult:
+               solver: _solver.BIFSolver | None = None, mesh=None,
+               lane_axis: str = "lanes") -> GreedyMapResult:
     """Greedy MAP for the DPP (paper Alg. 4), batched over candidates.
 
     Per step, EVERY candidate's marginal gain  L_ii - u_i^T L_Y^-1 u_i
@@ -208,8 +221,22 @@ def greedy_map(op, k: int, lam_min, lam_max, *, max_iters: int,
     ends when the winner's lower bound clears every rival — certified
     identical to greedy with exact solves. One (N, N)-stacked matvec per
     quadrature iteration replaces N sequential judges.
+
+    ``mesh`` shards the N candidate lanes across a lane mesh
+    (``judge_argmax_sharded``, DESIGN.md Sec. 7): the race's dominance
+    checks become cross-device reductions, selections stay certified-
+    identical to the single-device path.
     """
     quad = _as_solver(solver, max_iters)
+    if mesh is not None and exact:
+        raise ValueError("mesh requires the quadrature path: the exact "
+                         "scorer runs single-device (pass exact=False)")
+    if mesh is not None:
+        from . import sharded as _sharded
+        quad_argmax = lambda mop_, u_, **kw: _sharded.judge_argmax_sharded(  # noqa: E731,E501
+            quad, mop_, u_, mesh=mesh, axis=lane_axis, **kw)
+    else:
+        quad_argmax = quad.judge_argmax
     n = op.n
     d = op.diag()
     # candidate columns, once: row i of A (symmetric) = column i
@@ -226,9 +253,9 @@ def greedy_map(op, k: int, lam_min, lam_max, *, max_iters: int,
             gain, cert = score[idx], jnp.ones((), bool)
             iters = jnp.zeros((), jnp.int32)
         else:
-            res = quad.judge_argmax(_ops.Masked(op, mask), u, shift=d,
-                                    scale=-1.0, valid=valid,
-                                    lam_min=lam_min, lam_max=lam_max)
+            res = quad_argmax(_ops.Masked(op, mask), u, shift=d,
+                              scale=-1.0, valid=valid,
+                              lam_min=lam_min, lam_max=lam_max)
             idx, cert = res.index, res.certified
             gain = 0.5 * (res.lower[idx] + res.upper[idx])
             iters = jnp.sum(res.iterations)

@@ -251,7 +251,9 @@ _register(Masked, ["base", "mask"])
 
 @dataclasses.dataclass(frozen=True)
 class Shifted:
-    """A + sigma * I."""
+    """A + sigma * I. ``sigma`` is a scalar, or (..., ) lane-batched (a
+    ``stack_ops`` stack): batch dims pair with the batch dims of ``x``,
+    never with the vector dim."""
     base: Any
     sigma: Array
 
@@ -259,11 +261,15 @@ class Shifted:
     def n(self) -> int:
         return self.base.n
 
+    def _sigma_col(self) -> Array:
+        s = jnp.asarray(self.sigma)
+        return s[..., None] if s.ndim else s
+
     def matvec(self, x: Array) -> Array:
-        return self.base.matvec(x) + self.sigma * x
+        return self.base.matvec(x) + self._sigma_col() * x
 
     def diag(self) -> Array:
-        return self.base.diag() + self.sigma
+        return self.base.diag() + self._sigma_col()
 
 
 _register(Shifted, ["base", "sigma"])
@@ -365,6 +371,75 @@ def stack_masks(base, masks) -> Masked:
         raise ValueError(f"stack_masks wants (K, N) masks, got shape "
                          f"{masks.shape}")
     return Masked(base, masks)
+
+
+# ---------------------------------------------------------------------------
+# Lane sharding (DESIGN.md Sec. 7)
+
+# Rank of each array field on an UNBATCHED operator. Leaves whose rank
+# exceeds this carry a leading lane axis (a stack_ops / stack_masks
+# stack) and are sharded across devices; base-rank leaves are the shared
+# problem data and stay replicated. Type-dispatched on purpose: shape
+# heuristics would misfire when K == N (greedy MAP runs N lanes against
+# an (N, N) base matrix).
+_LANE_BASE_RANK = {
+    Dense: {"a": 2},
+    SparseCOO: {"rows": 1, "cols": 1, "vals": 1, "diag_vals": 1},
+    SparseBELL: {"data": 4, "cols": 2, "diag_vals": 1},
+    Masked: {"mask": 1},
+    Shifted: {"sigma": 0},
+    Jacobi: {"inv_sqrt_diag": 1},
+    MatvecFn: {"diag_vals": 1},
+}
+
+_LANE_WRAPPERS = (Masked, Shifted, Jacobi)
+
+
+def _lane_spec_for(leaf, base_rank: int, axis: str):
+    from jax.sharding import PartitionSpec as P
+
+    extra = jnp.ndim(leaf) - base_rank
+    if extra == 0:
+        return P()
+    if extra == 1:
+        return P(axis)  # leading lane dim sharded, trailing dims replicated
+    raise ValueError(
+        f"operator leaf has {extra} leading lane dims (shape "
+        f"{jnp.shape(leaf)}, base rank {base_rank}); the sharded driver "
+        f"supports exactly one lane axis")
+
+
+def lane_specs(op, axis: str = "lanes"):
+    """PartitionSpec pytree for ``op`` under lane sharding.
+
+    Same treedef as ``op`` with a ``PartitionSpec`` per array leaf:
+    lane-stacked leaves (one extra leading dim over the operator's
+    unbatched rank) are sharded on ``axis``; shared leaves replicated.
+    Feed to ``shard_map`` in_specs or :func:`shard_ops`.
+    """
+    cls = type(op)
+    if cls not in _LANE_BASE_RANK:
+        raise TypeError(f"lane_specs does not know operator type "
+                        f"{cls.__name__}")
+    ranks = _LANE_BASE_RANK[cls]
+    fields = {name: _lane_spec_for(getattr(op, name), rank, axis)
+              for name, rank in ranks.items()}
+    if cls in _LANE_WRAPPERS:
+        fields["base"] = lane_specs(op.base, axis)
+    return dataclasses.replace(op, **fields)
+
+
+def shard_ops(op, mesh, axis: str = "lanes"):
+    """Place an operator pytree on a lane mesh: lane-stacked leaves
+    sharded over ``axis``, shared leaves (the base matrix) replicated on
+    every device. Purely a placement hint — ``shard_map`` in_specs from
+    :func:`lane_specs` define the semantics either way."""
+    from jax.sharding import NamedSharding
+
+    specs = lane_specs(op, axis)
+    return jax.tree.map(
+        lambda leaf, spec: jax.device_put(leaf, NamedSharding(mesh, spec)),
+        op, specs)
 
 
 def configure_backend(op, backend: str, interpret: bool | None):

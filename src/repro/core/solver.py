@@ -119,6 +119,36 @@ class PairState(NamedTuple):
     b: Any  # GQLState for the second (v-side) system
 
 
+def _argmax_scores(lo: Array, hi: Array, shift, scale, valid):
+    """Per-lane score brackets ``shift + scale * [lo, hi]`` for the argmax
+    race, with invalid lanes pinned at a large negative sentinel. Shared
+    by ``judge_argmax`` and the sharded driver (core/sharded.py) so the
+    two paths race on bit-identical values."""
+    big_neg = jnp.asarray(-1e30, lo.dtype)
+    a = shift + scale * lo
+    b = shift + scale * hi
+    slo, shi = jnp.minimum(a, b), jnp.maximum(a, b)
+    if valid is not None:
+        slo = jnp.where(valid, slo, big_neg)
+        shi = jnp.where(valid, shi, big_neg)
+    return slo, shi
+
+
+def _argmax_race(slo: Array, shi: Array):
+    """(dominated, winner) per lane of the certified argmax race."""
+    k = shi.shape[-1]
+    if k == 1:
+        return jnp.zeros_like(shi, bool), jnp.ones_like(shi, bool)
+    best_lo = jnp.max(slo, axis=-1, keepdims=True)
+    dominated = shi < best_lo
+    order = jnp.sort(shi, axis=-1)
+    top1, top2 = order[..., -1:], order[..., -2:-1]
+    leader = jnp.argmax(shi, axis=-1, keepdims=True)
+    rival_hi = jnp.where(jnp.arange(k) == leader, top2, top1)
+    winner = slo >= rival_hi
+    return dominated, winner
+
+
 def _log_gain_bounds(t: Array, lo_bif: Array, hi_bif: Array):
     """Bounds on log(t - bif) given bif in [lo_bif, hi_bif]; the true Schur
     complement t - bif is positive, but a loose *upper* BIF bound can push
@@ -432,45 +462,57 @@ class BIFSolver:
             jnp.asarray(shift, u.dtype)
         scale = jnp.ones((), u.dtype) if scale is None else \
             jnp.asarray(scale, u.dtype)
-        big_neg = jnp.asarray(-1e30, u.dtype)
 
         def scores(lo, hi):
-            a = shift + scale * lo
-            b = shift + scale * hi
-            slo, shi = jnp.minimum(a, b), jnp.maximum(a, b)
-            if valid is not None:
-                slo = jnp.where(valid, slo, big_neg)
-                shi = jnp.where(valid, shi, big_neg)
-            return slo, shi
-
-        def race(slo, shi):
-            """(dominated, winner) per lane."""
-            k = shi.shape[-1]
-            if k == 1:
-                return jnp.zeros_like(shi, bool), jnp.ones_like(shi, bool)
-            best_lo = jnp.max(slo, axis=-1, keepdims=True)
-            dominated = shi < best_lo
-            order = jnp.sort(shi, axis=-1)
-            top1, top2 = order[..., -1:], order[..., -2:-1]
-            leader = jnp.argmax(shi, axis=-1, keepdims=True)
-            rival_hi = jnp.where(jnp.arange(k) == leader, top2, top1)
-            winner = slo >= rival_hi
-            return dominated, winner
+            return _argmax_scores(lo, hi, shift, scale, valid)
 
         def resolved(lo, hi):
-            dominated, winner = race(*scores(lo, hi))
+            dominated, winner = _argmax_race(*scores(lo, hi))
             return dominated | winner
 
         res = self.solve_batch(op, u, decide=resolved, lam_min=lam_min,
                                lam_max=lam_max, probe=probe)
         slo, shi = scores(res.lower, res.upper)
-        _, winner = race(slo, shi)
+        _, winner = _argmax_race(slo, shi)
         certified = jnp.any(winner, axis=-1)
         mid = 0.5 * (slo + shi)
         index = jnp.where(certified, jnp.argmax(winner, axis=-1),
                           jnp.argmax(mid, axis=-1)).astype(jnp.int32)
         return ArgmaxResult(index=index, certified=certified,
                             iterations=res.iterations, lower=slo, upper=shi)
+
+    # -- device-sharded batched driver (lanes over a mesh axis) --------------
+
+    def solve_batch_sharded(self, op, u: Array, decide=None, *, mesh,
+                            axis: str = "lanes", lam_min=None, lam_max=None,
+                            probe=None, decide_args=()) -> SolveResult:
+        """``solve_batch`` with the K lanes data-parallel over ``mesh``'s
+        ``axis`` via ``shard_map`` (core/sharded.py, DESIGN.md Sec. 7).
+        Per-lane results match the single-device batched path exactly."""
+        from . import sharded as _sharded
+        return _sharded.solve_batch_sharded(
+            self, op, u, decide, mesh=mesh, axis=axis, lam_min=lam_min,
+            lam_max=lam_max, probe=probe, decide_args=decide_args)
+
+    def judge_batch_sharded(self, op, u: Array, t: Array, *, mesh,
+                            axis: str = "lanes", lam_min=None, lam_max=None,
+                            probe=None) -> JudgeResult:
+        """``judge_batch`` over a lane mesh (DESIGN.md Sec. 7)."""
+        from . import sharded as _sharded
+        return _sharded.judge_batch_sharded(
+            self, op, u, t, mesh=mesh, axis=axis, lam_min=lam_min,
+            lam_max=lam_max, probe=probe)
+
+    def judge_argmax_sharded(self, op, u: Array, *, mesh,
+                             axis: str = "lanes", shift=None, scale=None,
+                             valid=None, lam_min=None, lam_max=None,
+                             probe=None) -> ArgmaxResult:
+        """``judge_argmax`` over a lane mesh: the race's cross-lane
+        reductions become cross-device collectives (DESIGN.md Sec. 7)."""
+        from . import sharded as _sharded
+        return _sharded.judge_argmax_sharded(
+            self, op, u, mesh=mesh, axis=axis, shift=shift, scale=scale,
+            valid=valid, lam_min=lam_min, lam_max=lam_max, probe=probe)
 
     def judge_kdpp_swap_batch(self, op, u: Array, v: Array, t: Array,
                               p: Array, *, lam_min=None,

@@ -21,3 +21,16 @@ def make_host_mesh(model: int = 1):
 
 def data_axes_for(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_lane_mesh(num_devices: int | None = None, *, axis: str = "lanes"):
+    """1-D mesh for data-parallel quadrature lanes (DESIGN.md Sec. 7).
+
+    The K candidate systems of the batched retrospective driver shard
+    over this single axis (``core.sharded``); operators are replicated.
+    Defaults to every local device — on CPU tests, launch with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get 8
+    virtual devices.
+    """
+    n = len(jax.devices()) if num_devices is None else int(num_devices)
+    return jax.make_mesh((n,), (axis,))

@@ -1,2 +1,3 @@
-from .engine import BIFEngine, BIFRequest, Engine, Request  # noqa: F401
+from .engine import BIFEngine, BIFRequest, Engine, Request, \
+    flush_trace_count  # noqa: F401
 from .kv_select import rank_blocks, select_diverse_blocks  # noqa: F401

@@ -20,7 +20,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from functools import partial
+
 from ..core import operators as core_ops
+from ..core import sharded as core_sharded
 from ..core import spectrum as core_spectrum
 from ..core.solver import BIFSolver
 from ..models import model as M
@@ -105,25 +108,86 @@ class BIFRequest:
     error: Optional[Exception] = None
 
 
+# Trace-time counter for the shared flush driver: increments once per
+# fresh compile (jit cache miss), never on cache hits. Tests pin the
+# bucketed-padding contract of serve.kv_select.rank_blocks with it.
+_FLUSH_TRACES = [0]
+
+
+def flush_trace_count() -> int:
+    """How many times the shared BIFEngine flush driver has been traced
+    (== compiled) in this process."""
+    return _FLUSH_TRACES[0]
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis"))
+def _flush_run(solver, op, us, masks, ts, has_t, lam_min, lam_max, *,
+               mesh=None, axis: str = "lanes"):
+    """ONE shared jitted flush driver for every BIFEngine.
+
+    Module-level on purpose: the jit cache keys on (solver config, op
+    treedef, shapes, mesh), so two engines around same-shaped systems —
+    e.g. consecutive ``rank_blocks`` calls whose block counts fall in
+    the same padding bucket — reuse one compile instead of tracing a
+    fresh per-engine closure each time. ``lam_min``/``lam_max`` ride
+    along as runtime scalars for the same reason.
+    """
+    _FLUSH_TRACES[0] += 1
+    mop = core_ops.Masked(op, masks)
+
+    def decide(lo, hi, ts, has_t):
+        # judge lanes resolve on their threshold, bracket lanes on the
+        # solver's own tolerance rule
+        thr = (ts < lo) | (ts >= hi)
+        return jnp.where(has_t, thr, solver.tolerance_resolved(lo, hi))
+
+    if mesh is None:
+        res = solver.solve_batch(mop, us,
+                                 decide=lambda lo, hi: decide(lo, hi, ts,
+                                                              has_t),
+                                 lam_min=lam_min, lam_max=lam_max)
+    else:
+        res = core_sharded.solve_batch_sharded(
+            solver, mop, us, decide, decide_args=(ts, has_t), mesh=mesh,
+            axis=axis, lam_min=lam_min, lam_max=lam_max)
+    decision = BIFSolver.threshold_decision(ts, res.lower, res.upper)
+    return (res.lower, res.upper, decision,
+            decide(res.lower, res.upper, ts, has_t), res.iterations)
+
+
 class BIFEngine:
     """Batches BIF requests into ``solve_batch`` flushes.
 
     Requests accumulate via ``submit`` and are served by ``flush`` in
     padded lane groups of ``max_batch`` (one compiled driver shape per
-    engine). Mixed traffic is fine: judge lanes resolve on their
-    threshold, bracket lanes on tolerance, and every resolved lane
-    freezes while the rest continue — the per-lane early exit of
-    DESIGN.md Sec. 6. Dummy padding lanes (zero query) resolve at
-    iteration one and cost only their share of the stacked matvec.
+    engine, shared across engines via the module-level ``_flush_run``).
+    Mixed traffic is fine: judge lanes resolve on their threshold,
+    bracket lanes on tolerance, and every resolved lane freezes while
+    the rest continue — the per-lane early exit of DESIGN.md Sec. 6.
+    Dummy padding lanes (zero query) resolve at iteration one and cost
+    only their share of the stacked matvec.
+
+    With ``mesh`` set (a 1-D lane mesh from
+    ``launch.mesh.make_lane_mesh``), each flush runs the sharded driver
+    of DESIGN.md Sec. 7: ``max_batch`` is rounded up to a whole number
+    of lanes per device and the flush's lanes split across the mesh.
     """
 
     def __init__(self, op, *, solver: BIFSolver | None = None,
                  max_batch: int = 64, lam_min: float | None = None,
-                 lam_max: float | None = None):
+                 lam_max: float | None = None, mesh=None,
+                 lane_axis: str = "lanes"):
         self.op = op
         self.solver = solver if solver is not None \
             else BIFSolver.create(max_iters=64, rtol=1e-3)
-        self.max_batch = int(max_batch)
+        self.mesh = mesh
+        self.lane_axis = lane_axis
+        max_batch = int(max_batch)
+        if mesh is not None:
+            # padded flushes must round up to num_devices x lanes_per_device
+            ndev = mesh.shape[lane_axis]
+            max_batch = -(-max_batch // ndev) * ndev
+        self.max_batch = max_batch
         if lam_min is None or lam_max is None:
             # one-time certified interval, valid for every request mask
             # by interlacing (DESIGN.md Sec. 3.2)
@@ -135,27 +199,15 @@ class BIFEngine:
         self.lam_min, self.lam_max = float(lam_min), float(lam_max)
         self._queue: List[BIFRequest] = []
         self._dtype = np.dtype(np.asarray(self.op.diag()).dtype)
-        solver = self.solver
 
         def run(us, masks, ts, has_t):
-            mop = core_ops.Masked(self.op, masks)
+            return _flush_run(
+                self.solver, self.op, us, masks, ts, has_t,
+                jnp.asarray(self.lam_min, us.dtype),
+                jnp.asarray(self.lam_max, us.dtype),
+                mesh=self.mesh, axis=self.lane_axis)
 
-            def decide(lo, hi):
-                # judge lanes resolve on their threshold, bracket lanes
-                # on the solver's own tolerance rule
-                thr = (ts < lo) | (ts >= hi)
-                return jnp.where(has_t, thr,
-                                 solver.tolerance_resolved(lo, hi))
-
-            res = solver.solve_batch(mop, us, decide=decide,
-                                     lam_min=self.lam_min,
-                                     lam_max=self.lam_max)
-            decision = BIFSolver.threshold_decision(ts, res.lower,
-                                                    res.upper)
-            return (res.lower, res.upper, decision,
-                    decide(res.lower, res.upper), res.iterations)
-
-        self._run = jax.jit(run)
+        self._run = run
 
     def submit(self, req: BIFRequest) -> BIFRequest:
         """Queue one request. Shapes are validated here so a malformed

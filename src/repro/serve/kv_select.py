@@ -60,6 +60,7 @@ def select_diverse_blocks(keys: np.ndarray, *, block: int = 128,
 
 def rank_blocks(keys: np.ndarray, *, block: int = 128, ridge: float = 1e-3,
                 bandwidth: float = 0.5, max_batch: int = 32,
+                bucket: int = 32, mesh=None,
                 solver_config: SolverConfig | None = None):
     """Certified redundancy ranking of pooled key blocks, served batched.
 
@@ -73,27 +74,41 @@ def rank_blocks(keys: np.ndarray, *, block: int = 128, ridge: float = 1e-3,
     ``max_batch``: one batched driver per flush group instead of N
     sequential solves.
 
-    Note each call builds a fresh :class:`BIFEngine` around the dense
-    n x n kernel and jit-compiles its flush driver, so the trace/compile
-    cost is paid per call; the fixed ``max_iters`` ceiling keeps that
-    driver small even for large caches.
+    The kernel's system size is padded to a multiple of ``bucket``
+    (identity rows, masked out of every request), so nearby block counts
+    land on one flush-driver shape: the engine's shared jitted driver
+    then reuses a single compile across calls whose ``n`` falls in the
+    same bucket instead of tracing afresh per block count (pinned in
+    tests via ``serve.engine.flush_trace_count``). ``mesh`` routes the
+    flushes through the device-sharded driver (DESIGN.md Sec. 7).
 
     Returns ``(order, stats)`` with ``order`` the block indices most-
     redundant first and per-block certified brackets in ``stats``.
     """
     pooled = pool_keys(keys, block)
     n = len(pooled)
+    n_pad = -(-n // bucket) * bucket
     d2 = ((pooled[:, None, :] - pooled[None, :, :]) ** 2).sum(-1)
     kmat = np.exp(-d2 / (2 * bandwidth ** 2)) + ridge * np.eye(n)
-    op = core_ops.Dense(jnp.asarray(kmat, jnp.float32))
+    kfull = np.eye(n_pad, dtype=np.float32)
+    kfull[:n, :n] = kmat
+    op = core_ops.Dense(jnp.asarray(kfull))
     if solver_config is None:
-        solver_config = SolverConfig(max_iters=min(n + 2, 64), rtol=1e-3)
+        # ceiling derived from the BUCKETED size so every call in the
+        # bucket shares one (static) solver config
+        solver_config = SolverConfig(max_iters=min(n_pad + 2, 64),
+                                     rtol=1e-3)
     engine = BIFEngine(op, solver=BIFSolver(solver_config),
-                       max_batch=max_batch)
-    masks = 1.0 - np.eye(n, dtype=np.float32)
-    reqs = [engine.submit(BIFRequest(u=kmat[:, i].astype(np.float32),
-                                     mask=masks[i]))
-            for i in range(n)]
+                       max_batch=max_batch, mesh=mesh)
+    base_mask = np.zeros(n_pad, dtype=np.float32)
+    base_mask[:n] = 1.0
+    reqs = []
+    for i in range(n):
+        mask = base_mask.copy()
+        mask[i] = 0.0
+        u = np.zeros(n_pad, dtype=np.float32)
+        u[:n] = kmat[:, i]
+        reqs.append(engine.submit(BIFRequest(u=u, mask=mask)))
     engine.flush()
     mids = np.array([0.5 * (r.lower + r.upper) for r in reqs])
     order = np.argsort(-mids)
@@ -101,7 +116,7 @@ def rank_blocks(keys: np.ndarray, *, block: int = 128, ridge: float = 1e-3,
         "brackets": [(r.lower, r.upper) for r in reqs],
         "iterations": int(sum(r.iterations for r in reqs)),
         "certified": int(sum(r.certified for r in reqs)),
-        "flushes": -(-n // max_batch), "blocks": n}
+        "flushes": -(-n // engine.max_batch), "blocks": n}
 
 
 def apply_block_mask(cache_k: jax.Array, cache_v: jax.Array,

@@ -1,2 +1,3 @@
 from .api import (Plan, activation_context, constrain,  # noqa: F401
-                  param_shardings, spec_for_param, tp_plan)
+                  lane_plan, lane_sharding, param_shardings,
+                  spec_for_param, tp_plan)

@@ -61,8 +61,27 @@ def tp_plan(*, data_axes=("pod", "data"), model_axis="model",
         "expert": w_axis,
         "ssm_inner": w_axis,
         "layers": None,
+        "lanes": None,   # quadrature lanes: replicated under the prod plan
     }
     return Plan(rules=rules, fsdp=fsdp and not tp_full)
+
+
+def lane_plan(mesh_axis: str = "lanes") -> Plan:
+    """Plan for the quadrature lane axis (DESIGN.md Sec. 7): stacked
+    query vectors, masks, and thresholds carry a leading ``lanes``
+    logical axis mapped onto the 1-D lane mesh of
+    ``launch.mesh.make_lane_mesh``; everything else (the operator's
+    shared leaves) is replicated."""
+    return Plan(rules={"lanes": mesh_axis})
+
+
+def lane_sharding(mesh: Mesh, *, ndim: int = 2,
+                  plan: Optional[Plan] = None) -> NamedSharding:
+    """NamedSharding for a lane-stacked (K, ...) array: leading dim on
+    the lane axis, trailing dims replicated."""
+    plan = lane_plan() if plan is None else plan
+    entries = [plan.mesh_axes("lanes")] + [None] * (ndim - 1)
+    return NamedSharding(mesh, P(*entries))
 
 
 def spec_for_param(plan: Plan, axes: tuple, shape: tuple) -> P:

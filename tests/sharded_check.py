@@ -1,0 +1,291 @@
+"""Multi-device parity checks for the sharded batched driver.
+
+Run as a SUBPROCESS with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(tests/test_sharded.py does; the main pytest process must stay at one
+device, see tests/conftest.py). Prints ``OK`` when every check passes.
+
+The contract (DESIGN.md Sec. 7): per-lane decisions, iteration counts,
+certification, and the certified argmax index from the sharded driver
+exactly match the single-device batched path on identical stacked
+inputs; brackets are bit-exact on SparseCOO and agree to 1e-12 on
+gemm-backed operators.
+"""
+import os
+import sys
+from pathlib import Path
+
+assert "--xla_force_host_platform_device_count=8" in \
+    os.environ.get("XLA_FLAGS", ""), "run me under 8 virtual devices"
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+# Initialize backends BEFORE importing conftest: it pops XLA_FLAGS (the
+# in-process suite must see one device), which would shrink our mesh if
+# jax hadn't locked in the 8 virtual devices yet.
+assert len(jax.devices()) == 8, jax.devices()
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from conftest import make_spd  # noqa: E402
+from repro.core import BIFSolver, Dense, Masked, ShardedBIFSolver, \
+    bell_from_dense, dpp, greedy_map, sparse_from_dense, stack_masks, \
+    stack_ops  # noqa: E402
+from repro.launch.mesh import make_lane_mesh  # noqa: E402
+from repro.serve import BIFEngine, BIFRequest  # noqa: E402
+
+
+def _problem(n=48, k=16, kappa=150.0, seed=0, density=0.3):
+    a = make_spd(n, kappa=kappa, seed=seed, density=density)
+    w = np.linalg.eigvalsh(a)
+    us = np.random.default_rng(seed + 1).standard_normal((k, n))
+    true = np.einsum("ki,ki->k", us, np.linalg.solve(a, us.T).T)
+    return a, jnp.asarray(us), true, float(w[0] * 0.99), float(w[-1] * 1.01)
+
+
+def _assert_solve_parity(ref, got, bit_exact, what):
+    np.testing.assert_array_equal(np.asarray(got.iterations),
+                                  np.asarray(ref.iterations), what)
+    np.testing.assert_array_equal(np.asarray(got.certified),
+                                  np.asarray(ref.certified), what)
+    for field in ("lower", "upper", "gauss_lower", "lobatto_upper"):
+        b, s = np.asarray(getattr(got, field)), np.asarray(getattr(ref,
+                                                                   field))
+        if bit_exact:
+            np.testing.assert_array_equal(b, s, f"{what}.{field}")
+        else:
+            np.testing.assert_allclose(b, s, rtol=1e-12,
+                                       err_msg=f"{what}.{field}")
+
+
+def check_solve_batch_parity(mesh):
+    a, us, true, lmn, lmx = _problem()
+    s = BIFSolver.create(max_iters=50, rtol=1e-4)
+    for kind, op in [("dense", Dense(jnp.asarray(a))),
+                     ("coo", sparse_from_dense(a)),
+                     ("bell", bell_from_dense(a, bs=16))]:
+        ref = s.solve_batch(op, us, lam_min=lmn, lam_max=lmx)
+        got = s.solve_batch_sharded(op, us, mesh=mesh, lam_min=lmn,
+                                    lam_max=lmx)
+        _assert_solve_parity(ref, got, kind == "coo", kind)
+        assert np.all(np.asarray(got.lower) <= true * (1 + 1e-9))
+        assert np.all(np.asarray(got.upper) >= true * (1 - 1e-9))
+
+
+def check_nondivisible_padding(mesh):
+    """K=11 over 8 devices: a padding lane per short device, results
+    sliced back to the 11 real lanes."""
+    a, us, true, lmn, lmx = _problem(k=11, seed=3)
+    s = BIFSolver.create(max_iters=50, rtol=1e-4)
+    op = sparse_from_dense(a)
+    ref = s.solve_batch(op, us, lam_min=lmn, lam_max=lmx)
+    got = s.solve_batch_sharded(op, us, mesh=mesh, lam_min=lmn,
+                                lam_max=lmx)
+    assert got.lower.shape == (11,)
+    _assert_solve_parity(ref, got, True, "coo-pad")
+
+    # stacked masks (lane-stacked operator leaves) must pad too
+    base = Dense(jnp.asarray(a))
+    masks = jnp.asarray(
+        (np.random.default_rng(5).random((11, a.shape[0])) < 0.6)
+        .astype(float))
+    mop = stack_masks(base, masks)
+    usm = us * masks
+    ref = s.solve_batch(mop, usm, lam_min=lmn, lam_max=lmx)
+    got = s.solve_batch_sharded(mop, usm, mesh=mesh, lam_min=lmn,
+                                lam_max=lmx)
+    _assert_solve_parity(ref, got, False, "masked-pad")
+
+
+def check_stacked_ops(mesh):
+    """K *different* systems (stack_ops): per-lane operator leaves shard
+    with the lanes."""
+    n, k = 32, 8
+    mats = [make_spd(n, kappa=60.0, seed=s) for s in range(k)]
+    w = [np.linalg.eigvalsh(m) for m in mats]
+    lmn = min(v[0] for v in w) * 0.99
+    lmx = max(v[-1] for v in w) * 1.01
+    us = jnp.asarray(np.random.default_rng(9).standard_normal((k, n)))
+    s = BIFSolver.create(max_iters=n + 2, rtol=1e-4)
+    for kind, build in [("coo", sparse_from_dense),
+                        ("bell", lambda m: bell_from_dense(m, bs=16))]:
+        stacked = stack_ops([build(m) for m in mats])
+        ref = s.solve_batch(stacked, us, lam_min=lmn, lam_max=lmx)
+        got = s.solve_batch_sharded(stacked, us, mesh=mesh, lam_min=lmn,
+                                    lam_max=lmx)
+        _assert_solve_parity(ref, got, kind == "coo", f"stack_ops-{kind}")
+
+
+def check_per_lane_spectrum(mesh):
+    """Estimating spectrum modes return PER-LANE lam arrays from
+    prepare(); they must shard with the lanes (and pad with the dummy
+    lanes) instead of crashing as replicated scalars. On COO the matvec
+    floats are bit-exact, so iteration counts must match exactly too.
+    ridge mixes a scalar lam_min with a per-lane lam_max — the two specs
+    are derived independently."""
+    a, us, true, lmn_, lmx_ = _problem(k=16, seed=8)
+    op = sparse_from_dense(a)
+    for spec, k in [("lanczos", 16), ("lanczos", 11), ("ridge", 16),
+                    ("ridge", 11)]:
+        s = BIFSolver.create(max_iters=40, rtol=1e-5, spectrum=spec,
+                             ridge=1e-3)
+        ref = s.solve_batch(op, us[:k])
+        got = s.solve_batch_sharded(op, us[:k], mesh=mesh)
+        _assert_solve_parity(ref, got, True, f"{spec}-k{k}")
+
+    # explicit per-lane lam arrays shard the same way
+    s = BIFSolver.create(max_iters=40, rtol=1e-5)
+    lmn = jnp.full((11,), lmn_) * (1 + 0.001 * jnp.arange(11))
+    lmx = jnp.full((11,), lmx_)
+    ref = s.solve_batch(op, us[:11], lam_min=lmn, lam_max=lmx)
+    got = s.solve_batch_sharded(op, us[:11], mesh=mesh, lam_min=lmn,
+                                lam_max=lmx)
+    _assert_solve_parity(ref, got, True, "explicit-per-lane-lam")
+
+
+def check_judge_batch(mesh):
+    """Thresholds ride the lanes; the knife-edge lane exhausts max_iters
+    on both paths."""
+    a, us, true, lmn, lmx = _problem(k=5, seed=0)
+    op = sparse_from_dense(a)
+    s = BIFSolver.create(max_iters=12)
+    ts = jnp.asarray(true * np.array([0.5, 0.95, 1.0 + 1e-12, 1.05, 2.0]))
+    ref = s.judge_batch(op, us, ts, lam_min=lmn, lam_max=lmx)
+    got = s.judge_batch_sharded(op, us, ts, mesh=mesh, lam_min=lmn,
+                                lam_max=lmx)
+    np.testing.assert_array_equal(np.asarray(got.decision),
+                                  np.asarray(ref.decision))
+    np.testing.assert_array_equal(np.asarray(got.iterations),
+                                  np.asarray(ref.iterations))
+    np.testing.assert_array_equal(np.asarray(got.certified),
+                                  np.asarray(ref.certified))
+    assert int(got.iterations[2]) == 12 and not bool(got.certified[2])
+    assert int(got.iterations[0]) < 12 and bool(got.certified[0])
+
+
+def check_judge_argmax(mesh):
+    a, us, true, lmn, lmx = _problem(k=16, seed=5)
+    op = Dense(jnp.asarray(a))
+    s = BIFSolver.create(max_iters=50)
+    ref = s.judge_argmax(op, us, lam_min=lmn, lam_max=lmx)
+    got = s.judge_argmax_sharded(op, us, mesh=mesh, lam_min=lmn,
+                                 lam_max=lmx)
+    assert int(got.index) == int(ref.index) == int(np.argmax(true))
+    assert bool(got.certified) and bool(ref.certified)
+    np.testing.assert_array_equal(np.asarray(got.iterations),
+                                  np.asarray(ref.iterations))
+    np.testing.assert_allclose(np.asarray(got.lower),
+                               np.asarray(ref.lower), rtol=1e-12)
+
+    # per-lane shift/scale + valid mask, non-divisible K=11 (pads enter
+    # the race invalid)
+    us11, true11 = us[:11], true[:11]
+    d = jnp.asarray(30.0 * np.abs(true11))
+    valid = jnp.ones((11,), bool).at[int(np.argmax(true11))].set(False)
+    ref = s.judge_argmax(op, us11, shift=d, scale=-1.0, valid=valid,
+                         lam_min=lmn, lam_max=lmx)
+    got = s.judge_argmax_sharded(op, us11, shift=d, scale=-1.0,
+                                 valid=valid, mesh=mesh, lam_min=lmn,
+                                 lam_max=lmx)
+    assert int(got.index) == int(ref.index)
+    assert bool(got.certified) == bool(ref.certified)
+    np.testing.assert_array_equal(np.asarray(got.iterations),
+                                  np.asarray(ref.iterations))
+
+
+def check_engine_flush(mesh):
+    """Mixed judge/bracket traffic with a masked request, flushed through
+    the mesh: identical chunk shapes => identical per-request outcomes."""
+    a = make_spd(32, kappa=60.0, seed=2)
+    w = np.linalg.eigvalsh(a)
+    lam = dict(lam_min=float(w[0] * 0.9), lam_max=float(w[-1] * 1.1))
+    op = Dense(jnp.asarray(a))
+    sv = BIFSolver.create(max_iters=40, rtol=1e-3)
+    e0 = BIFEngine(op, solver=sv, max_batch=8, **lam)
+    e1 = BIFEngine(op, solver=sv, max_batch=6, mesh=mesh, **lam)
+    assert e1.max_batch == 8  # rounded up to num_devices x lanes_per_device
+    rng = np.random.default_rng(4)
+    us = rng.standard_normal((11, 32))
+    true = np.einsum("ki,ki->k", us, np.linalg.solve(a, us.T).T)
+    mask = (rng.random(32) < 0.5).astype(float)
+    for eng in (e0, e1):
+        for i, u in enumerate(us):
+            t = float(true[i] * (0.9 if i % 2 else 1.1)) if i % 3 else None
+            eng.submit(BIFRequest(u=u, t=t, mask=mask if i == 10 else None))
+    r0, r1 = e0.flush(), e1.flush()
+    for i, (x, y) in enumerate(zip(r0, r1)):
+        assert x.decision == y.decision, i
+        assert x.certified == y.certified, i
+        assert x.iterations == y.iterations, i
+        np.testing.assert_allclose([x.lower, x.upper], [y.lower, y.upper],
+                                   rtol=1e-12)
+    # the mesh engine really answered the BIF queries
+    for i, r in enumerate(r1[:10]):
+        assert r.lower <= true[i] * 1.0001 and r.upper >= true[i] * 0.9999
+
+
+def check_applications(mesh):
+    """greedy MAP + k-DPP swap ride the sharded judges unchanged."""
+    n = 28
+    a = make_spd(n, kappa=60.0, seed=7)
+    d = np.sqrt(np.diag(a))
+    a = a / np.outer(d, d) + 0.1 * np.eye(n)
+    w = np.linalg.eigvalsh(a)
+    op = Dense(jnp.asarray(a))
+    r1 = greedy_map(op, 6, w[0] * 0.99, w[-1] * 1.01, max_iters=n + 2)
+    r2 = greedy_map(op, 6, w[0] * 0.99, w[-1] * 1.01, max_iters=n + 2,
+                    mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(r1.order),
+                                  np.asarray(r2.order))
+    assert int(r2.uncertified) == 0
+    assert int(r1.quad_iterations) == int(r2.quad_iterations)
+
+    st = dpp.init_chain(jax.random.key(0), jnp.zeros(n).at[:5].set(1.0))
+    s1 = dpp.kdpp_step(op, st, w[0] * 0.99, w[-1] * 1.01, max_iters=n + 2)
+    s2 = dpp.kdpp_step(op, st, w[0] * 0.99, w[-1] * 1.01, max_iters=n + 2,
+                       mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(s1.mask), np.asarray(s2.mask))
+    assert int(s1.stats.quad_iterations) == int(s2.stats.quad_iterations)
+
+
+def check_sharded_solver_wrapper(mesh):
+    """ShardedBIFSolver is static: closure-capture under jit works and
+    matches the unbound calls."""
+    a, us, true, lmn, lmx = _problem(k=8, seed=6)
+    op = sparse_from_dense(a)
+    sh = ShardedBIFSolver(BIFSolver.create(max_iters=50, rtol=1e-4), mesh)
+    res = sh.solve_batch(op, us, lam_min=lmn, lam_max=lmx)
+    jres = jax.jit(lambda u: sh.solve_batch(op, u, lam_min=lmn,
+                                            lam_max=lmx))(us)
+    # outer jit refuses nothing and fuses differently: discrete outcomes
+    # stay exact, floats to the usual gemm-caveat tolerance
+    np.testing.assert_allclose(np.asarray(res.lower),
+                               np.asarray(jres.lower), rtol=1e-12)
+    np.testing.assert_array_equal(np.asarray(res.iterations),
+                                  np.asarray(jres.iterations))
+
+    ja = sh.judge_argmax(op, us, lam_min=lmn, lam_max=lmx)
+    assert int(ja.index) == int(np.argmax(true))
+
+
+def main():
+    mesh = make_lane_mesh()
+    assert dict(mesh.shape) == {"lanes": 8}
+    check_solve_batch_parity(mesh)
+    check_nondivisible_padding(mesh)
+    check_per_lane_spectrum(mesh)
+    check_stacked_ops(mesh)
+    check_judge_batch(mesh)
+    check_judge_argmax(mesh)
+    check_engine_flush(mesh)
+    check_applications(mesh)
+    check_sharded_solver_wrapper(mesh)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,8 @@ import pytest
 
 from repro.core import BIFSolver, Dense, Masked, SparseBELL, \
     bell_from_dense, greedy_map, sparse_from_dense, stack_masks, stack_ops
-from repro.serve import BIFEngine, BIFRequest
+from repro.serve import BIFEngine, BIFRequest, rank_blocks
+from repro.serve.engine import flush_trace_count
 from conftest import make_spd
 
 
@@ -274,6 +275,32 @@ def test_bif_engine_rejects_malformed_requests_at_submit():
     good = engine.submit(BIFRequest(u=np.ones(n)))
     engine.flush()
     assert good.lower is not None and good.lower <= good.upper
+
+
+def test_rank_blocks_same_bucket_compiles_once():
+    """Distinct block counts in one padding bucket share ONE compiled
+    flush driver: rank_blocks pads the system size to the bucket and the
+    engine's shared jit (serve.engine._flush_run) keys on the padded
+    shapes + static solver config, so the second call is a cache hit.
+    Counted via the trace-time counter, which only ever increments when
+    jit misses its cache and re-traces."""
+    rng = np.random.default_rng(11)
+    keys_a = rng.standard_normal((24 * 4, 8)).astype(np.float32)  # 24 blocks
+    keys_b = rng.standard_normal((20 * 4, 8)).astype(np.float32)  # 20 blocks
+
+    order_a, stats_a = rank_blocks(keys_a, block=4, max_batch=8, bucket=32)
+    first = flush_trace_count()
+    order_b, stats_b = rank_blocks(keys_b, block=4, max_batch=8, bucket=32)
+    assert flush_trace_count() == first, \
+        "second rank_blocks call in the same bucket re-traced the driver"
+    # repeat of an identical call stays cached too
+    rank_blocks(keys_a, block=4, max_batch=8, bucket=32)
+    assert flush_trace_count() == first
+    # both calls produced real rankings over their own block counts
+    assert sorted(order_a.tolist()) == list(range(24))
+    assert sorted(order_b.tolist()) == list(range(20))
+    assert stats_a["blocks"] == 24 and stats_b["blocks"] == 20
+    assert len(stats_b["brackets"]) == 20
 
 
 def test_bif_engine_failed_flush_marks_chunk_and_keeps_tail():

@@ -1,0 +1,127 @@
+"""Convergence-rate pins for the paper's central theorem (Sec. 3 /
+Thm. 4.2): on an SPD system with condition number kappa, the
+Gauss-Radau bracket on ``u^T A^-1 u``
+
+  * always contains the true value, with the lower bounds monotonically
+    nondecreasing and the upper bounds nonincreasing in the iteration
+    count, and
+  * contracts geometrically — the gap shrinks per iteration at least as
+    fast as the CG-type rate ``rho = ((sqrt(kappa)-1)/(sqrt(kappa)+1))^2``.
+
+Every assertion here is against a CLOSED-FORM oracle (the dense solve
+for the true value; the kappa-rate formula for the contraction), never
+against the quadrature implementation itself — so a regression in the
+recurrence shows up as a real failure, not a self-consistent fiction.
+
+Spectra are exact by construction: conftest.make_spd with density=1
+places eigenvalues on a geometric grid [1/kappa, 1], so lam_min/lam_max
+are known, not estimated.
+
+The traces run with ``reorth=True``: the theorem is a statement about
+exact arithmetic, and finite-precision Lanczos WITHOUT
+reorthogonalization is known to violate the bounds at ~1e-7 relative
+for kappa=1000 (paper Sec. 5.4 'Instability' — that is why the solver
+grew the option). With full reorthogonalization containment holds to
+~1e-14 and the monotone/contraction pins are sharp.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BIFSolver, Dense
+from conftest import make_spd
+
+# floating-point slack for monotonicity (the sequences are monotone in
+# exact arithmetic; f64 rounding wobbles the last bits near convergence)
+_MONO_SLACK = 1e-9
+# the fitted per-iteration contraction may exceed the asymptotic bound
+# by transient factors; 15% slack keeps the pin meaningful (a wrong
+# recurrence converges at a hugely different rate or not at all)
+_RATE_SLACK = 1.15
+# stop fitting once the gap hits the f64 noise floor relative to scale
+_FLOOR = 1e-12
+
+
+def _trace_problem(kappa, n=64, seed=0, num_iters=None):
+    a = make_spd(n, kappa=kappa, seed=seed)          # geomspace spectrum
+    u = np.random.default_rng(seed + 1).standard_normal(n)
+    true = float(u @ np.linalg.solve(a, u))
+    solver = BIFSolver.create(max_iters=n, reorth=True)
+    if num_iters is None:
+        num_iters = n - 2
+    tr = solver.trace(Dense(jnp.asarray(a)), jnp.asarray(u), num_iters,
+                      lam_min=1.0 / kappa * 0.999, lam_max=1.001)
+    return tr, true
+
+
+def _rate_bound(kappa):
+    rk = np.sqrt(kappa)
+    return ((rk - 1.0) / (rk + 1.0)) ** 2
+
+
+@pytest.mark.parametrize("kappa", [10.0, 100.0, 1000.0])
+def test_brackets_contain_truth_and_are_monotone(kappa):
+    tr, true = _trace_problem(kappa)
+    lower = np.asarray(tr.radau_lower)     # right Gauss-Radau (Thm. 4)
+    upper = np.asarray(tr.radau_upper)     # left Gauss-Radau (Thm. 6)
+    gauss = np.asarray(tr.gauss)           # plain Gauss (Thm. 2)
+    lobatto = np.asarray(tr.lobatto)
+
+    scale = abs(true)
+    # (a) every iterate brackets the direct solve
+    assert np.all(lower <= true + 1e-9 * scale)
+    assert np.all(gauss <= true + 1e-9 * scale)
+    assert np.all(upper >= true - 1e-9 * scale)
+    assert np.all(lobatto >= true - 1e-9 * scale)
+    # Gauss is the loosest lower bound, Radau tightens it (Thm. 4)
+    assert np.all(gauss <= lower + _MONO_SLACK * scale)
+
+    # (b) monotone: lower bounds never step down, upper never step up
+    assert np.all(np.diff(lower) >= -_MONO_SLACK * scale)
+    assert np.all(np.diff(gauss) >= -_MONO_SLACK * scale)
+    assert np.all(np.diff(upper) <= _MONO_SLACK * scale)
+    assert np.all(np.diff(lobatto) <= _MONO_SLACK * scale)
+
+    # and the final bracket is genuinely tight
+    assert upper[-1] - lower[-1] <= 1e-6 * scale
+
+
+@pytest.mark.parametrize("kappa,seed", [(10.0, 0), (10.0, 3),
+                                        (100.0, 0), (100.0, 3),
+                                        (1000.0, 0), (1000.0, 3)])
+def test_gap_contracts_at_kappa_rate(kappa, seed):
+    """Fit the geometric contraction of the Radau gap and pin it below
+    the ((sqrt(k)-1)/(sqrt(k)+1))^2 closed-form rate (with slack)."""
+    tr, true = _trace_problem(kappa, seed=seed)
+    gap = np.asarray(tr.radau_upper) - np.asarray(tr.radau_lower)
+    scale = abs(true)
+
+    # fit over iterations where the gap is meaningfully above the noise
+    # floor (and strictly positive — exhaustion collapses it to ~0)
+    live = gap > _FLOOR * scale
+    m = int(np.argmin(live)) if not live.all() else len(gap)
+    assert m >= 5, "gap hit the floor too fast to fit a rate"
+    ratios = gap[1:m] / gap[:m - 1]
+    fitted = float(np.exp(np.mean(np.log(ratios))))
+
+    bound = _rate_bound(kappa)
+    assert fitted <= bound * _RATE_SLACK, (
+        f"kappa={kappa}: fitted per-iteration contraction {fitted:.4f} "
+        f"exceeds the closed-form rate {bound:.4f}")
+    # sanity on the oracle itself: a harder problem contracts slower
+    assert 0.0 < fitted < 1.0
+
+
+def test_rate_bound_orders_with_kappa():
+    """The pin is discriminating: measured rates order the same way the
+    closed-form bound does across two decades of kappa."""
+    fits = {}
+    for kappa in (10.0, 100.0, 1000.0):
+        tr, true = _trace_problem(kappa, seed=1)
+        gap = np.asarray(tr.radau_upper) - np.asarray(tr.radau_lower)
+        live = gap > _FLOOR * abs(true)
+        m = int(np.argmin(live)) if not live.all() else len(gap)
+        ratios = gap[1:m] / gap[:m - 1]
+        fits[kappa] = float(np.exp(np.mean(np.log(ratios))))
+    assert fits[10.0] < fits[100.0] < fits[1000.0]
+    assert fits[10.0] < _rate_bound(100.0)  # well-conditioned is FASTER
