@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from pathlib import Path
 
@@ -29,11 +30,12 @@ MODULES = [
     "kernel_report",          # Pallas kernel validation + accounting
     "batched_judges",         # per-candidate loop vs solve_batch (Sec. 6)
     "sharded_judges",         # 1-dev vs 8-virtual-device lanes (Sec. 7)
+    "engine_throughput",      # lockstep vs continuous batching (Sec. 8)
 ]
 
 # Suites whose tables are ALSO written to BENCH_<name>.json at the repo
 # root, so the perf trajectory is tracked in-tree across PRs.
-ROOT_TRACKED = {"batched_judges", "sharded_judges"}
+ROOT_TRACKED = {"batched_judges", "sharded_judges", "engine_throughput"}
 
 
 def main() -> None:
@@ -63,7 +65,9 @@ def main() -> None:
         if tables:
             (out_dir / f"{mod_name}.json").write_text(
                 json.dumps(tables, indent=1))
-            if mod_name in ROOT_TRACKED:
+            # BENCH_TINY smoke runs (the CI engine-scheduler smoke) must
+            # not clobber the in-tree perf trajectory with toy sizes
+            if mod_name in ROOT_TRACKED and not os.environ.get("BENCH_TINY"):
                 repo_root = Path(__file__).resolve().parent.parent
                 (repo_root / f"BENCH_{mod_name}.json").write_text(
                     json.dumps(tables, indent=1) + "\n")

@@ -68,7 +68,7 @@ from . import bounds, deprecation, double_greedy, dpp, gql, judge, lanczos, \
     loop_utils, operators, precond, sharded, solver, spectrum  # noqa: F401
 
 from .solver import ArgmaxResult, BIFSolver, JudgeResult, PairState, \
-    QuadratureTrace, SolveResult, SolverConfig  # noqa: F401
+    QuadratureTrace, QuadState, SolveResult, SolverConfig  # noqa: F401
 from .sharded import ShardedBIFSolver  # noqa: F401
 from .loop_utils import tree_freeze  # noqa: F401
 from .operators import Dense, Jacobi, Masked, MatvecFn, Shifted, SparseBELL, \

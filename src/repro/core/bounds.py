@@ -66,8 +66,9 @@ def bif_refine_until(op, u: Array, lam_min, lam_max, *, max_iters: int,
     decision matches the exact-value decision whenever decided_fn resolved.
 
     .. deprecated:: use ``BIFSolver(...).solve(op, u, decide=decided_fn,
-       ...)`` and read ``SolveResult.state``.
+       ...)`` and read ``SolveResult.state`` (a resumable ``QuadState``
+       whose ``.st`` is this GQLState).
     """
     _warn_once("bounds.bif_refine_until", "BIFSolver.solve(decide=...)")
     return _solver.BIFSolver.create(max_iters=max_iters).solve(
-        op, u, decide=decided_fn, lam_min=lam_min, lam_max=lam_max).state
+        op, u, decide=decided_fn, lam_min=lam_min, lam_max=lam_max).state.st

@@ -52,10 +52,14 @@ from jax.sharding import PartitionSpec as P
 from . import gql as _gql
 from . import operators as _ops
 from .loop_utils import tree_freeze
-from .solver import ArgmaxResult, BIFSolver, JudgeResult, SolveResult, \
-    _argmax_race, _argmax_scores
+from .solver import ArgmaxResult, BIFSolver, JudgeResult, QuadState, \
+    SolveResult, _argmax_race, _argmax_scores
 
 Array = jax.Array
+
+# it_cap sentinel when no per-lane budget applies: `st.it < cap` is then
+# always True and the needs_more rule reduces to the unbudgeted one.
+_NO_CAP = jnp.iinfo(jnp.int32).max
 
 
 def _pad_lane_arg(a, k: int, kp: int):
@@ -95,26 +99,104 @@ def _pad_lane_op(op, k: int, kp: int, axis: str):
     return jax.tree.map(pad, op, specs)
 
 
-def _run_sharded(solver: BIFSolver, op, u: Array, decide, decide_args,
-                 mesh, axis: str, lam_min, lam_max):
-    """The sharded retrospective loop on pre-padded (Kp, N) queries.
+# ---------------------------------------------------------------------------
+# The resumable sharded runtime (DESIGN.md Sec. 8): the QuadState of
+# core/solver.py with its per-lane leaves sharded over the mesh.
+# init_state_sharded / step_n_sharded / resume_sharded / finalize_sharded
+# mirror the single-device stepping API; solve_batch_sharded (and every
+# judge on top of it) is rebuilt on them.
 
-    ``decide(lo, hi, *decide_args)`` sees the GLOBAL (Kp,) brackets
-    (gathered across devices every iteration) and returns per-lane
-    resolution flags; ``decide_args`` are replicated on every device.
-    Returns global (Kp,) arrays: lower, upper, gauss_lower,
-    lobatto_upper, iterations, done.
+
+def _lam_specs(lam_min, lam_max, axis: str):
+    """Per-lane spectrum bounds (estimating modes return (K,) arrays from
+    prepare()) shard with the lanes; scalar bounds replicate."""
+    return tuple(P(axis) if jnp.ndim(lam) else P()
+                 for lam in (lam_min, lam_max))
+
+
+def _check_state(solver: BIFSolver, state: QuadState, what: str):
+    if solver.config.reorth or state.basis is not None:
+        raise NotImplementedError(
+            f"reorth is not implemented for the sharded driver; "
+            f"{what} requires reorth=False")
+    if state.st.it.ndim != 1:
+        raise ValueError(
+            f"{what} wants a (K,)-lane state, got lane shape "
+            f"{state.st.it.shape}")
+
+
+def init_state_sharded(solver: BIFSolver, op, u: Array, *, mesh,
+                       axis: str = "lanes", lam_min=None, lam_max=None,
+                       probe=None) -> QuadState:
+    """Prepare + iteration 1 with the K lanes sharded over ``mesh``.
+
+    Spectrum estimation / preconditioning run globally before sharding
+    (so resolved intervals match the single-device path bit-for-bit);
+    ``gql_init`` then runs per-device on each lane shard, exactly like
+    the drive's steps. K that does not divide the device count pads with
+    zero-query done-at-init lanes (Sec. 7.3); the returned state is the
+    PADDED (K',) state — ``finalize_sharded(..., nlanes=K)`` slices back.
     """
+    cfg = solver.config
+    if cfg.reorth:
+        raise NotImplementedError(
+            "reorth is not implemented for the sharded driver; "
+            "init_state_sharded requires reorth=False")
+    u = jnp.asarray(u)
+    if u.ndim != 2:
+        raise ValueError(
+            f"init_state_sharded wants (K, N) stacked queries, got shape "
+            f"{u.shape}")
+    op, u, lam_min, lam_max = solver.prepare(op, u, lam_min, lam_max, probe)
+    k = u.shape[0]
+    ndev = mesh.shape[axis]
+    kp = -(-k // ndev) * ndev
+    if kp != k:
+        u = jnp.pad(u, ((0, kp - k), (0, 0)))
+        op = _pad_lane_op(op, k, kp, axis)
+        lam_min = _pad_lane_lam(lam_min, k, kp)
+        lam_max = _pad_lane_lam(lam_max, k, kp)
+    lam_min = jnp.asarray(lam_min)
+    lam_max = jnp.asarray(lam_max)
+
+    fn = shard_map(
+        lambda op_loc, u_loc, lmn, lmx: _gql.gql_init(op_loc, u_loc, lmn,
+                                                      lmx),
+        mesh=mesh,
+        in_specs=(_ops.lane_specs(op, axis), P(axis))
+        + _lam_specs(lam_min, lam_max, axis),
+        out_specs=P(axis), check_rep=False)
+    st = fn(op, u, lam_min, lam_max)
+    return QuadState(op=op, st=st, lam_min=lam_min, lam_max=lam_max,
+                     basis=None, step=jnp.zeros((), jnp.int32))
+
+
+def _drive_sharded(solver: BIFSolver, state: QuadState, decide,
+                   decide_args, it_cap, mesh, axis: str,
+                   n: int | None):
+    """Advance the sharded state: ``n`` bounded steps (step_n) or to
+    completion (``n=None``, resume).
+
+    ``decide(lo, hi, *decide_args)`` sees the GLOBAL (K',) brackets
+    (gathered across devices every iteration) and returns per-lane
+    resolution flags; ``decide_args`` are replicated on every device,
+    ``it_cap`` (per-lane iteration budgets) shards with the lanes. The
+    ``lax.while_loop`` trip count is kept lockstep across devices by a
+    psum-carried continue flag, so the body's collectives always pair.
+    """
+    _check_state(solver, state, "the sharded stepping driver")
     cfg = solver.config
     max_iters = cfg.max_iters
     rec = solver._recurrence()
-    kp = u.shape[0]
+    kp = state.st.it.shape[0]
     kd = kp // mesh.shape[axis]
-    lam_min = jnp.asarray(lam_min, u.dtype)
-    lam_max = jnp.asarray(lam_max, u.dtype)
-    op_specs = _ops.lane_specs(op, axis)
+    if decide is None:
+        def decide(lo, hi):  # noqa: F811 — tolerance rule, no extra args
+            return solver.tolerance_resolved(lo, hi)
+    cap = jnp.full((kp,), _NO_CAP, jnp.int32) if it_cap is None \
+        else jnp.broadcast_to(jnp.asarray(it_cap, jnp.int32), (kp,))
 
-    def local_fn(op_loc, u_loc, lmn, lmx, *dargs):
+    def local_fn(op_loc, st_loc, lmn, lmx, cap_loc, *dargs):
         idx = jax.lax.axis_index(axis)
 
         def gather(x):
@@ -130,7 +212,8 @@ def _run_sharded(solver: BIFSolver, op, u: Array, decide, decide_args,
             return jax.lax.dynamic_slice_in_dim(res, idx * kd, kd)
 
         def needs_more(st):
-            return ~st.done & ~resolved_local(st) & (st.it < max_iters)
+            return ~st.done & ~resolved_local(st) & (st.it < max_iters) \
+                & (st.it < cap_loc)
 
         def cont_of(nm):
             # global "any lane anywhere still needs work"; identical on
@@ -138,34 +221,83 @@ def _run_sharded(solver: BIFSolver, op, u: Array, decide, decide_args,
             # the body's all_gathers always match up.
             return jax.lax.psum(jnp.any(nm).astype(jnp.int32), axis) > 0
 
-        st0 = _gql.gql_init(op_loc, u_loc, lmn, lmx)
-        nm0 = needs_more(st0)
+        nm0 = needs_more(st_loc)
 
         def cond(carry):
-            return carry[2]
+            cont = carry[2]
+            return cont if n is None else cont & (carry[3] < n)
 
         def body(carry):
-            st, nm, _ = carry
+            st, nm, _, taken = carry
             st1 = _gql.gql_step(op_loc, st, lmn, lmx, recurrence=rec)
             st1 = tree_freeze(st1, st, ~nm)
             nm1 = needs_more(st1)
-            return st1, nm1, cont_of(nm1)
+            return st1, nm1, cont_of(nm1), taken + 1
 
-        st, _, _ = jax.lax.while_loop(cond, body, (st0, nm0, cont_of(nm0)))
-        return (_gql.lower_bound(st), _gql.upper_bound(st),
-                _gql.lower_bound_gauss(st), _gql.upper_bound_lobatto(st),
-                st.it, st.done)
+        st, _, _, _ = jax.lax.while_loop(
+            cond, body,
+            (st_loc, nm0, cont_of(nm0), jnp.zeros((), jnp.int32)))
+        return st
 
-    # per-lane spectrum bounds (estimating modes return (K,) arrays from
-    # prepare()) shard with the lanes; scalar bounds replicate
-    lam_specs = tuple(P(axis) if lam.ndim else P()
-                      for lam in (lam_min, lam_max))
     fn = shard_map(
         local_fn, mesh=mesh,
-        in_specs=(op_specs, P(axis)) + lam_specs
-        + tuple(P() for _ in decide_args),
-        out_specs=(P(axis),) * 6, check_rep=False)
-    return fn(op, u, lam_min, lam_max, *decide_args)
+        in_specs=(_ops.lane_specs(state.op, axis),
+                  jax.tree.map(lambda _: P(axis), state.st))
+        + _lam_specs(state.lam_min, state.lam_max, axis)
+        + (P(axis),) + tuple(P() for _ in decide_args),
+        out_specs=P(axis), check_rep=False)
+    st = fn(state.op, state.st, state.lam_min, state.lam_max, cap,
+            *decide_args)
+    # basis-free states use `step` only as bookkeeping; the global trip
+    # count is bounded below by the largest per-lane advance
+    return state._replace(st=st,
+                          step=state.step + jnp.max(st.it - state.st.it))
+
+
+def step_n_sharded(solver: BIFSolver, state: QuadState, n: int,
+                   decide=None, *, decide_args=(), it_cap=None, mesh,
+                   axis: str = "lanes") -> QuadState:
+    """Advance a sharded :class:`QuadState` by at most ``n`` iterations —
+    the sharded twin of ``BIFSolver.step_n`` (same freezing rule, so
+    resume-after-step_n is bit-exact with the uninterrupted drive)."""
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    if n == 0:
+        return state
+    return _drive_sharded(solver, state, decide, decide_args, it_cap,
+                          mesh, axis, n)
+
+
+def resume_sharded(solver: BIFSolver, state: QuadState, decide=None, *,
+                   decide_args=(), it_cap=None, mesh,
+                   axis: str = "lanes") -> QuadState:
+    """Run a sharded :class:`QuadState` to completion — the sharded twin
+    of ``BIFSolver.resume``."""
+    return _drive_sharded(solver, state, decide, decide_args, it_cap,
+                          mesh, axis, None)
+
+
+def finalize_sharded(solver: BIFSolver, state: QuadState, decide=None, *,
+                     decide_args=(), nlanes: int | None = None
+                     ) -> SolveResult:
+    """Read a :class:`SolveResult` off a (partial or completed) sharded
+    state, slicing padding lanes back to ``nlanes``. ``certified``
+    re-evaluates ``decide`` on the full padded brackets first (cross-lane
+    rules like the argmax race see every lane), then slices."""
+    st = state.st
+    lo, hi = _gql.lower_bound(st), _gql.upper_bound(st)
+    if decide is None:
+        certified = solver.tolerance_resolved(lo, hi)
+    else:
+        certified = decide(lo, hi, *decide_args)
+    k = lo.shape[0] if nlanes is None else nlanes
+    certified = certified[:k]
+    return SolveResult(
+        lower=lo[:k], upper=hi[:k],
+        gauss_lower=_gql.lower_bound_gauss(st)[:k],
+        lobatto_upper=_gql.upper_bound_lobatto(st)[:k],
+        iterations=st.it[:k], converged=st.done[:k] | certified,
+        certified=certified, state=state)
 
 
 def solve_batch_sharded(solver: BIFSolver, op, u: Array, decide=None, *,
@@ -184,44 +316,29 @@ def solve_batch_sharded(solver: BIFSolver, op, u: Array, decide=None, *,
     globally before sharding, so resolved intervals match the
     single-device path bit-for-bit.
 
-    Returns a :class:`SolveResult` over the original K lanes with
-    ``state=None`` (the final per-lane GQL state stays on its device).
+    Sugar for ``finalize_sharded(resume_sharded(init_state_sharded(...)))``
+    — callers that pause/checkpoint/resume use the stepping API directly.
+    Returns a :class:`SolveResult` over the original K lanes whose
+    ``state`` is the final PADDED :class:`QuadState` (resume it with
+    ``resume_sharded``; per-lane GQL leaves stay sharded on their
+    devices).
     """
-    cfg = solver.config
-    if cfg.reorth:
-        raise NotImplementedError(
-            "reorth is not implemented for the sharded driver; "
-            "solve_batch_sharded requires reorth=False")
     u = jnp.asarray(u)
     if u.ndim != 2:
         raise ValueError(
             f"solve_batch_sharded wants (K, N) stacked queries, got shape "
             f"{u.shape}")
-    op, u, lam_min, lam_max = solver.prepare(op, u, lam_min, lam_max, probe)
     k = u.shape[0]
-    ndev = mesh.shape[axis]
-    kp = -(-k // ndev) * ndev
-    if kp != k:
-        u = jnp.pad(u, ((0, kp - k), (0, 0)))
-        op = _pad_lane_op(op, k, kp, axis)
-        lam_min = _pad_lane_lam(lam_min, k, kp)
-        lam_max = _pad_lane_lam(lam_max, k, kp)
-
-    if decide is None:
-        def decide_fn(lo, hi):
-            return solver.tolerance_resolved(lo, hi)
-        args = ()
-    else:
-        decide_fn = decide
-        args = tuple(_pad_lane_arg(a, k, kp) for a in decide_args)
-
-    lo, hi, gl, lu, it, done = _run_sharded(
-        solver, op, u, decide_fn, args, mesh, axis, lam_min, lam_max)
-    certified = decide_fn(lo, hi, *args)[:k]
-    return SolveResult(
-        lower=lo[:k], upper=hi[:k], gauss_lower=gl[:k],
-        lobatto_upper=lu[:k], iterations=it[:k],
-        converged=done[:k] | certified, certified=certified, state=None)
+    state = init_state_sharded(solver, op, u, mesh=mesh, axis=axis,
+                               lam_min=lam_min, lam_max=lam_max,
+                               probe=probe)
+    kp = state.st.it.shape[0]
+    args = tuple(_pad_lane_arg(a, k, kp) for a in decide_args) \
+        if decide is not None else ()
+    state = resume_sharded(solver, state, decide, decide_args=args,
+                           mesh=mesh, axis=axis)
+    return finalize_sharded(solver, state, decide, decide_args=args,
+                            nlanes=k)
 
 
 def judge_batch_sharded(solver: BIFSolver, op, u: Array, t: Array, *,
@@ -248,8 +365,8 @@ def judge_batch_sharded(solver: BIFSolver, op, u: Array, t: Array, *,
 
 def judge_argmax_sharded(solver: BIFSolver, op, u: Array, *, mesh,
                          axis: str = "lanes", shift=None, scale=None,
-                         valid=None, lam_min=None, lam_max=None,
-                         probe=None) -> ArgmaxResult:
+                         valid=None, prior_upper=None, lam_min=None,
+                         lam_max=None, probe=None) -> ArgmaxResult:
     """Certified argmax race over K sharded lanes.
 
     The race itself is the cross-device reduction of the tentpole: each
@@ -279,18 +396,29 @@ def judge_argmax_sharded(solver: BIFSolver, op, u: Array, *, mesh,
     # padding lanes enter the race invalid: score sentinel -1e30, done at
     # iteration one — they change neither dominance nor the certificate
     valid_p = jnp.pad(valid_k, (0, kp - k)) if kp != k else valid_k
+    prior_k = None if prior_upper is None else \
+        jnp.broadcast_to(jnp.asarray(prior_upper, u.dtype), (k,))
 
-    def decide(lo, hi, shift, scale, valid):
-        dominated, winner = _argmax_race(
-            *_argmax_scores(lo, hi, shift, scale, valid))
-        return dominated | winner
+    if prior_k is None:
+        def decide(lo, hi, shift, scale, valid):
+            dominated, winner = _argmax_race(
+                *_argmax_scores(lo, hi, shift, scale, valid))
+            return dominated | winner
+
+        dargs = (shift_k, scale_k, valid_p)
+    else:
+        def decide(lo, hi, shift, scale, valid, prior):
+            dominated, winner = _argmax_race(
+                *_argmax_scores(lo, hi, shift, scale, valid, prior))
+            return dominated | winner
+
+        dargs = (shift_k, scale_k, valid_p, prior_k)
 
     res = solve_batch_sharded(
         solver, op, u, decide, mesh=mesh, axis=axis, lam_min=lam_min,
-        lam_max=lam_max, probe=probe,
-        decide_args=(shift_k, scale_k, valid_p))
+        lam_max=lam_max, probe=probe, decide_args=dargs)
     slo, shi = _argmax_scores(res.lower, res.upper, shift_k, scale_k,
-                              valid_k)
+                              valid_k, prior_k)
     _, winner = _argmax_race(slo, shi)
     certified = jnp.any(winner, axis=-1)
     mid = 0.5 * (slo + shi)

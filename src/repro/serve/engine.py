@@ -5,16 +5,24 @@ batching, greedy/temperature sampling, per-request stop handling, int8
 KV option. The heavy lifting (sharded steps) comes from launch.steps; on
 CPU tests this runs the same code unsharded.
 
-``BIFEngine``: the quadrature-serving counterpart (DESIGN.md Sec. 6) —
-queues incoming bilinear-inverse-form requests against one kernel
-matrix and flushes them through ``BIFSolver.solve_batch`` in padded
-lanes of ``max_batch``, so K concurrent judges cost one batched driver
-instead of K sequential solves.
+``BIFEngine``: the quadrature-serving counterpart (DESIGN.md Sec. 8) —
+a continuous-batching scheduler over a fixed pool of ``max_batch``
+quadrature lanes. Requests queue via ``submit``; ``flush`` admits them
+into free lanes, steps the whole pool in fixed-size chunks through the
+resumable runtime (``BIFSolver.step_n``), retires lanes the moment
+their decision resolves (or their iteration/deadline budget runs out),
+and backfills the vacated lanes from the queue mid-flight — no
+pad-to-``max_batch`` lockstep flushes, so one straggler bracket no
+longer stalls a whole chunk of fast judges. Budget-interrupted requests
+come back as partial results carrying their banked bracket and
+:class:`~repro.core.solver.QuadState`; resubmitting them resumes the
+solve bit-exactly where it stopped.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+import time
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,10 +30,12 @@ import numpy as np
 
 from functools import partial
 
+from ..core import gql as core_gql
 from ..core import operators as core_ops
 from ..core import sharded as core_sharded
 from ..core import spectrum as core_spectrum
-from ..core.solver import BIFSolver
+from ..core.loop_utils import tree_freeze
+from ..core.solver import BIFSolver, QuadState
 from ..models import model as M
 
 
@@ -93,31 +103,104 @@ class BIFRequest:
     ``t`` set: threshold judge (decision = t < u^T A^-1 u, Alg. 4);
     ``t`` None: adaptive bracket to the solver's rtol/atol.
     ``mask``: optional principal-submatrix mask (the A_Y of a chain).
+    ``max_iters``: per-submission quadrature-iteration budget (on top of
+    the solver's ``max_iters`` ceiling); ``deadline``: wall-clock cutoff
+    (a ``time.monotonic()`` instant, checked at chunk boundaries). A
+    request whose budget/deadline expires before its decision resolves
+    comes back PARTIAL: ``resolved=False``, the banked bracket in
+    ``lower``/``upper``, and the lane's quadrature state in ``state`` —
+    resubmit it (optionally with a new budget) to resume the solve
+    bit-exactly where it stopped instead of starting over.
     """
     u: np.ndarray
     t: Optional[float] = None
     mask: Optional[np.ndarray] = None
+    max_iters: Optional[int] = None
+    deadline: Optional[float] = None
     # filled by BIFEngine.flush():
     lower: Optional[float] = None
     upper: Optional[float] = None
     decision: Optional[bool] = None
     certified: Optional[bool] = None
-    iterations: Optional[int] = None
+    iterations: Optional[int] = None      # cumulative across resubmissions
+    resolved: Optional[bool] = None       # decision/tolerance resolved OR
+    #                                       Krylov-exhausted (bracket exact)
+    state: Optional[Any] = None           # banked per-lane QuadState (partial)
     # set when a flush failed on this request's chunk (the request is
     # dropped from the queue; resubmit to retry a transient failure)
     error: Optional[Exception] = None
 
 
-# Trace-time counter for the shared flush driver: increments once per
-# fresh compile (jit cache miss), never on cache hits. Tests pin the
+# Trace-time counter for the shared flush drivers (lockstep _flush_run +
+# continuous-batching _pool_admit_run/_pool_step_run): increments once
+# per fresh compile (jit cache miss), never on cache hits. Tests pin the
 # bucketed-padding contract of serve.kv_select.rank_blocks with it.
 _FLUSH_TRACES = [0]
 
 
 def flush_trace_count() -> int:
-    """How many times the shared BIFEngine flush driver has been traced
+    """How many times the shared BIFEngine flush drivers have been traced
     (== compiled) in this process."""
     return _FLUSH_TRACES[0]
+
+
+def _mixed_decide(solver, lo, hi, ts, has_t):
+    """The engine's per-lane resolution rule: judge lanes resolve on
+    their threshold, bracket lanes on the solver's tolerance rule."""
+    thr = (ts < lo) | (ts >= hi)
+    return jnp.where(has_t, thr, solver.tolerance_resolved(lo, hi))
+
+
+@jax.jit
+def _pool_admit_run(solver, op, st, us, masks, fresh, lam_min, lam_max):
+    """Seed the ``fresh`` lanes of the pool from (pre-masked) ``us`` /
+    ``masks``; every other lane's quadrature state passes through
+    untouched. ``st=None`` initializes the whole pool (unoccupied lanes
+    carry zero queries, which ``gql_init`` marks done at iteration one —
+    the usual dummy-lane rule). Module-level jit shared across engines,
+    keyed on (solver config, op treedef, pool shapes)."""
+    _FLUSH_TRACES[0] += 1
+    state = solver.init_state(core_ops.Masked(op, masks), us,
+                              lam_min=lam_min, lam_max=lam_max)
+    if st is not None:
+        state = state._replace(st=tree_freeze(state.st, st, ~fresh))
+    return state
+
+
+@jax.jit
+def _pool_scatter_run(st, lane_st, idx):
+    """Insert one banked lane GQLState at pool slot ``idx`` (warm
+    admission of a resubmitted partial request)."""
+    return jax.tree.map(lambda pool, lane: pool.at[idx].set(lane),
+                        st, lane_st)
+
+
+@partial(jax.jit, static_argnames=("n", "mesh", "axis"))
+def _pool_step_run(solver, state, ts, has_t, it_cap, *, n, mesh=None,
+                   axis: str = "lanes"):
+    """One scheduler round: advance the pool by at most ``n`` quadrature
+    iterations through the resumable runtime (``BIFSolver.step_n``, or
+    its sharded twin when the engine is mesh-bound), freezing lanes the
+    moment they resolve or exhaust their per-request ``it_cap`` budget.
+    Returns the stepped state plus everything the host scheduler needs
+    to retire lanes."""
+    _FLUSH_TRACES[0] += 1
+    if mesh is None:
+        state = solver.step_n(
+            state, n, lambda lo, hi: _mixed_decide(solver, lo, hi, ts,
+                                                   has_t),
+            it_cap=it_cap)
+    else:
+        state = core_sharded.step_n_sharded(
+            solver, state, n,
+            lambda lo, hi, ts_, ht_: _mixed_decide(solver, lo, hi, ts_,
+                                                   ht_),
+            decide_args=(ts, has_t), it_cap=it_cap, mesh=mesh, axis=axis)
+    lo = core_gql.lower_bound(state.st)
+    hi = core_gql.upper_bound(state.st)
+    resolved = _mixed_decide(solver, lo, hi, ts, has_t)
+    decision = BIFSolver.threshold_decision(ts, lo, hi)
+    return state, lo, hi, resolved, decision, state.st.done, state.st.it
 
 
 @partial(jax.jit, static_argnames=("mesh", "axis"))
@@ -152,36 +235,49 @@ def _flush_run(solver, op, us, masks, ts, has_t, lam_min, lam_max, *,
             axis=axis, lam_min=lam_min, lam_max=lam_max)
     decision = BIFSolver.threshold_decision(ts, res.lower, res.upper)
     return (res.lower, res.upper, decision,
-            decide(res.lower, res.upper, ts, has_t), res.iterations)
+            decide(res.lower, res.upper, ts, has_t), res.iterations,
+            res.converged)
 
 
 class BIFEngine:
-    """Batches BIF requests into ``solve_batch`` flushes.
+    """Continuous-batching scheduler for BIF requests (DESIGN.md Sec. 8).
 
-    Requests accumulate via ``submit`` and are served by ``flush`` in
-    padded lane groups of ``max_batch`` (one compiled driver shape per
-    engine, shared across engines via the module-level ``_flush_run``).
+    Requests accumulate via ``submit``; ``flush`` serves them through a
+    fixed pool of ``max_batch`` quadrature lanes. Each scheduler round
+    admits queued requests into free lanes (FIFO), steps the WHOLE pool
+    by ``chunk_iters`` quadrature iterations through the resumable
+    runtime (one stacked matvec per iteration; resolved lanes frozen
+    bit-exactly), then retires every lane whose decision resolved — or
+    whose per-request iteration/deadline budget ran out — and backfills
+    the vacated lanes from the queue mid-flight. A straggler bracket
+    therefore occupies one lane while fast judges stream through the
+    rest, instead of stalling a padded lockstep chunk behind it
+    (``flush(mode='lockstep')`` keeps the old pad-to-``max_batch``
+    behavior for comparison; ``benchmarks/engine_throughput.py`` tracks
+    the gap). Completion is FIFO-preserving: ``flush`` returns requests
+    in submission order regardless of retirement order.
+
     Mixed traffic is fine: judge lanes resolve on their threshold,
-    bracket lanes on tolerance, and every resolved lane freezes while
-    the rest continue — the per-lane early exit of DESIGN.md Sec. 6.
-    Dummy padding lanes (zero query) resolve at iteration one and cost
-    only their share of the stacked matvec.
+    bracket lanes on tolerance. Unoccupied lanes (zero query) resolve at
+    iteration one and cost only their share of the stacked matvec.
 
     With ``mesh`` set (a 1-D lane mesh from
-    ``launch.mesh.make_lane_mesh``), each flush runs the sharded driver
-    of DESIGN.md Sec. 7: ``max_batch`` is rounded up to a whole number
-    of lanes per device and the flush's lanes split across the mesh.
+    ``launch.mesh.make_lane_mesh``), pool steps run the sharded stepping
+    driver of DESIGN.md Sec. 7/8: ``max_batch`` is rounded up to a whole
+    number of lanes per device and the pool's lanes split across the
+    mesh (the pool state shards with them).
     """
 
     def __init__(self, op, *, solver: BIFSolver | None = None,
                  max_batch: int = 64, lam_min: float | None = None,
                  lam_max: float | None = None, mesh=None,
-                 lane_axis: str = "lanes"):
+                 lane_axis: str = "lanes", chunk_iters: int = 8):
         self.op = op
         self.solver = solver if solver is not None \
             else BIFSolver.create(max_iters=64, rtol=1e-3)
         self.mesh = mesh
         self.lane_axis = lane_axis
+        self.chunk_iters = max(1, int(chunk_iters))
         max_batch = int(max_batch)
         if mesh is not None:
             # padded flushes must round up to num_devices x lanes_per_device
@@ -221,6 +317,24 @@ class BIFEngine:
             raise ValueError(
                 f"BIFRequest.mask must have shape ({n},), got "
                 f"{np.asarray(req.mask).shape}")
+        if req.state is not None:
+            # a banked state continues the ORIGINAL (u, mask) query: the
+            # Lanczos recurrence is only valid for the system it was
+            # started on. A mutated query must re-solve from scratch.
+            mask = np.ones((n,), self._dtype) if req.mask is None \
+                else np.asarray(req.mask, self._dtype)
+            banked = getattr(req, "_banked_query", None)
+            if banked is None \
+                    or not np.array_equal(u.astype(self._dtype) * mask,
+                                          banked) \
+                    or not np.array_equal(mask,
+                                          np.asarray(req.state.op.mask,
+                                                     self._dtype)):
+                raise ValueError(
+                    "BIFRequest.state banks the solve of the originally "
+                    "submitted (u, mask); changing either invalidates "
+                    "the banked recurrence — set state=None to re-solve "
+                    "the new query from scratch")
         if req.t is not None:
             try:
                 req.t = float(req.t)
@@ -234,13 +348,173 @@ class BIFEngine:
     def pending(self) -> int:
         return len(self._queue)
 
-    def flush(self) -> List[BIFRequest]:
-        """Serve every queued request; returns them in submission order.
+    def _step(self, state, ts, has_t, it_cap):
+        """One pool decision round (seam for tests / fault injection)."""
+        return _pool_step_run(self.solver, state, ts, has_t, it_cap,
+                              n=self.chunk_iters, mesh=self.mesh,
+                              axis=self.lane_axis)
 
-        If the driver fails on a chunk, that chunk's requests get their
-        ``error`` set and are dropped (resubmit to retry), the untried
-        tail stays queued, and the exception propagates.
+    def flush(self, *, mode: str = "continuous") -> List[BIFRequest]:
+        """Serve every queued request; returns them in submission order
+        (FIFO-preserving completion — retirement order never reorders the
+        returned list). Budget/deadline-interrupted requests come back
+        partial (``resolved=False``) with their banked bracket + state.
+
+        ``mode='lockstep'`` keeps the legacy padded chunk flushes (no
+        backfill, budgets and deadlines ignored) — the benchmark
+        baseline. Solver configs the scheduler does not take (reorth,
+        preconditioning) fall back to it automatically.
+
+        If the driver fails, the in-flight requests get their ``error``
+        set and are dropped (resubmit to retry), the unadmitted tail
+        stays queued in order, and the exception propagates; requests
+        that already retired keep their results.
         """
+        if mode == "continuous":
+            return self._flush_continuous()
+        if mode == "lockstep":
+            return self._flush_lockstep()
+        raise ValueError(f"mode must be 'continuous' or 'lockstep', "
+                         f"got {mode!r}")
+
+    # -- the continuous-batching scheduler --------------------------------
+
+    def _flush_continuous(self) -> List[BIFRequest]:
+        cfg = self.solver.config
+        if cfg.reorth or cfg.precondition != "none":
+            # the stepping scheduler banks/merges plain lane states;
+            # reorth bases and preconditioned transforms keep the legacy
+            # lockstep path (per-request budgets/deadlines don't apply
+            # there, but such configs never could use them before)
+            return self._flush_lockstep()
+        queue, self._queue = self._queue, []
+        if not queue:
+            return queue
+        solver = self.solver
+        n, p = self.op.n, self.max_batch
+        dt = self._dtype
+        max_iters = cfg.max_iters
+
+        # host-side pool bookkeeping; device-side state in `state`
+        us = np.zeros((p, n), dt)
+        masks = np.ones((p, n), dt)
+        ts = np.zeros((p,), dt)
+        has_t = np.zeros((p,), bool)
+        caps = np.zeros((p,), np.int32)   # 0 = vacated/dead lane (frozen)
+        slots: List[Optional[BIFRequest]] = [None] * p
+        pending = list(queue)
+        state = None
+        lam_min = jnp.asarray(self.lam_min, dt)
+        lam_max = jnp.asarray(self.lam_max, dt)
+
+        try:
+            while pending or any(r is not None for r in slots):
+                # --- admit: backfill free lanes from the queue (FIFO) ---
+                fresh = np.zeros((p,), bool)
+                warm = []
+                dirty = state is None
+                for i in range(p):
+                    if slots[i] is not None or not pending:
+                        continue
+                    r = pending.pop(0)
+                    slots[i] = r
+                    m = np.ones((n,), dt) if r.mask is None \
+                        else np.asarray(r.mask, dt)
+                    masks[i] = m
+                    # restrict the query to the mask: Masked is only the
+                    # true submatrix system for u supported on it (Sec. 3.2)
+                    us[i] = np.asarray(r.u, dt) * m
+                    ts[i] = 0.0 if r.t is None else r.t
+                    has_t[i] = r.t is not None
+                    budget = max_iters if r.max_iters is None \
+                        else max(int(r.max_iters), 0)
+                    if r.state is not None:
+                        # warm admission: resume the banked state
+                        warm.append((i, r.state.st))
+                        caps[i] = min(int(r.state.it) + budget, max_iters)
+                    else:
+                        fresh[i] = True
+                        caps[i] = min(budget, max_iters)
+                    dirty = True
+                if dirty:
+                    if state is None or fresh.any():
+                        # fresh lanes seed from a POOL-SHAPED init on
+                        # purpose: per-lane (1, N) inits would be cheaper
+                        # (~1 pool matvec per backfill round) but change
+                        # the matvec shape, and gemv-vs-gemm rounding
+                        # noise can flip marginal iteration counts vs the
+                        # lockstep baseline (the Sec. 6.1 caveat)
+                        state = _pool_admit_run(
+                            solver, self.op,
+                            None if state is None else state.st,
+                            jnp.asarray(us), jnp.asarray(masks),
+                            jnp.asarray(fresh), lam_min, lam_max)
+                    else:
+                        # warm-only round: every admitted lane scatters a
+                        # banked state in, so skip the pool init matvec
+                        # and just rebind the masks on the pool operator
+                        state = state._replace(op=dataclasses.replace(
+                            state.op, mask=jnp.asarray(masks, dt)))
+                    for i, lane_st in warm:
+                        state = state._replace(
+                            st=_pool_scatter_run(state.st, lane_st,
+                                                 jnp.asarray(i)))
+
+                # --- one decision round over the whole pool ---
+                state, lo, hi, res, dec, done, its = self._step(
+                    state, jnp.asarray(ts), jnp.asarray(has_t),
+                    jnp.asarray(caps))
+                lo_h, hi_h = np.asarray(lo), np.asarray(hi)
+                res_h, dec_h = np.asarray(res), np.asarray(dec)
+                done_h, it_h = np.asarray(done), np.asarray(its)
+                now = time.monotonic()
+
+                # --- retire: resolved lanes + expired budgets/deadlines ---
+                for i in range(p):
+                    r = slots[i]
+                    if r is None:
+                        continue
+                    resolved = bool(res_h[i]) or bool(done_h[i])
+                    capped = int(it_h[i]) >= min(int(caps[i]), max_iters)
+                    timed_out = r.deadline is not None and now >= r.deadline
+                    if not (resolved or capped or timed_out):
+                        continue
+                    r.lower, r.upper = float(lo_h[i]), float(hi_h[i])
+                    r.decision = bool(dec_h[i]) if r.t is not None else None
+                    r.certified = bool(res_h[i])
+                    r.resolved = resolved
+                    r.iterations = int(it_h[i])
+                    if not resolved and int(it_h[i]) < max_iters:
+                        # interrupted with headroom left: bank a per-lane
+                        # QuadState so resubmission resumes bit-exactly
+                        # (plus the premasked query, so submit() can
+                        # reject a mutated u/mask at the door)
+                        r.state = QuadState(
+                            op=dataclasses.replace(
+                                state.op, mask=state.op.mask[i]),
+                            st=jax.tree.map(lambda l: l[i], state.st),
+                            lam_min=state.lam_min, lam_max=state.lam_max,
+                            basis=None, step=state.step)
+                        r._banked_query = us[i].copy()
+                    else:
+                        r.state = None
+                    slots[i] = None
+                    caps[i] = 0  # freeze the vacated lane until backfill
+        except Exception as e:
+            # In-flight requests carry the error and are dropped (a
+            # poison request must not wedge everything behind it); the
+            # unadmitted tail stays queued IN ORDER; already-retired
+            # requests keep their results.
+            for r in slots:
+                if r is not None:
+                    r.error = e
+            self._queue = pending + self._queue
+            raise
+        return queue
+
+    # -- the legacy lockstep flush (benchmark baseline) --------------------
+
+    def _flush_lockstep(self) -> List[BIFRequest]:
         queue, self._queue = self._queue, []
         n, b = self.op.n, self.max_batch
         for start in range(0, len(queue), b):
@@ -259,7 +533,7 @@ class BIFEngine:
                     if r.t is not None:
                         ts[i] = r.t
                         has_t[i] = True
-                lo, hi, dec, cert, it = self._run(
+                lo, hi, dec, cert, it, conv = self._run(
                     jnp.asarray(us), jnp.asarray(masks), jnp.asarray(ts),
                     jnp.asarray(has_t))
             except Exception as e:
@@ -278,4 +552,7 @@ class BIFEngine:
                 r.decision = bool(dec[i]) if r.t is not None else None
                 r.certified = bool(cert[i])
                 r.iterations = int(it[i])
+                # same rule as the scheduler: resolved by the decision
+                # OR by Krylov exhaustion (the bracket is then exact)
+                r.resolved = bool(conv[i])
         return queue

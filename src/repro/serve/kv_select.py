@@ -61,7 +61,8 @@ def select_diverse_blocks(keys: np.ndarray, *, block: int = 128,
 def rank_blocks(keys: np.ndarray, *, block: int = 128, ridge: float = 1e-3,
                 bandwidth: float = 0.5, max_batch: int = 32,
                 bucket: int = 32, mesh=None,
-                solver_config: SolverConfig | None = None):
+                solver_config: SolverConfig | None = None,
+                coarse_iters: int | None = None):
     """Certified redundancy ranking of pooled key blocks, served batched.
 
     Block i's score is the leverage-style bilinear form
@@ -70,17 +71,24 @@ def rank_blocks(keys: np.ndarray, *, block: int = 128, ridge: float = 1e-3,
     means block i is well explained by the others (safe to evict first).
     Excluding i matters: against the full K the form collapses to
     ``K_ii = 1 + ridge`` identically for every block. All N candidate
-    BIFs go through a :class:`BIFEngine` in padded lane groups of
-    ``max_batch``: one batched driver per flush group instead of N
-    sequential solves.
+    BIFs go through a :class:`BIFEngine` lane pool: one continuous-
+    batching scheduler instead of N sequential solves.
+
+    ``coarse_iters`` turns on the two-phase warm-started ranking of
+    DESIGN.md Sec. 8.3: phase 1 brackets every block under a small
+    per-request iteration budget; only blocks whose bracket still
+    overlaps another block's (rank-ambiguous) are resubmitted — carrying
+    their banked :class:`~repro.core.solver.QuadState` — and resume
+    where they stopped instead of re-solving from scratch. Blocks whose
+    coarse bracket already separates keep their cheap answer.
 
     The kernel's system size is padded to a multiple of ``bucket``
     (identity rows, masked out of every request), so nearby block counts
-    land on one flush-driver shape: the engine's shared jitted driver
-    then reuses a single compile across calls whose ``n`` falls in the
+    land on one flush-driver shape: the engine's shared jitted drivers
+    then reuse a single compile across calls whose ``n`` falls in the
     same bucket instead of tracing afresh per block count (pinned in
     tests via ``serve.engine.flush_trace_count``). ``mesh`` routes the
-    flushes through the device-sharded driver (DESIGN.md Sec. 7).
+    pool steps through the device-sharded driver (DESIGN.md Sec. 7).
 
     Returns ``(order, stats)`` with ``order`` the block indices most-
     redundant first and per-block certified brackets in ``stats``.
@@ -108,15 +116,37 @@ def rank_blocks(keys: np.ndarray, *, block: int = 128, ridge: float = 1e-3,
         mask[i] = 0.0
         u = np.zeros(n_pad, dtype=np.float32)
         u[:n] = kmat[:, i]
-        reqs.append(engine.submit(BIFRequest(u=u, mask=mask)))
+        reqs.append(engine.submit(BIFRequest(u=u, mask=mask,
+                                             max_iters=coarse_iters)))
     engine.flush()
+    flushes = 1
+    refined = 0
+    if coarse_iters is not None:
+        los = np.array([r.lower for r in reqs])
+        his = np.array([r.upper for r in reqs])
+        for i, r in enumerate(reqs):
+            if r.resolved:
+                continue  # already at the solver's tolerance
+            # rank-ambiguous: bracket overlaps some other block's
+            others = np.arange(n) != i
+            if np.any((los[others] < his[i]) & (los[i] < his[others])):
+                r.max_iters = None  # full budget; resumes banked state
+                engine.submit(r)
+                refined += 1
+        if refined:
+            engine.flush()
+            flushes += 1
     mids = np.array([0.5 * (r.lower + r.upper) for r in reqs])
     order = np.argsort(-mids)
     return order, {
         "brackets": [(r.lower, r.upper) for r in reqs],
         "iterations": int(sum(r.iterations for r in reqs)),
         "certified": int(sum(r.certified for r in reqs)),
-        "flushes": -(-n // engine.max_batch), "blocks": n}
+        "resolved": int(sum(bool(r.resolved) for r in reqs)),
+        "refined": refined,
+        # scheduler passes over the lane pool (the continuous engine has
+        # no per-max_batch chunks; each flush call is one scheduler run)
+        "flushes": flushes, "blocks": n}
 
 
 def apply_block_mask(cache_k: jax.Array, cache_v: jax.Array,

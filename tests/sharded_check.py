@@ -252,6 +252,46 @@ def check_applications(mesh):
     assert int(s1.stats.quad_iterations) == int(s2.stats.quad_iterations)
 
 
+def check_resumable_stepping(mesh):
+    """The sharded stepping API (DESIGN.md Sec. 8): interrupt with
+    step_n_sharded, resume with resume_sharded — the final result equals
+    the uninterrupted sharded drive AND the single-device path (bit-exact
+    COO, 1e-12 dense), including non-divisible K=11 padding."""
+    from repro.core import sharded as core_sharded
+
+    a, us, true, lmn, lmx = _problem(k=11, seed=12)
+    s = BIFSolver.create(max_iters=50, rtol=1e-4)
+    for kind, op in [("coo", sparse_from_dense(a)),
+                     ("dense", Dense(jnp.asarray(a)))]:
+        ref = s.solve_batch_sharded(op, us, mesh=mesh, lam_min=lmn,
+                                    lam_max=lmx)
+        st = core_sharded.init_state_sharded(s, op, us, mesh=mesh,
+                                             lam_min=lmn, lam_max=lmx)
+        assert st.st.it.shape == (16,)  # padded to the device multiple
+        for k in (1, 3):
+            st = core_sharded.step_n_sharded(s, st, k, mesh=mesh)
+        st = core_sharded.resume_sharded(s, st, mesh=mesh)
+        got = core_sharded.finalize_sharded(s, st, nlanes=11)
+        _assert_solve_parity(ref, got, kind == "coo", f"stepping-{kind}")
+        single = s.solve_batch(op, us, lam_min=lmn, lam_max=lmx)
+        _assert_solve_parity(single, got, kind == "coo",
+                             f"stepping-vs-single-{kind}")
+
+    # per-lane iteration budgets shard with the lanes; lifting the cap
+    # resumes to the uninterrupted endpoint bit-exactly
+    op = sparse_from_dense(a)
+    ref = s.solve_batch_sharded(op, us, mesh=mesh, lam_min=lmn,
+                                lam_max=lmx)
+    st = core_sharded.init_state_sharded(s, op, us, mesh=mesh, lam_min=lmn,
+                                         lam_max=lmx)
+    st = core_sharded.resume_sharded(s, st, it_cap=np.full(16, 3, np.int32),
+                                     mesh=mesh)
+    assert int(np.asarray(st.it).max()) <= 3
+    st = core_sharded.resume_sharded(s, st, mesh=mesh)
+    got = core_sharded.finalize_sharded(s, st, nlanes=11)
+    _assert_solve_parity(ref, got, True, "budget-resume")
+
+
 def check_sharded_solver_wrapper(mesh):
     """ShardedBIFSolver is static: closure-capture under jit works and
     matches the unbound calls."""
@@ -281,6 +321,7 @@ def main():
     check_stacked_ops(mesh)
     check_judge_batch(mesh)
     check_judge_argmax(mesh)
+    check_resumable_stepping(mesh)
     check_engine_flush(mesh)
     check_applications(mesh)
     check_sharded_solver_wrapper(mesh)

@@ -303,32 +303,181 @@ def test_rank_blocks_same_bucket_compiles_once():
     assert len(stats_b["brackets"]) == 20
 
 
-def test_bif_engine_failed_flush_marks_chunk_and_keeps_tail():
+def test_bif_engine_failed_round_marks_inflight_and_keeps_tail_order():
+    """A driver failure mid-flush drops ONLY the in-flight requests (error
+    set), keeps the unadmitted tail queued in submission order, and keeps
+    the results of requests that already retired."""
     n = 12
     a = make_spd(n, kappa=10.0, seed=6)
-    engine = BIFEngine(Dense(jnp.asarray(a)), max_batch=2)
+    # chunk_iters > max_iters: every admitted request resolves within ONE
+    # scheduler round, so round k serves exactly the k-th admitted pair
+    engine = BIFEngine(Dense(jnp.asarray(a)), max_batch=2, chunk_iters=64)
     rng = np.random.default_rng(7)
     reqs = [engine.submit(BIFRequest(u=rng.standard_normal(n)))
             for _ in range(5)]
-    orig, calls = engine._run, [0]
+    orig, calls = engine._step, [0]
 
     def flaky(*args):
         calls[0] += 1
-        if calls[0] == 2:  # second chunk fails
+        if calls[0] == 2:  # second scheduler round fails
             raise RuntimeError("transient driver failure")
         return orig(*args)
 
-    engine._run = flaky
+    engine._step = flaky
     with pytest.raises(RuntimeError, match="transient"):
         engine.flush()
-    # failing chunk dropped with its error set; untried tail still queued
+    # round 1 served the first pool (reqs 0-1); round 2's in-flight pool
+    # (reqs 2-3) was dropped with its error set; req 4 was never admitted
+    # and stays queued
     assert engine.pending() == 1
     assert [r.error is not None for r in reqs] == [False] * 2 + [True] * 2 \
         + [False]
-    engine._run = orig
-    engine.flush()
+    assert reqs[0].lower is not None and reqs[1].lower is not None
+    engine._step = orig
+    out = engine.flush()
+    assert [r is reqs[4] for r in out] == [True]  # surviving tail, in order
     assert reqs[4].lower is not None
     # resubmitting a failed request clears the marker and serves it
     engine.submit(reqs[2])
     engine.flush()
     assert reqs[2].error is None and reqs[2].lower is not None
+
+
+def test_bif_engine_continuous_matches_lockstep_and_preserves_fifo():
+    """Continuous batching retires/backfills mid-flight but must return
+    per-request outcomes identical to the lockstep flush (decisions and
+    iteration counts exact, brackets to the gemm caveat) in submission
+    order."""
+    n = 36
+    a = make_spd(n, kappa=90.0, seed=3)
+    w = np.linalg.eigvalsh(a)
+    lam = dict(lam_min=float(w[0] * 0.99), lam_max=float(w[-1] * 1.01))
+    op = Dense(jnp.asarray(a))
+    sv = BIFSolver.create(max_iters=n + 2, rtol=1e-4)
+    rng = np.random.default_rng(8)
+    us = rng.standard_normal((13, n))
+    true = np.einsum("ki,ki->k", us, np.linalg.solve(a, us.T).T)
+
+    def submit_all(engine):
+        reqs = []
+        for i, u in enumerate(us):
+            t = float(true[i] * (0.8 if i % 2 else 1.2)) if i % 3 else None
+            reqs.append(engine.submit(BIFRequest(u=u, t=t)))
+        return reqs
+
+    e_cont = BIFEngine(op, solver=sv, max_batch=4, chunk_iters=3, **lam)
+    e_lock = BIFEngine(op, solver=sv, max_batch=4, **lam)
+    rc = submit_all(e_cont)
+    rl = submit_all(e_lock)
+    out_c = e_cont.flush()
+    out_l = e_lock.flush(mode="lockstep")
+    assert out_c == rc and out_l == rl  # FIFO-preserving completion
+    for i, (c, l) in enumerate(zip(rc, rl)):
+        assert c.decision == l.decision, i
+        assert c.certified == l.certified, i
+        assert c.iterations == l.iterations, i
+        np.testing.assert_allclose([c.lower, c.upper], [l.lower, l.upper],
+                                   rtol=1e-12)
+        assert c.resolved and c.state is None
+
+
+def test_bif_engine_budget_partials_resume_bit_exact():
+    """A request whose iteration budget expires comes back partial with a
+    banked QuadState; resubmitting it resumes the solve and lands on the
+    SAME bracket and iteration count as an uninterrupted run."""
+    n = 40
+    a = make_spd(n, kappa=50.0, seed=9)
+    w = np.linalg.eigvalsh(a)
+    lam = dict(lam_min=float(w[0] * 0.99), lam_max=float(w[-1] * 1.01))
+    op = sparse_from_dense(a)
+    sv = BIFSolver.create(max_iters=n + 2, rtol=1e-6)
+    rng = np.random.default_rng(10)
+    u = rng.standard_normal(n)
+
+    full = BIFEngine(op, solver=sv, max_batch=4, **lam)
+    ref = full.submit(BIFRequest(u=u))
+    full.flush()
+    assert ref.resolved and ref.iterations > 6
+
+    eng = BIFEngine(op, solver=sv, max_batch=4, chunk_iters=2, **lam)
+    part = eng.submit(BIFRequest(u=u, max_iters=5))
+    eng.flush()
+    assert part.resolved is False and part.certified is False
+    assert part.iterations == 5 and part.state is not None
+    assert part.lower is not None and part.lower <= part.upper
+    # the banked bracket is a valid (wider) enclosure of the final one
+    assert part.lower <= ref.lower and part.upper >= ref.upper
+    # resubmit with the remaining budget: bit-exact with the
+    # uninterrupted solve (SparseCOO matvec is shape-independent)
+    part.max_iters = None
+    eng.submit(part)
+    eng.flush()
+    assert part.resolved and part.state is None
+    assert part.iterations == ref.iterations
+    assert part.lower == ref.lower and part.upper == ref.upper
+    # the banked state also resumes OUTSIDE the engine, same answer
+    part2 = eng.submit(BIFRequest(u=u, max_iters=5))
+    eng.flush()
+    st = sv.resume(part2.state)
+    res = sv.finalize(st)
+    assert float(res.lower) == ref.lower and float(res.upper) == ref.upper
+
+
+def test_bif_engine_rejects_mutated_partial_resubmission():
+    """A banked state is only valid for the (u, mask) it was solving;
+    resubmitting a partial with a mutated query must be rejected at the
+    door (clearing .state re-solves from scratch instead)."""
+    n = 40
+    a = make_spd(n, kappa=50.0, seed=9)
+    w = np.linalg.eigvalsh(a)
+    eng = BIFEngine(sparse_from_dense(a),
+                    solver=BIFSolver.create(max_iters=n + 2, rtol=1e-6),
+                    max_batch=4, chunk_iters=2,
+                    lam_min=float(w[0] * 0.99), lam_max=float(w[-1] * 1.01))
+    rng = np.random.default_rng(15)
+    r = eng.submit(BIFRequest(u=rng.standard_normal(n), max_iters=4))
+    eng.flush()
+    assert r.resolved is False and r.state is not None
+    r.u = rng.standard_normal(n)  # different query, stale state
+    with pytest.raises(ValueError, match="banks the solve"):
+        eng.submit(r)
+    r.state = None                # explicit re-solve is fine
+    r.max_iters = None
+    eng.submit(r)
+    eng.flush()
+    assert r.resolved
+
+
+def test_bif_engine_deadline_retires_partial():
+    n = 24
+    a = make_spd(n, kappa=200.0, seed=11)
+    w = np.linalg.eigvalsh(a)
+    eng = BIFEngine(Dense(jnp.asarray(a)),
+                    solver=BIFSolver.create(max_iters=n + 2, rtol=1e-12),
+                    max_batch=2, chunk_iters=1,
+                    lam_min=float(w[0] * 0.99), lam_max=float(w[-1] * 1.01))
+    rng = np.random.default_rng(12)
+    # an already-expired deadline retires after the first chunk round,
+    # as a PARTIAL result with the banked state for resubmission
+    req = eng.submit(BIFRequest(u=rng.standard_normal(n), deadline=0.0))
+    eng.flush()
+    assert req.iterations <= 2 and req.lower is not None
+    assert req.resolved is False and req.state is not None
+
+
+def test_bif_engine_legacy_configs_fall_back_to_lockstep():
+    """reorth / preconditioned solvers predate the scheduler and must
+    keep flushing (via the lockstep path) rather than raise."""
+    n = 16
+    a = make_spd(n, kappa=20.0, seed=13)
+    rng = np.random.default_rng(14)
+    u = rng.standard_normal(n)
+    for cfg in (dict(reorth=True), dict(precondition="jacobi")):
+        eng = BIFEngine(Dense(jnp.asarray(a)),
+                        solver=BIFSolver.create(max_iters=n + 2, rtol=1e-4,
+                                                **cfg))
+        r = eng.submit(BIFRequest(u=u))
+        eng.flush()
+        true = float(u @ np.linalg.solve(a, u))
+        assert r.lower <= true * 1.0001 and r.upper >= true * 0.9999, cfg
+        assert r.resolved

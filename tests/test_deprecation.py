@@ -55,6 +55,28 @@ def test_shim_warns_deprecation_once(prob, name):
         call()
 
 
+def test_each_shim_fires_exactly_once_per_process(prob):
+    """The whole shim surface, called twice each in one process, emits
+    EXACTLY one DeprecationWarning per shim — no repeats, no cross-shim
+    suppression (the removal-schedule contract of DESIGN.md Sec. 5)."""
+    calls = _calls(prob)
+    deprecation.reset()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for call in calls.values():
+            call()
+        for call in calls.values():
+            call()
+    dep = [str(w.message) for w in rec
+           if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == len(calls), dep
+    for name in calls:
+        # '.<name> is deprecated' is unambiguous: 'bif_bounds' alone
+        # would also match 'preconditioned_bif_bounds'
+        hits = sum(f".{name} is deprecated" in msg for msg in dep)
+        assert hits == 1, (name, dep)
+
+
 def test_internal_callers_stay_silent(prob):
     """BIFSolver methods and the applications never trip the shims."""
     from repro.core import BIFSolver, greedy_map, run_double_greedy, \
