@@ -31,11 +31,13 @@ MODULES = [
     "batched_judges",         # per-candidate loop vs solve_batch (Sec. 6)
     "sharded_judges",         # 1-dev vs 8-virtual-device lanes (Sec. 7)
     "engine_throughput",      # lockstep vs continuous batching (Sec. 8)
+    "trace_logdet",           # bracketed logdet vs dense slogdet (Sec. 9)
 ]
 
 # Suites whose tables are ALSO written to BENCH_<name>.json at the repo
 # root, so the perf trajectory is tracked in-tree across PRs.
-ROOT_TRACKED = {"batched_judges", "sharded_judges", "engine_throughput"}
+ROOT_TRACKED = {"batched_judges", "sharded_judges", "engine_throughput",
+                "trace_logdet"}
 
 
 def main() -> None:

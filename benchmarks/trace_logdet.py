@@ -1,0 +1,106 @@
+"""Quadrature-bracketed logdet vs dense ``slogdet`` (DESIGN.md Sec. 9).
+
+The workload: ``logdet(A) = tr log A`` for a banded SPD system (1-D
+Laplacian + ridge — the analytic spectrum gives certified lam bounds
+with no eigensolve), estimated by ``core.trace.logdet_quad`` with P
+Hutchinson probes running as lanes of the batched matfun driver, against
+``numpy.linalg.slogdet`` on the dense matrix.
+
+Reported per (N, probes) config and operator (Dense / SparseCOO):
+
+  * wall time for the bracketed estimate vs the dense factorization,
+  * the deterministic bracket width (quadrature error, certified) and
+    the statistical 95% interval width (sampling error),
+  * the actual estimate error vs the slogdet truth,
+  * mean quadrature iterations per probe.
+
+Tables land in ``BENCH_trace_logdet.json`` at the repo root via
+``benchmarks/run.py``; ``BENCH_TINY=1`` shrinks to a smoke size that
+does NOT clobber the tracked json (the PR-4 convention).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import row
+from repro.core import Dense, logdet_quad, sparse_from_dense
+
+_RIDGE = 0.05
+_MAX_ITERS = 64
+
+
+def _problem(n: int):
+    """Banded SPD: 1-D Laplacian + ridge. spec = ridge + 2 - 2cos(k pi /
+    (n+1)), so the certified interval is analytic."""
+    a = np.zeros((n, n))
+    idx = np.arange(n)
+    a[idx, idx] = 2.0 + _RIDGE
+    a[idx[:-1], idx[:-1] + 1] = -1.0
+    a[idx[:-1] + 1, idx[:-1]] = -1.0
+    lam_min = _RIDGE + 2.0 - 2.0 * np.cos(np.pi / (n + 1))
+    lam_max = _RIDGE + 2.0 - 2.0 * np.cos(n * np.pi / (n + 1))
+    return a, float(lam_min * 0.999), float(lam_max * 1.001)
+
+
+def _time(fn, repeats=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _bench_one(n: int, probes: int):
+    a, lam_min, lam_max = _problem(n)
+    truth = float(np.linalg.slogdet(a)[1])
+    key = jax.random.key(0)
+    out = {}
+    wall_dense = _time(lambda: np.linalg.slogdet(a))
+    out["wall_s_slogdet"] = round(wall_dense, 5)
+    for kind, op in [("dense", Dense(jnp.asarray(a))),
+                     ("coo", sparse_from_dense(a))]:
+        r = logdet_quad(op, probes, lam_min=lam_min, lam_max=lam_max,
+                        max_iters=_MAX_ITERS, rtol=1e-6, atol=1e-6,
+                        key=key)
+        wall = _time(lambda: logdet_quad(
+            op, probes, lam_min=lam_min, lam_max=lam_max,
+            max_iters=_MAX_ITERS, rtol=1e-6, atol=1e-6, key=key))
+        out[kind] = {
+            "wall_s": round(wall, 5),
+            "speedup_vs_slogdet": round(wall_dense / wall, 3),
+            "det_bracket_width": float(r.upper - r.lower),
+            "stat_interval_width": float(r.stat_upper - r.stat_lower),
+            "abs_err": round(abs(r.estimate - truth), 4),
+            "rel_err": round(abs(r.estimate - truth) / abs(truth), 5),
+            "iters_per_probe": round(r.iterations / r.num_probes, 1),
+            "stat_contains_truth": bool(r.stat_lower <= truth
+                                        <= r.stat_upper),
+        }
+    out["logdet_truth"] = round(truth, 4)
+    return out
+
+
+def run(quick: bool = True):
+    if os.environ.get("BENCH_TINY"):
+        sizes = [(64, 4)]
+    else:
+        sizes = [(256, 8), (256, 32), (1024, 8), (1024, 32)]
+    rows, tables = [], {}
+    for n, probes in sizes:
+        r = _bench_one(n, probes)
+        tables[f"n{n}_p{probes}"] = r
+        rows.append(row(
+            f"trace_logdet_n{n}_p{probes}",
+            r["coo"]["wall_s"] * 1e6,
+            f"relerr_{r['coo']['rel_err']}_"
+            f"{r['coo']['iters_per_probe']}it"))
+    return rows, tables

@@ -43,10 +43,24 @@ batched path exactly::
     am = solver.judge_argmax_sharded(op2, us, shift=d, scale=-1.0,
                                      mesh=mesh)
 
+Matrix functions beyond f=1/x (DESIGN.md Sec. 9): ``SolverConfig.fn``
+picks a spectral function from the matfun registry ('inv' | 'log' |
+'invsqrt' | 'sqrt') and the same runtime brackets ``u^T f(A) u`` with
+sign-aware orientation; ``trace_quad`` runs Hutchinson (or exact unit)
+probes as lanes for bracketed ``tr f(A)`` — ``logdet_quad`` /
+``dpp.log_likelihood`` are the logdet workloads on top::
+
+    s = BIFSolver.create(max_iters=64, rtol=1e-4, fn='log')
+    res = s.solve(op, u, lam_min=lmn, lam_max=lmx)  # brackets u^T log(A) u
+    ld = trace_quad(op, 'log', None, lam_min=lmn, lam_max=lmx)  # logdet
+
 Public API:
 
   solver.{BIFSolver, SolverConfig, SolveResult, JudgeResult,
           ArgmaxResult, QuadratureTrace}            -- THE entry point
+  matfun.{REGISTRY, SpectralFn, CoeffHistory}       -- u^T f(A) u brackets
+  trace.{trace_quad, logdet_quad, TraceQuadResult}  -- stochastic traces
+  dpp.log_likelihood                                -- bracketed log P(Y)
   sharded.{ShardedBIFSolver, solve_batch_sharded, judge_batch_sharded,
            judge_argmax_sharded, judge_kdpp_swap_batch_sharded}
   operators.{lane_specs, shard_ops}                 -- lane placement
@@ -65,17 +79,21 @@ Deprecated shims (thin wrappers over ``BIFSolver``, kept for stability):
   precond.preconditioned_bif_bounds
 """
 from . import bounds, deprecation, double_greedy, dpp, gql, judge, lanczos, \
-    loop_utils, operators, precond, sharded, solver, spectrum  # noqa: F401
+    loop_utils, matfun, operators, precond, sharded, solver, spectrum, \
+    trace  # noqa: F401
 
 from .solver import ArgmaxResult, BIFSolver, JudgeResult, PairState, \
     QuadratureTrace, QuadState, SolveResult, SolverConfig  # noqa: F401
 from .sharded import ShardedBIFSolver  # noqa: F401
 from .loop_utils import tree_freeze  # noqa: F401
+from .matfun import CoeffHistory, SpectralFn  # noqa: F401
+from .trace import TraceQuadResult, TraceQuadState, logdet_quad, \
+    trace_quad  # noqa: F401
 from .operators import Dense, Jacobi, Masked, MatvecFn, Shifted, SparseBELL, \
     SparseCOO, bell_from_dense, lane_specs, shard_ops, sparse_from_dense, \
     stack_masks, stack_ops  # noqa: F401
-from .dpp import ChainState, GreedyMapResult, greedy_map, sample_dpp, \
-    sample_kdpp  # noqa: F401
+from .dpp import ChainState, GreedyMapResult, LogLikelihoodResult, \
+    greedy_map, log_likelihood, sample_dpp, sample_kdpp  # noqa: F401
 from .double_greedy import DGResult, double_greedy as run_double_greedy  # noqa: F401
 from .spectrum import SpectrumBounds, gershgorin_bounds, lanczos_extremal, \
     ridge_bounds  # noqa: F401

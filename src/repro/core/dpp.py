@@ -37,6 +37,13 @@ def _as_solver(solver: _solver.BIFSolver | None,
     """Chain steps take either a configured BIFSolver or a bare max_iters."""
     if solver is None:
         return _solver.BIFSolver.create(max_iters=max_iters)
+    if solver.config.fn != "inv":
+        raise ValueError(
+            "the chain judges compare Schur-complement thresholds against "
+            "u^T A^-1 u; a matfun solver (fn != 'inv') would bracket a "
+            "different quantity and judge it as if it were the BIF — pass "
+            "an fn='inv' solver (bracketed log-likelihoods go through "
+            "dpp.log_likelihood instead)")
     return solver
 
 
@@ -297,6 +304,77 @@ def greedy_map(op, k: int, lam_min, lam_max, *, max_iters: int,
         mask=mask, order=order, gains=gains, certified=cert,
         quad_iterations=jnp.sum(iters),
         uncertified=jnp.sum((~cert).astype(jnp.int32)))
+
+
+class LogLikelihoodResult(NamedTuple):
+    """Bracketed DPP log-likelihood (DESIGN.md Sec. 9).
+
+    ``lower``/``upper`` bracket ``log P(Y) = logdet(L_Y) - logdet(L+I)``
+    deterministically when both logdets use exact unit probes
+    (``num_probes=None``); with Hutchinson probes they bracket the
+    probe-sample estimate and ``stat_lower``/``stat_upper`` add the
+    sampling CI. ``logdet_y``/``logdet_norm`` expose the two
+    :class:`~repro.core.trace.TraceQuadResult` terms (each resumable).
+    """
+    lower: float
+    upper: float
+    estimate: float
+    stat_lower: float
+    stat_upper: float
+    logdet_y: object
+    logdet_norm: object
+    iterations: int
+
+
+def log_likelihood(op, mask: Array, lam_min, lam_max, *,
+                   max_iters: int = 64, num_probes: int | None = None,
+                   solver: _solver.BIFSolver | None = None, key=None,
+                   mesh=None, lane_axis: str = "lanes",
+                   rtol: float = 1e-6, atol: float = 1e-8
+                   ) -> LogLikelihoodResult:
+    """Bracketed L-ensemble log-likelihood of the set ``Y`` = ``mask``:
+
+        log P(Y) = logdet(L_Y) - logdet(L + I)
+
+    Both terms are retrospective quadrature logdets
+    (:func:`repro.core.trace.trace_quad` with f=log). The submatrix
+    term needs NO correction: the fixed-shape ``Masked`` operator is
+    ``P L P + (I - P)`` whose spectrum is spec(L_Y) plus ones, and
+    log(1) = 0 — so ``tr log Masked(L, m) == logdet(L_Y)`` exactly.
+    The normalizer runs on ``Shifted(L, 1)``.
+
+    ``lam_min``/``lam_max`` bound spec(L) (the usual chain contract);
+    the masked term's interval is widened to include the identity
+    block's 1s, the shifted term's interval moves up by 1. Defaults
+    (``num_probes=None``) give a deterministic bracket containing the
+    dense ``slogdet`` truth; a configured ``solver`` overrides the
+    stopping policy (its ``fn`` is forced to 'log').
+    """
+    from . import trace as _trace
+
+    mask = jnp.asarray(mask)
+    quad = solver if solver is not None else _solver.BIFSolver.create(
+        max_iters=max_iters, rtol=rtol, atol=atol, fn="log")
+    lam_min = jnp.asarray(lam_min)
+    lam_max = jnp.asarray(lam_max)
+    one = jnp.asarray(1.0, lam_min.dtype)
+    keys = (None, None) if key is None else jax.random.split(key)
+    ld_y = _trace.trace_quad(
+        _ops.Masked(op, mask), "log", num_probes, solver=quad,
+        lam_min=jnp.minimum(lam_min, one), lam_max=jnp.maximum(lam_max, one),
+        key=keys[0], mesh=mesh, lane_axis=lane_axis)
+    ld_n = _trace.trace_quad(
+        _ops.Shifted(op, one), "log", num_probes, solver=quad,
+        lam_min=lam_min + 1.0, lam_max=lam_max + 1.0, key=keys[1],
+        mesh=mesh, lane_axis=lane_axis)
+    return LogLikelihoodResult(
+        lower=ld_y.lower - ld_n.upper,
+        upper=ld_y.upper - ld_n.lower,
+        estimate=ld_y.estimate - ld_n.estimate,
+        stat_lower=ld_y.stat_lower - ld_n.stat_upper,
+        stat_upper=ld_y.stat_upper - ld_n.stat_lower,
+        logdet_y=ld_y, logdet_norm=ld_n,
+        iterations=ld_y.iterations + ld_n.iterations)
 
 
 def sample_dpp(op, key, init_mask, num_steps, lam_min, lam_max, *,

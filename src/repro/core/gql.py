@@ -56,18 +56,30 @@ class GQLState(NamedTuple):
     it: Array         # int32, iterations completed
 
 
-def _extensions(g, c, delta, d_lr, d_rr, beta, lam_min, lam_max):
-    """Radau/Lobatto estimates for the J_i extended with off-diag ``beta``."""
+def extension_coefficients(beta, d_lr, d_rr, lam_min, lam_max):
+    """Golub (1973) modified last-row entries of the Radau/Lobatto
+    extensions of J_i, from the running pivot recurrences:
+    ``(alpha_lr, alpha_rr, alpha_lo, b2_lo, b2)``. The ONE home for
+    these formulas and their sign guards — shared by the
+    Sherman-Morrison recurrence below and the matfun eigensolve
+    (core/matfun.py), so the two routes cannot drift."""
     b2 = beta * beta
     d_lr_s = jnp.maximum(d_lr, _EPS)        # last pivot of (J - lmin I) > 0
     d_rr_s = jnp.minimum(d_rr, -_EPS)       # last pivot of (J - lmax I) < 0
-    delta_s = jnp.maximum(delta, _EPS)
 
     alpha_lr = lam_min + b2 / d_lr_s
     alpha_rr = lam_max + b2 / d_rr_s
     denom_lo = d_rr_s - d_lr_s              # < 0
     b2_lo = (lam_max - lam_min) * d_lr_s * d_rr_s / denom_lo
     alpha_lo = (lam_max * d_rr_s - lam_min * d_lr_s) / denom_lo
+    return alpha_lr, alpha_rr, alpha_lo, b2_lo, b2
+
+
+def _extensions(g, c, delta, d_lr, d_rr, beta, lam_min, lam_max):
+    """Radau/Lobatto estimates for the J_i extended with off-diag ``beta``."""
+    alpha_lr, alpha_rr, alpha_lo, b2_lo, b2 = extension_coefficients(
+        beta, d_lr, d_rr, lam_min, lam_max)
+    delta_s = jnp.maximum(delta, _EPS)
 
     c2 = c * c
 

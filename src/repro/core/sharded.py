@@ -50,6 +50,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from . import gql as _gql
+from . import matfun as _matfun
 from . import operators as _ops
 from .loop_utils import tree_freeze
 from .solver import ArgmaxResult, BIFSolver, JudgeResult, QuadState, \
@@ -167,8 +168,13 @@ def init_state_sharded(solver: BIFSolver, op, u: Array, *, mesh,
         + _lam_specs(lam_min, lam_max, axis),
         out_specs=P(axis), check_rep=False)
     st = fn(op, u, lam_min, lam_max)
+    # the coefficient history is elementwise over lanes; allocated
+    # globally (like spectrum resolution) and sharded by the next drive
+    coeffs = _matfun.init_coeffs(st, cfg.fn, cfg.max_iters) \
+        if cfg.fn != "inv" else None
     return QuadState(op=op, st=st, lam_min=lam_min, lam_max=lam_max,
-                     basis=None, step=jnp.zeros((), jnp.int32))
+                     basis=None, step=jnp.zeros((), jnp.int32),
+                     coeffs=coeffs)
 
 
 def _drive_sharded(solver: BIFSolver, state: QuadState, decide,
@@ -196,24 +202,32 @@ def _drive_sharded(solver: BIFSolver, state: QuadState, decide,
     cap = jnp.full((kp,), _NO_CAP, jnp.int32) if it_cap is None \
         else jnp.broadcast_to(jnp.asarray(it_cap, jnp.int32), (kp,))
 
-    def local_fn(op_loc, st_loc, lmn, lmx, cap_loc, *dargs):
+    def local_fn(op_loc, st_coeffs_loc, lmn, lmx, cap_loc, *dargs):
+        st_loc, coeffs_loc = st_coeffs_loc
         idx = jax.lax.axis_index(axis)
 
         def gather(x):
             return jax.lax.all_gather(x, axis, axis=0, tiled=True)
 
-        def resolved_local(st):
+        def resolved_local(st, coeffs):
             # ONE gather for both brackets: the decision is the only
             # cross-device data dependency in the loop body, so the hot
             # path pays a single all_gather + the psum per iteration
-            lo_hi = gather(jnp.stack([_gql.lower_bound(st),
-                                      _gql.upper_bound(st)], axis=-1))
+            # (fn-aware brackets — the matfun eigensolve — run
+            # shard-local; only the scalars travel)
+            lo, hi = solver._bracket2(st, coeffs, lmn, lmx)
+            lo_hi = gather(jnp.stack([lo, hi], axis=-1))
             res = decide(lo_hi[..., 0], lo_hi[..., 1], *dargs)
             return jax.lax.dynamic_slice_in_dim(res, idx * kd, kd)
 
-        def needs_more(st):
-            return ~st.done & ~resolved_local(st) & (st.it < max_iters) \
-                & (st.it < cap_loc)
+        def needs_more(st, coeffs):
+            nm = ~st.done & ~resolved_local(st, coeffs) \
+                & (st.it < max_iters) & (st.it < cap_loc)
+            if coeffs is not None:
+                # capacity freeze, like the single-device rule: a lane
+                # never outruns its recorded alpha/beta history
+                nm = nm & (st.it < coeffs.alphas.shape[-1])
+            return nm
 
         def cont_of(nm):
             # global "any lane anywhere still needs work"; identical on
@@ -221,36 +235,43 @@ def _drive_sharded(solver: BIFSolver, state: QuadState, decide,
             # the body's all_gathers always match up.
             return jax.lax.psum(jnp.any(nm).astype(jnp.int32), axis) > 0
 
-        nm0 = needs_more(st_loc)
+        nm0 = needs_more(st_loc, coeffs_loc)
 
         def cond(carry):
             cont = carry[2]
             return cont if n is None else cont & (carry[3] < n)
 
         def body(carry):
-            st, nm, _, taken = carry
+            (st, coeffs), nm, _, taken = carry
             st1 = _gql.gql_step(op_loc, st, lmn, lmx, recurrence=rec)
+            if coeffs is not None:
+                coeffs1 = tree_freeze(_matfun.update_coeffs(coeffs, st, st1),
+                                      coeffs, ~nm)
+            else:
+                coeffs1 = None
             st1 = tree_freeze(st1, st, ~nm)
-            nm1 = needs_more(st1)
-            return st1, nm1, cont_of(nm1), taken + 1
+            nm1 = needs_more(st1, coeffs1)
+            return (st1, coeffs1), nm1, cont_of(nm1), taken + 1
 
-        st, _, _, _ = jax.lax.while_loop(
+        (st, coeffs), _, _, _ = jax.lax.while_loop(
             cond, body,
-            (st_loc, nm0, cont_of(nm0), jnp.zeros((), jnp.int32)))
-        return st
+            ((st_loc, coeffs_loc), nm0, cont_of(nm0),
+             jnp.zeros((), jnp.int32)))
+        return st, coeffs
 
     fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(_ops.lane_specs(state.op, axis),
-                  jax.tree.map(lambda _: P(axis), state.st))
+                  jax.tree.map(lambda _: P(axis),
+                               (state.st, state.coeffs)))
         + _lam_specs(state.lam_min, state.lam_max, axis)
         + (P(axis),) + tuple(P() for _ in decide_args),
         out_specs=P(axis), check_rep=False)
-    st = fn(state.op, state.st, state.lam_min, state.lam_max, cap,
-            *decide_args)
+    st, coeffs = fn(state.op, (state.st, state.coeffs), state.lam_min,
+                    state.lam_max, cap, *decide_args)
     # basis-free states use `step` only as bookkeeping; the global trip
     # count is bounded below by the largest per-lane advance
-    return state._replace(st=st,
+    return state._replace(st=st, coeffs=coeffs,
                           step=state.step + jnp.max(st.it - state.st.it))
 
 
@@ -285,7 +306,8 @@ def finalize_sharded(solver: BIFSolver, state: QuadState, decide=None, *,
     re-evaluates ``decide`` on the full padded brackets first (cross-lane
     rules like the argmax race see every lane), then slices."""
     st = state.st
-    lo, hi = _gql.lower_bound(st), _gql.upper_bound(st)
+    lo, hi, loose_lo, loose_hi = solver._bracket4(
+        st, state.coeffs, state.lam_min, state.lam_max)
     if decide is None:
         certified = solver.tolerance_resolved(lo, hi)
     else:
@@ -294,8 +316,8 @@ def finalize_sharded(solver: BIFSolver, state: QuadState, decide=None, *,
     certified = certified[:k]
     return SolveResult(
         lower=lo[:k], upper=hi[:k],
-        gauss_lower=_gql.lower_bound_gauss(st)[:k],
-        lobatto_upper=_gql.upper_bound_lobatto(st)[:k],
+        gauss_lower=loose_lo[:k],
+        lobatto_upper=loose_hi[:k],
         iterations=st.it[:k], converged=st.done[:k] | certified,
         certified=certified, state=state)
 

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from . import gql as _gql
+from . import matfun as _matfun
 from . import operators as _ops
 from . import spectrum as _spectrum
 from .loop_utils import tree_freeze
@@ -73,6 +74,11 @@ class SolverConfig:
     spectrum_iters: int = 16         # Lanczos steps for spectrum estimation
     ridge: float = 0.0               # known ridge for spectrum='ridge'
     pallas_interpret: bool | None = None  # None: auto (off-TPU -> interpret)
+    fn: str = "inv"                  # spectral function (matfun.REGISTRY):
+    #                                  'inv' = the legacy GQL recurrence,
+    #                                  bit-exact; others bracket u^T f(A) u
+    #                                  via the Jacobi-matrix eigensolve
+    #                                  (DESIGN.md Sec. 9)
 
     def __post_init__(self):
         if self.spectrum not in _SPECTRA:
@@ -86,6 +92,12 @@ class SolverConfig:
                              f"got {self.backend!r}")
         if self.max_iters < 1:
             raise ValueError("max_iters must be >= 1")
+        _matfun.fn_index(self.fn)  # raises on unknown fn tags
+        if self.fn != "inv" and self.precondition != "none":
+            raise ValueError(
+                "precondition='jacobi' is an identity for u^T A^-1 u only "
+                "(u^T f(A) u has no similarity-transform counterpart); "
+                "fn != 'inv' requires precondition='none'")
 
 
 class SolveResult(NamedTuple):
@@ -142,6 +154,13 @@ class QuadState(NamedTuple):
     Invariant: for any k, ``resume(step_n(state, k))`` is the SAME
     computation as ``resume(state)`` — interrupting and resuming a solve
     reproduces the uninterrupted drive (pinned in tests/test_runtime.py).
+
+    ``coeffs`` (a :class:`~repro.core.matfun.CoeffHistory`, or None on
+    the legacy f=1/x path) carries the per-lane alpha/beta Lanczos
+    history plus the spectral-function index, making matfun states
+    (``SolverConfig.fn != 'inv'``) exactly as checkpointable: the
+    ``lower``/``upper`` views below reorient per the registry's
+    derivative-sign table (DESIGN.md Sec. 9).
     """
     op: Any           # prepared operator (pytree)
     st: Any           # gql.GQLState — recurrence + bracket + done/it
@@ -149,16 +168,28 @@ class QuadState(NamedTuple):
     lam_max: Array
     basis: Any        # (..., M, N) reorth storage, or None
     step: Array       # int32 — global steps taken since init
+    coeffs: Any = None  # matfun.CoeffHistory, or None (fn='inv')
 
     # Convenience views (the banked bracket a consumer can act on any
     # time; `it`/`done` for budget accounting).
+    def bracket(self) -> tuple[Array, Array]:
+        """(lower, upper) in ONE pass — on matfun states the two sides
+        share a single Jacobi-matrix eigensolve, so prefer this over
+        reading ``.lower`` and ``.upper`` separately (each property
+        alone re-runs it)."""
+        if self.coeffs is None:
+            return _gql.lower_bound(self.st), _gql.upper_bound(self.st)
+        lo, hi, _, _ = _matfun.bracket(self.coeffs, self.st, self.lam_min,
+                                       self.lam_max)
+        return lo, hi
+
     @property
     def lower(self) -> Array:
-        return _gql.lower_bound(self.st)
+        return self.bracket()[0]
 
     @property
     def upper(self) -> Array:
-        return _gql.upper_bound(self.st)
+        return self.bracket()[1]
 
     @property
     def it(self) -> Array:
@@ -209,16 +240,10 @@ def _argmax_race(slo: Array, shi: Array):
     return dominated, winner
 
 
-def _log_gain_bounds(t: Array, lo_bif: Array, hi_bif: Array):
-    """Bounds on log(t - bif) given bif in [lo_bif, hi_bif]; the true Schur
-    complement t - bif is positive, but a loose *upper* BIF bound can push
-    t - hi_bif <= 0, in which case the log lower bound is -inf."""
-    big_neg = jnp.asarray(-1e30, lo_bif.dtype)
-    arg_hi = t - lo_bif
-    arg_lo = t - hi_bif
-    hi = jnp.where(arg_hi > 0, jnp.log(jnp.maximum(arg_hi, 1e-30)), big_neg)
-    lo = jnp.where(arg_lo > 0, jnp.log(jnp.maximum(arg_lo, 1e-30)), big_neg)
-    return lo, hi
+# Log-gain brackets for the greedy / double-greedy judges live in the
+# matfun registry (one home for bound orientation); kept under the old
+# private name for the judges below.
+_log_gain_bounds = _matfun.log_gain_bounds
 
 
 @jax.tree_util.register_static
@@ -314,50 +339,83 @@ class BIFSolver:
     # its bracket, checkpoint/ship the QuadState, and resume later —
     # bit-exact with an uninterrupted run.
 
-    def _needs_more_fn(self, decide, it_cap=None):
-        """(needs_more(st), resolved(st)) for the loop: a lane keeps
-        stepping while it is not done (breakdown), not resolved by
-        ``decide`` (None = the tolerance rule), and below both the
-        config's ``max_iters`` and the optional per-lane ``it_cap``
-        (the serving engine's per-request iteration budget)."""
+    def _bracket2(self, st, coeffs, lam_min, lam_max):
+        """The (lower, upper) bracket the stopping rules act on:
+        the legacy GQL Radau views for fn='inv' (coeffs is None,
+        bit-exact with the pre-matfun solver), else the sign-aware
+        matfun bracket (DESIGN.md Sec. 9)."""
+        if coeffs is None:
+            return _gql.lower_bound(st), _gql.upper_bound(st)
+        lo, hi, _, _ = _matfun.bracket(coeffs, st, lam_min, lam_max)
+        return lo, hi
+
+    def _bracket4(self, st, coeffs, lam_min, lam_max):
+        """(lower, upper, loose_lower, loose_upper): the tight Radau
+        bracket plus the loose Gauss/Lobatto pair, oriented per fn."""
+        if coeffs is None:
+            return (_gql.lower_bound(st), _gql.upper_bound(st),
+                    _gql.lower_bound_gauss(st), _gql.upper_bound_lobatto(st))
+        return _matfun.bracket(coeffs, st, lam_min, lam_max)
+
+    def _needs_more_fn(self, decide, it_cap=None, *, lam_min=None,
+                       lam_max=None):
+        """(needs_more(st, coeffs), resolved(st, coeffs)) for the loop:
+        a lane keeps stepping while it is not done (breakdown), not
+        resolved by ``decide`` (None = the tolerance rule), and below
+        both the config's ``max_iters`` and the optional per-lane
+        ``it_cap`` (the serving engine's per-request iteration budget).
+        ``lam_min``/``lam_max`` feed the matfun bracket (unused on the
+        fn='inv' path, where coeffs is None)."""
         max_iters = self.config.max_iters
 
         if decide is None:
-            def resolved(st):
-                return self.tolerance_resolved(_gql.lower_bound(st),
-                                               _gql.upper_bound(st))
+            def resolved(st, coeffs):
+                return self.tolerance_resolved(
+                    *self._bracket2(st, coeffs, lam_min, lam_max))
         else:
-            def resolved(st):
-                return decide(_gql.lower_bound(st), _gql.upper_bound(st))
+            def resolved(st, coeffs):
+                return decide(*self._bracket2(st, coeffs, lam_min, lam_max))
 
-        def needs_more(st):
-            nm = ~st.done & ~resolved(st) & (st.it < max_iters)
+        def needs_more(st, coeffs):
+            nm = ~st.done & ~resolved(st, coeffs) & (st.it < max_iters)
+            if coeffs is not None:
+                # never advance a lane past its recorded alpha/beta
+                # history: an undersized ``coeff_rows`` buffer freezes
+                # like an iteration budget (bracket stops tightening but
+                # stays sound) instead of silently corrupting estimates
+                nm = nm & (st.it < coeffs.alphas.shape[-1])
             if it_cap is not None:
                 nm = nm & (st.it < it_cap)
             return nm
 
         return needs_more, resolved
 
-    def _advance(self, op, st, lam_min, lam_max, basis, step, rec):
-        """One unconditional GQL step + reorth-basis bookkeeping (no
-        freezing — the caller applies its own rule)."""
+    def _advance(self, op, st, lam_min, lam_max, basis, coeffs, step, rec):
+        """One unconditional GQL step + reorth-basis / coefficient-
+        history bookkeeping (no freezing — the caller applies its own
+        rule)."""
         st1 = _gql.gql_step(op, st, lam_min, lam_max, basis=basis,
                             recurrence=rec)
+        if coeffs is not None:
+            coeffs = _matfun.update_coeffs(coeffs, st, st1)
         if basis is None:
-            return st1, None
+            return st1, None, coeffs
         basis1 = jax.lax.dynamic_update_index_in_dim(
             basis, st1.lz.v, step + 2, axis=-2)
-        return st1, basis1
+        return st1, basis1, coeffs
 
     def init_state(self, op, u: Array, *, lam_min=None, lam_max=None,
-                   probe=None, basis_rows: int | None = None) -> QuadState:
+                   probe=None, basis_rows: int | None = None,
+                   coeff_rows: int | None = None) -> QuadState:
         """Prepare the problem and take iteration 1 (Alg. 5 init).
 
         The returned :class:`QuadState` is self-contained: it carries the
         prepared (backend-configured, preconditioned) operator and the
         resolved spectral interval, so ``step_n``/``resume`` need nothing
         else. ``basis_rows`` sizes the reorthogonalization storage when
-        ``config.reorth`` (default ``max_iters + 1``).
+        ``config.reorth`` (default ``max_iters + 1``); ``coeff_rows``
+        the alpha/beta history when ``config.fn != 'inv'`` (default
+        ``max_iters``).
         """
         cfg = self.config
         op, u, lam_min, lam_max = self.prepare(op, u, lam_min, lam_max,
@@ -368,9 +426,15 @@ class BIFSolver:
             basis = self._alloc_basis(st0, u, rows)
         else:
             basis = None
+        if cfg.fn != "inv":
+            coeffs = _matfun.init_coeffs(
+                st0, cfg.fn,
+                cfg.max_iters if coeff_rows is None else coeff_rows)
+        else:
+            coeffs = None
         return QuadState(op=op, st=st0, lam_min=jnp.asarray(lam_min),
                          lam_max=jnp.asarray(lam_max), basis=basis,
-                         step=jnp.zeros((), jnp.int32))
+                         step=jnp.zeros((), jnp.int32), coeffs=coeffs)
 
     def step_n(self, state: QuadState, n: int, decide=None, *,
                it_cap=None) -> QuadState:
@@ -389,26 +453,36 @@ class BIFSolver:
             return state
         rec = self._recurrence()
         op, lam_min, lam_max = state.op, state.lam_min, state.lam_max
-        needs_more, _ = self._needs_more_fn(decide, it_cap)
+        needs_more, _ = self._needs_more_fn(decide, it_cap,
+                                            lam_min=lam_min, lam_max=lam_max)
 
+        # needs_more is carried through the loop (computed once per
+        # step, like the sharded driver): for matfun states it is the
+        # stacked Jacobi eigensolve — evaluating it in both cond and
+        # body would double the dominant per-iteration cost
         def cond(carry):
-            st, _, _, taken = carry
-            return jnp.any(needs_more(st)) & (taken < n)
+            _, _, _, _, taken, nm = carry
+            return jnp.any(nm) & (taken < n)
 
         def body(carry):
-            st, basis, step, taken = carry
-            st1, basis1 = self._advance(op, st, lam_min, lam_max, basis,
-                                        step, rec)
-            frozen = ~needs_more(st)
+            st, basis, coeffs, step, taken, nm = carry
+            st1, basis1, coeffs1 = self._advance(op, st, lam_min, lam_max,
+                                                 basis, coeffs, step, rec)
+            frozen = ~nm
             st1 = tree_freeze(st1, st, frozen)
             if basis is not None:
                 basis1 = tree_freeze(basis1, basis, frozen)
-            return st1, basis1, step + 1, taken + 1
+            if coeffs is not None:
+                coeffs1 = tree_freeze(coeffs1, coeffs, frozen)
+            return (st1, basis1, coeffs1, step + 1, taken + 1,
+                    needs_more(st1, coeffs1))
 
-        st, basis, step, _ = jax.lax.while_loop(
+        st, basis, coeffs, step, _, _ = jax.lax.while_loop(
             cond, body,
-            (state.st, state.basis, state.step, jnp.zeros((), jnp.int32)))
-        return state._replace(st=st, basis=basis, step=step)
+            (state.st, state.basis, state.coeffs, state.step,
+             jnp.zeros((), jnp.int32),
+             needs_more(state.st, state.coeffs)))
+        return state._replace(st=st, basis=basis, coeffs=coeffs, step=step)
 
     def resume(self, state: QuadState, decide=None, *,
                it_cap=None) -> QuadState:
@@ -420,24 +494,30 @@ class BIFSolver:
         continues it bit-exactly."""
         rec = self._recurrence()
         op, lam_min, lam_max = state.op, state.lam_min, state.lam_max
-        needs_more, _ = self._needs_more_fn(decide, it_cap)
+        needs_more, _ = self._needs_more_fn(decide, it_cap,
+                                            lam_min=lam_min, lam_max=lam_max)
 
+        # nm carried through the loop — one bracket evaluation per step
+        # (see step_n)
         def cond(carry):
-            return jnp.any(needs_more(carry[0]))
+            return jnp.any(carry[4])
 
         def body(carry):
-            st, basis, step = carry
-            st1, basis1 = self._advance(op, st, lam_min, lam_max, basis,
-                                        step, rec)
-            frozen = ~needs_more(st)
+            st, basis, coeffs, step, nm = carry
+            st1, basis1, coeffs1 = self._advance(op, st, lam_min, lam_max,
+                                                 basis, coeffs, step, rec)
+            frozen = ~nm
             st1 = tree_freeze(st1, st, frozen)
             if basis is not None:
                 basis1 = tree_freeze(basis1, basis, frozen)
-            return st1, basis1, step + 1
+            if coeffs is not None:
+                coeffs1 = tree_freeze(coeffs1, coeffs, frozen)
+            return st1, basis1, coeffs1, step + 1, needs_more(st1, coeffs1)
 
-        st, basis, step = jax.lax.while_loop(
-            cond, body, (state.st, state.basis, state.step))
-        return state._replace(st=st, basis=basis, step=step)
+        st, basis, coeffs, step, _ = jax.lax.while_loop(
+            cond, body, (state.st, state.basis, state.coeffs, state.step,
+                         needs_more(state.st, state.coeffs)))
+        return state._replace(st=st, basis=basis, coeffs=coeffs, step=step)
 
     def resume_chunked(self, state: QuadState, decide=None, *,
                        chunk_iters: int, it_cap=None) -> QuadState:
@@ -445,13 +525,21 @@ class BIFSolver:
         each round continues from the banked state of the still-unresolved
         lanes instead of re-solving. Bit-exact with ``resume`` (same step
         computation, same freezing) — this is the jit-side skeleton of
-        the serving engine's scheduler and the chunked chain judges."""
+        the serving engine's scheduler and the chunked chain judges.
+
+        Matfun cost note: the chunk-boundary check here re-evaluates the
+        bracket that ``step_n`` also evaluates for its own carry — one
+        extra eigensolve per round (chunk_iters+2 instead of
+        chunk_iters+1). Accepted: deduplicating would mean threading
+        precomputed freeze flags through ``step_n``'s public signature."""
         if chunk_iters < 1:
             raise ValueError(f"chunk_iters must be >= 1, got {chunk_iters}")
-        needs_more, _ = self._needs_more_fn(decide, it_cap)
+        needs_more, _ = self._needs_more_fn(decide, it_cap,
+                                            lam_min=state.lam_min,
+                                            lam_max=state.lam_max)
 
         def cond(s):
-            return jnp.any(needs_more(s.st))
+            return jnp.any(needs_more(s.st, s.coeffs))
 
         def body(s):
             return self.step_n(s, chunk_iters, decide, it_cap=it_cap)
@@ -463,14 +551,23 @@ class BIFSolver:
 
         ``certified`` re-evaluates ``decide`` (None = tolerance rule) on
         the banked bracket, so finalizing a budget-interrupted state
-        reports honestly whether the decision already resolved."""
-        _, resolved = self._needs_more_fn(decide)
+        reports honestly whether the decision already resolved.
+
+        For matfun states (``config.fn != 'inv'``) the result fields
+        are oriented per the registry's sign table: ``lower``/``upper``
+        hold the tight Radau bracket and ``gauss_lower``/
+        ``lobatto_upper`` the loose Gauss/Lobatto pair as lower/upper
+        respectively (for log-like f the underlying rules swap sides —
+        DESIGN.md Sec. 9)."""
+        _, resolved = self._needs_more_fn(decide, lam_min=state.lam_min,
+                                          lam_max=state.lam_max)
         st = state.st
-        certified = resolved(st)
+        certified = resolved(st, state.coeffs)
+        lower, upper, loose_lo, loose_hi = self._bracket4(
+            st, state.coeffs, state.lam_min, state.lam_max)
         return SolveResult(
-            lower=_gql.lower_bound(st), upper=_gql.upper_bound(st),
-            gauss_lower=_gql.lower_bound_gauss(st),
-            lobatto_upper=_gql.upper_bound_lobatto(st),
+            lower=lower, upper=upper,
+            gauss_lower=loose_lo, lobatto_upper=loose_hi,
             iterations=st.it, converged=st.done | certified,
             certified=certified, state=state)
 
@@ -522,32 +619,45 @@ class BIFSolver:
               lam_max=None, probe=None) -> QuadratureTrace:
         """Run exactly ``num_iters`` iterations, recording all four estimate
         sequences (paper Fig. 1).  Honors spectrum/precondition/backend and
-        ``reorth`` from the config."""
+        ``reorth`` from the config.
+
+        With ``config.fn != 'inv'`` the fields are oriented per the
+        matfun sign table: ``radau_lower``/``radau_upper`` are the tight
+        oriented Radau bracket and ``gauss``/``lobatto`` the loose
+        lower/upper (for log-like f those are the Lobatto/Gauss rules
+        respectively — DESIGN.md Sec. 9)."""
         if num_iters < 1:
             raise ValueError(f"num_iters must be >= 1, got {num_iters}")
         # Rows 0..num_iters of the reorth basis hold v_0..v_{num_iters}.
         state = self.init_state(op, u, lam_min=lam_min, lam_max=lam_max,
-                                probe=probe, basis_rows=num_iters + 1)
+                                probe=probe, basis_rows=num_iters + 1,
+                                coeff_rows=num_iters)
         rec = self._recurrence()
         scale = state.st.u_norm_sq
 
-        def estimates(st):
-            return (st.g * scale, st.g_rr * scale, st.g_lr * scale,
-                    st.g_lo * scale)
+        def estimates(st, coeffs):
+            if coeffs is None:
+                return (st.g * scale, st.g_rr * scale, st.g_lr * scale,
+                        st.g_lo * scale)
+            lo, hi, loose_lo, loose_hi = _matfun.bracket(
+                coeffs, st, state.lam_min, state.lam_max)
+            return (loose_lo, lo, hi, loose_hi)
 
-        first = estimates(state.st)
+        first = estimates(state.st, state.coeffs)
         if num_iters == 1:
             # No scan: a zero-length jnp.arange trips older jax versions and
             # buys nothing.
             return QuadratureTrace(*(f[None] for f in first))
 
         def body(carry, _):
-            st, basis, step = carry
-            st1, basis1 = self._advance(state.op, st, state.lam_min,
-                                        state.lam_max, basis, step, rec)
-            return (st1, basis1, step + 1), estimates(st1)
+            st, basis, coeffs, step = carry
+            st1, basis1, coeffs1 = self._advance(state.op, st, state.lam_min,
+                                                 state.lam_max, basis,
+                                                 coeffs, step, rec)
+            return (st1, basis1, coeffs1, step + 1), estimates(st1, coeffs1)
 
-        _, rest = jax.lax.scan(body, (state.st, state.basis, state.step),
+        _, rest = jax.lax.scan(body, (state.st, state.basis, state.coeffs,
+                                      state.step),
                                None, length=num_iters - 1)
         seqs = [jnp.concatenate([f[None], r], axis=0)
                 for f, r in zip(first, rest)]
@@ -772,6 +882,11 @@ class BIFSolver:
     # -- the pair driver (gap-weighted two-system refinement) ----------------
 
     def _prepare_pair(self, op_a, u, op_b, v, lam_min, lam_max):
+        if self.config.fn != "inv":
+            raise NotImplementedError(
+                "the gap-weighted pair driver scores u^T A^-1 u only; "
+                "matfun judges go through the batched driver "
+                "(judge_kdpp_swap_batch / solve_batch with fn set)")
         if self.config.precondition != "none":
             raise NotImplementedError(
                 "preconditioning is per-operator and would shift the two "

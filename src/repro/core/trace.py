@@ -1,0 +1,225 @@
+"""Stochastic trace estimation on the quadrature runtime (DESIGN.md Sec. 9).
+
+``tr f(A) = E[z^T f(A) z]`` for Rademacher probes z (Hutchinson), and
+each probe's bilinear form gets a RETROSPECTIVE quadrature bracket from
+the matfun drive (core/matfun.py) — so the estimator inherits the
+paper's machinery wholesale: probes run as lanes of the batched (or
+device-sharded) driver, tighten monotonically, freeze per-lane the
+moment their bracket resolves, and are resumable probe-by-probe.
+
+Two probe regimes:
+
+  * ``num_probes=None`` — EXACT mode: the N unit vectors e_i. The
+    probe sum IS ``tr f(A)`` (no stochastic error), so the combined
+    bracket is a deterministic certificate containing the true trace.
+    This is what ``dpp.log_likelihood`` uses for bracketed logdet
+    normalizers.
+  * ``num_probes=P`` — Hutchinson mode: P Rademacher probes, drawn as
+    ``fold_in(key, i)`` per probe index so the stream is reproducible
+    and EXTENDABLE (resuming with a larger ``num_probes`` adds probes
+    without re-running the old ones). The deterministic bracket then
+    contains the probe-sample mean (not the trace itself); the
+    statistical interval widens it by a normal-approximation
+    confidence-interval half-width over the probe midpoints.
+
+Interval semantics (the ``TraceQuadResult`` fields):
+
+    lower/upper            deterministic quadrature bracket on the
+                           CURRENT probe-sample mean — retrospective,
+                           tightens with more quadrature iterations,
+                           contains tr f(A) exactly in exact mode
+    estimate               mean of the per-probe bracket midpoints
+    stat_lower/stat_upper  [lower, upper] widened by the CI half-width
+                           z_conf * std(mid)/sqrt(P) — covers BOTH error
+                           sources (quadrature + sampling); collapses to
+                           the deterministic bracket in exact mode
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import solver as _solver
+
+Array = jax.Array
+
+
+class TraceQuadState(NamedTuple):
+    """Probe-by-probe resume handle: which probes ran, and their banked
+    brackets. Host-side bookkeeping (numpy), cheap to checkpoint.
+    ``key_fp``/``interval`` fingerprint the probe stream and the
+    spectral interval so a resume with a different key or lam bounds is
+    rejected instead of silently mixing incompatible probes."""
+    fn: str
+    count: int                 # probes consumed so far
+    exact: bool                # unit-vector mode (num_probes=None)
+    probe_lower: np.ndarray    # (count,) per-probe bracket lowers
+    probe_upper: np.ndarray    # (count,)
+    iterations: np.ndarray     # (count,) quadrature iterations per probe
+    key_fp: tuple = ()         # PRNG-key fingerprint (empty in exact mode)
+    interval: tuple = ()       # (lam_min, lam_max) the brackets used
+
+
+class TraceQuadResult(NamedTuple):
+    lower: float               # deterministic bracket on the probe mean
+    upper: float
+    estimate: float            # mean of per-probe bracket midpoints
+    stat_lower: float          # det bracket widened by the CI half-width
+    stat_upper: float
+    std_error: float           # std(mid) / sqrt(P)  (0.0 in exact mode)
+    num_probes: int
+    iterations: int            # total quadrature iterations spent
+    state: TraceQuadState      # resume handle (probe-by-probe)
+
+
+def _rademacher_probe(key: Array, index: int, n: int, dtype) -> Array:
+    """Probe ``index`` of the reproducible Hutchinson stream (tests and
+    resumed runs re-derive the identical probe from (key, index))."""
+    return jax.random.rademacher(jax.random.fold_in(key, index), (n,),
+                                 dtype)
+
+
+def _probes(key, start: int, stop: int, n: int, dtype, exact: bool):
+    if exact:
+        # only the chunk's rows of I_N — never the full (N, N) identity,
+        # which would defeat probe_chunk's memory bounding at large N
+        return jax.nn.one_hot(jnp.arange(start, stop), n, dtype=dtype)
+    # one vmapped draw over the index range: bit-identical to per-index
+    # _rademacher_probe calls (fold_in per index), one dispatch per chunk
+    return jax.vmap(lambda i: _rademacher_probe(key, i, n, dtype))(
+        jnp.arange(start, stop))
+
+
+def trace_quad(op, fn: str = "log", num_probes: Optional[int] = None, *,
+               lam_min, lam_max, solver: _solver.BIFSolver | None = None,
+               max_iters: int = 64, rtol: float = 1e-4, atol: float = 1e-8,
+               key: Array | None = None, probe_chunk: int | None = None,
+               confidence: float = 0.95, mesh=None,
+               lane_axis: str = "lanes",
+               state: TraceQuadState | None = None) -> TraceQuadResult:
+    """Bracketed stochastic (or exact-probe) estimate of ``tr f(A)``.
+
+    Probes run as lanes of the batched matfun driver — one stacked
+    matvec per quadrature iteration across the whole probe block, lanes
+    frozen as their brackets resolve — sharded over ``mesh`` when given
+    (the multi-device trace-probe path of tests/sharded_check.py).
+
+    ``state`` resumes probe-by-probe: pass a previous result's
+    ``.state`` with a larger ``num_probes`` and only the NEW probes are
+    solved; the accumulated per-probe brackets merge deterministically
+    (the probe stream is keyed by index). ``fn``/mode must match the
+    banked state.
+
+    ``lam_min``/``lam_max`` must bound the operator's spectrum (the
+    Radau bounds need true outer estimates — the usual contract). Note
+    the trace is of the operator AS GIVEN: for a ``Masked`` operator
+    the identity block contributes ``(N - |Y|) * f(1)`` — zero for
+    f=log, which is exactly why masked logdets need no correction.
+    """
+    if solver is None:
+        solver = _solver.BIFSolver.create(max_iters=max_iters, rtol=rtol,
+                                          atol=atol, fn=fn)
+    elif solver.config.fn != fn:
+        solver = solver.replace(fn=fn)  # SolverConfig validates the tag
+
+    n = op.n
+    exact = num_probes is None
+    total = n if exact else int(num_probes)
+    if total < 1:
+        raise ValueError(f"num_probes must be >= 1, got {num_probes}")
+    if key is None:
+        key = jax.random.key(0)
+    key_fp = () if exact else \
+        tuple(np.asarray(jax.random.key_data(key)).ravel().tolist())
+    interval = tuple(np.asarray(x, np.float64).ravel().tolist()
+                     for x in (lam_min, lam_max))
+
+    if state is not None:
+        if state.fn != fn or state.exact != exact:
+            raise ValueError(
+                f"resume state banks fn={state.fn!r} (exact={state.exact}); "
+                f"got fn={fn!r} (exact={exact}) — trace states resume the "
+                f"estimator they were started as")
+        if state.key_fp != key_fp:
+            raise ValueError(
+                "resume state banks probes drawn from a different key; "
+                "extending with a new key would mix incompatible probe "
+                "streams — pass the original key (or state=None)")
+        if state.interval != interval:
+            raise ValueError(
+                f"resume state banks brackets for the spectral interval "
+                f"{state.interval}, got {interval} — mixed intervals "
+                f"would mix incomparable brackets (pass state=None)")
+        if total < state.count:
+            raise ValueError(
+                f"num_probes={total} < {state.count} probes already banked; "
+                f"resuming can only extend")
+        done_lo = [state.probe_lower]
+        done_hi = [state.probe_upper]
+        done_it = [state.iterations]
+        start = state.count
+    else:
+        done_lo, done_hi, done_it = [], [], []
+        start = 0
+
+    dtype = np.asarray(op.diag()).dtype
+    chunk = total - start if probe_chunk is None else max(int(probe_chunk), 1)
+    pos = start
+    while pos < total:
+        stop = min(pos + chunk, total)
+        us = _probes(key, pos, stop, n, dtype, exact)
+        if mesh is None:
+            res = solver.solve_batch(op, us, lam_min=lam_min,
+                                     lam_max=lam_max)
+        else:
+            res = solver.solve_batch_sharded(op, us, mesh=mesh,
+                                             axis=lane_axis,
+                                             lam_min=lam_min,
+                                             lam_max=lam_max)
+        done_lo.append(np.asarray(res.lower))
+        done_hi.append(np.asarray(res.upper))
+        done_it.append(np.asarray(res.iterations))
+        pos = stop
+
+    lo = np.concatenate(done_lo) if done_lo else np.zeros((0,), dtype)
+    hi = np.concatenate(done_hi) if done_hi else np.zeros((0,), dtype)
+    it = np.concatenate(done_it) if done_it \
+        else np.zeros((0,), np.int32)
+
+    # deterministic bracket: in exact mode the SUM over the N unit
+    # probes is tr f(A) (a true certificate); in Hutchinson mode the
+    # MEAN over the P probes is the sample estimate of it
+    mid = 0.5 * (lo + hi)
+    if exact:
+        mean_lo, mean_hi = float(lo.sum()), float(hi.sum())
+        estimate = float(mid.sum())
+        se = 0.0
+    else:
+        mean_lo, mean_hi = float(lo.mean()), float(hi.mean())
+        estimate = float(mid.mean())
+        se = float(np.std(mid, ddof=1) / np.sqrt(len(mid))) \
+            if len(mid) > 1 else 0.0
+    from jax.scipy.special import ndtri
+    z = float(ndtri(0.5 + 0.5 * confidence)) if se > 0.0 else 0.0
+    half = z * se
+
+    new_state = TraceQuadState(fn=fn, count=total, exact=exact,
+                               probe_lower=lo, probe_upper=hi,
+                               iterations=it, key_fp=key_fp,
+                               interval=interval)
+    return TraceQuadResult(
+        lower=mean_lo, upper=mean_hi, estimate=estimate,
+        stat_lower=mean_lo - half, stat_upper=mean_hi + half,
+        std_error=se, num_probes=total,
+        iterations=int(it.sum()), state=new_state)
+
+
+def logdet_quad(op, num_probes: Optional[int] = None, *, lam_min, lam_max,
+                **kwargs) -> TraceQuadResult:
+    """Bracketed ``logdet(A) = tr log(A)``  (Bai & Golub 1996, on the
+    retrospective runtime): sugar for ``trace_quad(op, 'log', ...)``."""
+    return trace_quad(op, "log", num_probes, lam_min=lam_min,
+                      lam_max=lam_max, **kwargs)

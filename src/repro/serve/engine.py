@@ -30,7 +30,7 @@ import numpy as np
 
 from functools import partial
 
-from ..core import gql as core_gql
+from ..core import matfun as core_matfun
 from ..core import operators as core_ops
 from ..core import sharded as core_sharded
 from ..core import spectrum as core_spectrum
@@ -100,8 +100,15 @@ class Engine:
 class BIFRequest:
     """One bilinear-inverse-form query against the engine's matrix.
 
-    ``t`` set: threshold judge (decision = t < u^T A^-1 u, Alg. 4);
+    ``t`` set: threshold judge (decision = t < u^T f(A) u, Alg. 4);
     ``t`` None: adaptive bracket to the solver's rtol/atol.
+    ``fn``: spectral function tag (matfun registry; None = the engine
+    solver's ``config.fn``). A matfun engine (solver ``fn != 'inv'``)
+    serves MIXED spectral functions per-lane in one pool — the Jacobi-
+    matrix eigensolve is fn-independent, lanes just select their f on
+    the shared Ritz values; a legacy f=1/x engine only takes
+    'inv'-tagged (or untagged) requests and stays bit-exact with the
+    pre-matfun scheduler.
     ``mask``: optional principal-submatrix mask (the A_Y of a chain).
     ``max_iters``: per-submission quadrature-iteration budget (on top of
     the solver's ``max_iters`` ceiling); ``deadline``: wall-clock cutoff
@@ -115,6 +122,7 @@ class BIFRequest:
     u: np.ndarray
     t: Optional[float] = None
     mask: Optional[np.ndarray] = None
+    fn: Optional[str] = None
     max_iters: Optional[int] = None
     deadline: Optional[float] = None
     # filled by BIFEngine.flush():
@@ -152,25 +160,36 @@ def _mixed_decide(solver, lo, hi, ts, has_t):
 
 
 @jax.jit
-def _pool_admit_run(solver, op, st, us, masks, fresh, lam_min, lam_max):
+def _pool_admit_run(solver, op, st, coeffs, us, masks, fresh, fnidx,
+                    lam_min, lam_max):
     """Seed the ``fresh`` lanes of the pool from (pre-masked) ``us`` /
     ``masks``; every other lane's quadrature state passes through
     untouched. ``st=None`` initializes the whole pool (unoccupied lanes
     carry zero queries, which ``gql_init`` marks done at iteration one —
-    the usual dummy-lane rule). Module-level jit shared across engines,
-    keyed on (solver config, op treedef, pool shapes)."""
+    the usual dummy-lane rule). On a matfun pool (tracking solver)
+    ``fnidx`` is the authoritative per-lane spectral-function index and
+    ``coeffs`` the prior pool coefficient history, frozen the same way.
+    Module-level jit shared across engines, keyed on (solver config, op
+    treedef, pool shapes)."""
     _FLUSH_TRACES[0] += 1
     state = solver.init_state(core_ops.Masked(op, masks), us,
                               lam_min=lam_min, lam_max=lam_max)
     if st is not None:
         state = state._replace(st=tree_freeze(state.st, st, ~fresh))
+        if coeffs is not None:
+            state = state._replace(
+                coeffs=tree_freeze(state.coeffs, coeffs, ~fresh))
+    if state.coeffs is not None and fnidx is not None:
+        state = state._replace(
+            coeffs=dataclasses.replace(state.coeffs, fnidx=fnidx))
     return state
 
 
 @jax.jit
 def _pool_scatter_run(st, lane_st, idx):
-    """Insert one banked lane GQLState at pool slot ``idx`` (warm
-    admission of a resubmitted partial request)."""
+    """Insert one banked lane state (GQLState, and the lane's coeff
+    history on matfun pools) at pool slot ``idx`` (warm admission of a
+    resubmitted partial request)."""
     return jax.tree.map(lambda pool, lane: pool.at[idx].set(lane),
                         st, lane_st)
 
@@ -196,8 +215,8 @@ def _pool_step_run(solver, state, ts, has_t, it_cap, *, n, mesh=None,
             lambda lo, hi, ts_, ht_: _mixed_decide(solver, lo, hi, ts_,
                                                    ht_),
             decide_args=(ts, has_t), it_cap=it_cap, mesh=mesh, axis=axis)
-    lo = core_gql.lower_bound(state.st)
-    hi = core_gql.upper_bound(state.st)
+    lo, hi = solver._bracket2(state.st, state.coeffs, state.lam_min,
+                              state.lam_max)
     resolved = _mixed_decide(solver, lo, hi, ts, has_t)
     decision = BIFSolver.threshold_decision(ts, lo, hi)
     return state, lo, hi, resolved, decision, state.st.done, state.st.it
@@ -317,6 +336,15 @@ class BIFEngine:
             raise ValueError(
                 f"BIFRequest.mask must have shape ({n},), got "
                 f"{np.asarray(req.mask).shape}")
+        cfg_fn = self.solver.config.fn
+        fn = cfg_fn if req.fn is None else req.fn
+        core_matfun.fn_index(fn)  # raises on unknown tags
+        if cfg_fn == "inv" and fn != "inv":
+            raise ValueError(
+                f"this engine's solver runs the legacy f=1/x recurrence; "
+                f"fn={fn!r} requests need an engine built with a matfun "
+                f"solver (BIFSolver.create(fn=...), any registry fn — "
+                f"mixed-fn pools are fine there)")
         if req.state is not None:
             # a banked state continues the ORIGINAL (u, mask) query: the
             # Lanczos recurrence is only valid for the system it was
@@ -335,6 +363,22 @@ class BIFEngine:
                     "submitted (u, mask); changing either invalidates "
                     "the banked recurrence — set state=None to re-solve "
                     "the new query from scratch")
+            banked_fn = "inv" if req.state.coeffs is None else \
+                core_matfun.fn_name(int(req.state.coeffs.fnidx))
+            if banked_fn != fn:
+                raise ValueError(
+                    f"BIFRequest.state banks a fn={banked_fn!r} solve; "
+                    f"resubmitting it as fn={fn!r} would misread the "
+                    f"banked history — set state=None to re-solve")
+            if (req.state.coeffs is None) != (cfg_fn == "inv"):
+                # a matfun pool scatters CoeffHistory lanes, a legacy
+                # pool coeff-free ones; a presence mismatch would blow
+                # up mid-flush and poison the in-flight requests
+                raise ValueError(
+                    "BIFRequest.state was banked by a "
+                    f"{'legacy f=1/x' if req.state.coeffs is None else 'matfun'} "
+                    f"engine pool and cannot resume on this one "
+                    f"(solver fn={cfg_fn!r}) — set state=None to re-solve")
         if req.t is not None:
             try:
                 req.t = float(req.t)
@@ -394,6 +438,7 @@ class BIFEngine:
         n, p = self.op.n, self.max_batch
         dt = self._dtype
         max_iters = cfg.max_iters
+        tracking = cfg.fn != "inv"          # matfun pool (per-lane fns)
 
         # host-side pool bookkeeping; device-side state in `state`
         us = np.zeros((p, n), dt)
@@ -401,6 +446,7 @@ class BIFEngine:
         ts = np.zeros((p,), dt)
         has_t = np.zeros((p,), bool)
         caps = np.zeros((p,), np.int32)   # 0 = vacated/dead lane (frozen)
+        fnidx = np.full((p,), core_matfun.fn_index(cfg.fn), np.int32)
         slots: List[Optional[BIFRequest]] = [None] * p
         pending = list(queue)
         state = None
@@ -426,11 +472,13 @@ class BIFEngine:
                     us[i] = np.asarray(r.u, dt) * m
                     ts[i] = 0.0 if r.t is None else r.t
                     has_t[i] = r.t is not None
+                    fnidx[i] = core_matfun.fn_index(
+                        cfg.fn if r.fn is None else r.fn)
                     budget = max_iters if r.max_iters is None \
                         else max(int(r.max_iters), 0)
                     if r.state is not None:
                         # warm admission: resume the banked state
-                        warm.append((i, r.state.st))
+                        warm.append((i, (r.state.st, r.state.coeffs)))
                         caps[i] = min(int(r.state.it) + budget, max_iters)
                     else:
                         fresh[i] = True
@@ -447,18 +495,23 @@ class BIFEngine:
                         state = _pool_admit_run(
                             solver, self.op,
                             None if state is None else state.st,
+                            None if state is None else state.coeffs,
                             jnp.asarray(us), jnp.asarray(masks),
-                            jnp.asarray(fresh), lam_min, lam_max)
+                            jnp.asarray(fresh),
+                            jnp.asarray(fnidx) if tracking else None,
+                            lam_min, lam_max)
                     else:
                         # warm-only round: every admitted lane scatters a
                         # banked state in, so skip the pool init matvec
                         # and just rebind the masks on the pool operator
                         state = state._replace(op=dataclasses.replace(
                             state.op, mask=jnp.asarray(masks, dt)))
-                    for i, lane_st in warm:
-                        state = state._replace(
-                            st=_pool_scatter_run(state.st, lane_st,
-                                                 jnp.asarray(i)))
+                    for i, lane_sc in warm:
+                        st_new, coeffs_new = _pool_scatter_run(
+                            (state.st, state.coeffs), lane_sc,
+                            jnp.asarray(i))
+                        state = state._replace(st=st_new,
+                                               coeffs=coeffs_new)
 
                 # --- one decision round over the whole pool ---
                 state, lo, hi, res, dec, done, its = self._step(
@@ -494,7 +547,9 @@ class BIFEngine:
                                 state.op, mask=state.op.mask[i]),
                             st=jax.tree.map(lambda l: l[i], state.st),
                             lam_min=state.lam_min, lam_max=state.lam_max,
-                            basis=None, step=state.step)
+                            basis=None, step=state.step,
+                            coeffs=None if state.coeffs is None else
+                            jax.tree.map(lambda l: l[i], state.coeffs))
                         r._banked_query = us[i].copy()
                     else:
                         r.state = None
@@ -515,6 +570,15 @@ class BIFEngine:
     # -- the legacy lockstep flush (benchmark baseline) --------------------
 
     def _flush_lockstep(self) -> List[BIFRequest]:
+        cfg_fn = self.solver.config.fn
+        for r in self._queue:
+            if r.fn is not None and r.fn != cfg_fn:
+                # lockstep chunks run ONE solve_batch under the solver's
+                # static fn; per-lane mixing is a continuous-pool feature
+                raise ValueError(
+                    f"flush(mode='lockstep') serves the solver's "
+                    f"fn={cfg_fn!r} only (got a fn={r.fn!r} request); "
+                    f"mixed-fn traffic needs mode='continuous'")
         queue, self._queue = self._queue, []
         n, b = self.op.n, self.max_batch
         for start in range(0, len(queue), b):

@@ -23,6 +23,7 @@ from ..core import bounds as core_bounds
 from ..core import operators as core_ops
 from ..core import solver as core_solver
 from ..core import spectrum as core_spectrum
+from ..core import trace as core_trace
 
 
 def gradient_sketch(grads: Any, num_probes: int = 128,
@@ -61,6 +62,38 @@ def fisher_proxy_bounds(example_sketches: jax.Array, probe: jax.Array,
     return core_bounds.BIFBounds(lower=res.lower, upper=res.upper,
                                  iterations=res.iterations,
                                  converged=res.converged)
+
+
+def logdet_bounds(example_sketches: jax.Array, lam: float = 1e-3,
+                  num_probes: int | None = None, max_iters: int = 24):
+    """Bracketed ``logdet(F + lam I)`` for the Fisher-proxy Gram matrix
+    (a volume/entropy-style collapse signal: the logdet crashing toward
+    ``K log lam`` means the gradient sketches span a shrinking
+    subspace). Runs the retrospective logdet estimator
+    (``core.trace.trace_quad`` with f=log, DESIGN.md Sec. 9) on the
+    same never-materialized sketch matvec as the BIF monitor.
+
+    The spectral interval is certified, not estimated: F is PSD so
+    ``lam`` floors the spectrum, and ``lam_max <= tr(F + lam I)``
+    (= the sketch diagonal sum) caps it — loose caps only slow
+    convergence, never break the bounds. ``num_probes=None`` uses the K
+    unit probes (deterministic bracket containing the true logdet);
+    an integer runs that many Hutchinson probes instead.
+    """
+    b, k = example_sketches.shape
+    s = example_sketches.astype(jnp.float32)
+
+    def matvec(x):
+        # batched over leading dims of x (trace probes run as stacked
+        # lanes), unlike the single-vector closures above
+        return (x @ s.T) @ s / b + lam * x
+
+    diag = jnp.sum(s * s, axis=0) / b + lam
+    op = core_ops.MatvecFn(fn=matvec, n_static=k, diag_vals=diag)
+    return core_trace.trace_quad(
+        op, "log", num_probes, lam_min=lam * 0.999,
+        lam_max=float(jnp.sum(diag)), max_iters=max_iters, rtol=1e-6,
+        atol=1e-6)
 
 
 def condition_number_bounds(example_sketches: jax.Array, lam: float = 1e-3,
@@ -102,8 +135,11 @@ def make_monitor(loss_fn, cfg, lam: float = 1e-3, sketch_dim: int = 64,
         mean_sketch = sketches.mean(0)
         bif = fisher_proxy_bounds(sketches, mean_sketch, lam=lam)
         cond = condition_number_bounds(sketches, lam=lam)
+        ld = logdet_bounds(sketches, lam=lam)
         return {"nat_norm_lower": float(bif.lower),
                 "nat_norm_upper": float(bif.upper),
-                "quad_iters": int(bif.iterations), **cond}
+                "quad_iters": int(bif.iterations),
+                "logdet_lower": float(ld.lower),
+                "logdet_upper": float(ld.upper), **cond}
 
     return monitor

@@ -34,7 +34,7 @@ import numpy as np  # noqa: E402
 from conftest import make_spd  # noqa: E402
 from repro.core import BIFSolver, Dense, Masked, ShardedBIFSolver, \
     bell_from_dense, dpp, greedy_map, sparse_from_dense, stack_masks, \
-    stack_ops  # noqa: E402
+    stack_ops, trace_quad  # noqa: E402
 from repro.launch.mesh import make_lane_mesh  # noqa: E402
 from repro.serve import BIFEngine, BIFRequest  # noqa: E402
 
@@ -292,6 +292,55 @@ def check_resumable_stepping(mesh):
     _assert_solve_parity(ref, got, True, "budget-resume")
 
 
+def check_matfun_and_trace_probes(mesh):
+    """Matrix-function lanes over the mesh (DESIGN.md Sec. 9): the
+    fn='log' batched drive — including its resumable stepping — and the
+    trace-probe estimator match the single-device path exactly,
+    non-divisible probe counts included."""
+    from repro.core import sharded as core_sharded
+
+    a, us, true, lmn, lmx = _problem(k=11, seed=21)
+    op = sparse_from_dense(a)
+    s = BIFSolver.create(max_iters=50, rtol=1e-6, fn="log")
+    ref = s.solve_batch(op, us, lam_min=lmn, lam_max=lmx)
+    got = s.solve_batch_sharded(op, us, mesh=mesh, lam_min=lmn,
+                                lam_max=lmx)
+    _assert_solve_parity(ref, got, True, "matfun-log")
+    # dense-oracle containment, not just parity
+    w, v = np.linalg.eigh(a)
+    c = v.T @ np.asarray(us).T
+    truth = np.sum(c * c * np.log(w)[:, None], axis=0)
+    assert np.all(np.asarray(got.lower) <= truth + 1e-9 * np.abs(truth))
+    assert np.all(np.asarray(got.upper) >= truth - 1e-9 * np.abs(truth))
+
+    # interrupted sharded stepping carries the coefficient history
+    st = core_sharded.init_state_sharded(s, op, us, mesh=mesh,
+                                         lam_min=lmn, lam_max=lmx)
+    assert st.coeffs is not None and st.coeffs.alphas.shape[0] == 16
+    for k in (1, 3):
+        st = core_sharded.step_n_sharded(s, st, k, mesh=mesh)
+    st = core_sharded.resume_sharded(s, st, mesh=mesh)
+    got2 = core_sharded.finalize_sharded(s, st, nlanes=11)
+    _assert_solve_parity(ref, got2, True, "matfun-stepping")
+
+    # trace probes as sharded lanes: 10 Hutchinson probes over 8 devices
+    key = jax.random.key(3)
+    single = trace_quad(op, "log", 10, lam_min=lmn, lam_max=lmx, key=key)
+    sharded = trace_quad(op, "log", 10, lam_min=lmn, lam_max=lmx,
+                         key=key, mesh=mesh)
+    assert (sharded.lower, sharded.upper) == (single.lower, single.upper)
+    assert sharded.iterations == single.iterations
+    np.testing.assert_array_equal(sharded.state.probe_lower,
+                                  single.state.probe_lower)
+    ldtruth = float(np.sum(np.log(w)))
+    assert sharded.stat_lower <= ldtruth <= sharded.stat_upper
+
+    # exact unit probes: deterministic logdet certificate off the mesh
+    exact = trace_quad(op, "log", None, lam_min=lmn, lam_max=lmx,
+                       mesh=mesh)
+    assert exact.lower <= ldtruth <= exact.upper
+
+
 def check_sharded_solver_wrapper(mesh):
     """ShardedBIFSolver is static: closure-capture under jit works and
     matches the unbound calls."""
@@ -324,6 +373,7 @@ def main():
     check_resumable_stepping(mesh)
     check_engine_flush(mesh)
     check_applications(mesh)
+    check_matfun_and_trace_probes(mesh)
     check_sharded_solver_wrapper(mesh)
     print("OK")
 

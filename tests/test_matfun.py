@@ -1,0 +1,378 @@
+"""Matrix-function quadrature (core/matfun.py, DESIGN.md Sec. 9).
+
+The contract, pinned against dense-eigendecomposition oracles (never
+the quadrature itself):
+
+  (a) for f in {inv, log, invsqrt} on every conformance-grid operator,
+      all four quadrature estimates bracket the dense ``eigh`` truth at
+      EVERY iteration, with the tight (Radau) bracket inside the loose
+      (Gauss/Lobatto) one — i.e. the registry's derivative-sign ->
+      orientation table is right;
+  (b) with reorth=True the brackets tighten monotonically (the
+      tests/test_convergence.py discipline, generalized beyond 1/x);
+  (c) matfun QuadStates satisfy the PR-4 resume invariant:
+      ``resume(step_n(st, k)) == resume(st)`` including the coefficient
+      history, chunked decision rounds, it_cap budgets, and jit/flatten
+      round-trips;
+  (d) ``fn='inv'`` (the default) IS the legacy GQL path — bit-exact,
+      no coefficient tracking — while the eigensolve route evaluated at
+      the registry's inv entry reproduces the legacy Radau bracket to
+      float tolerance (two independent evaluations of the same rules).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BIFSolver, Dense, Jacobi, Masked, QuadState, \
+    Shifted, bell_from_dense, matfun, sparse_from_dense
+from repro.serve import BIFEngine, BIFRequest
+from conftest import make_spd
+
+OP_KINDS = ["dense", "sparse_coo", "sparse_bell", "masked", "shifted",
+            "jacobi"]
+FNS = ["inv", "log", "invsqrt"]
+_F = {"inv": lambda x: 1.0 / x, "log": np.log,
+      "invsqrt": lambda x: x ** -0.5, "sqrt": np.sqrt}
+
+# same slack discipline as tests/test_convergence.py
+_SLACK = 1e-8
+
+
+def _operator_and_dense(kind, a, rng):
+    """(operator, dense equivalent matrix) — the oracle diagonalizes
+    the SAME matrix the operator applies."""
+    n = a.shape[0]
+    if kind == "dense":
+        return Dense(jnp.asarray(a)), a
+    if kind == "sparse_coo":
+        return sparse_from_dense(a), a
+    if kind == "sparse_bell":
+        return bell_from_dense(a, bs=8), a
+    if kind == "masked":
+        m = (rng.random(n) < 0.7).astype(np.float64)
+        eq = a * np.outer(m, m) + np.diag(1.0 - m)
+        return Masked(Dense(jnp.asarray(a)), jnp.asarray(m)), eq
+    if kind == "shifted":
+        return Shifted(Dense(jnp.asarray(a)), jnp.asarray(0.75)), \
+            a + 0.75 * np.eye(n)
+    if kind == "jacobi":
+        c = 1.0 / np.sqrt(np.diag(a))
+        return Jacobi.create(Dense(jnp.asarray(a))), a * np.outer(c, c)
+    raise AssertionError(kind)
+
+
+def _problem(n=33, kappa=150.0, seed=0):
+    a = make_spd(n, kappa=kappa, seed=seed, density=0.4)
+    u = np.random.default_rng(seed + 1).standard_normal(n)
+    return a, u
+
+
+def _truth(eq, u, f):
+    w, v = np.linalg.eigh(eq)
+    c = v.T @ u
+    return float(np.sum(c * c * f(w)))
+
+
+# ------------------------------------------------ (a)+(b): containment
+
+@pytest.mark.parametrize("op_kind", OP_KINDS)
+@pytest.mark.parametrize("fn", FNS)
+def test_brackets_contain_eigh_truth_and_tighten(op_kind, fn):
+    rng = np.random.default_rng(3)
+    a, u = _problem(seed=3)
+    op, eq = _operator_and_dense(op_kind, a, rng)
+    w = np.linalg.eigvalsh(eq)
+    lmn, lmx = float(w[0] * 0.999), float(w[-1] * 1.001)
+    true = _truth(eq, u, _F[fn])
+    scale = max(abs(true), 1.0)
+
+    s = BIFSolver.create(max_iters=40, fn=fn, reorth=True)
+    tr = s.trace(op, jnp.asarray(u), 24, lam_min=lmn, lam_max=lmx)
+    lower = np.asarray(tr.radau_lower)
+    upper = np.asarray(tr.radau_upper)
+    loose_lo = np.asarray(tr.gauss)     # oriented loose lower (Sec. 9)
+    loose_hi = np.asarray(tr.lobatto)   # oriented loose upper
+
+    # (a) every iterate brackets the eigendecomposition truth, and the
+    # loose family sits outside the tight one (orientation table)
+    assert np.all(lower <= true + _SLACK * scale)
+    assert np.all(upper >= true - _SLACK * scale)
+    assert np.all(loose_lo <= lower + _SLACK * scale)
+    assert np.all(loose_hi >= upper - _SLACK * scale)
+
+    # (b) monotone tightening under reorthogonalization
+    assert np.all(np.diff(lower) >= -_SLACK * scale)
+    assert np.all(np.diff(upper) <= _SLACK * scale)
+    # and the final bracket is genuinely tight
+    assert upper[-1] - lower[-1] <= 1e-5 * scale
+
+
+def test_registry_orientation_table():
+    """The derivative-sign table: completely monotone f (inv, invsqrt)
+    keep Gauss in the lower family; log/sqrt swap families. All four
+    registered f carry guaranteed bounds."""
+    assert matfun.REGISTRY["inv"].gauss_is_lower
+    assert matfun.REGISTRY["invsqrt"].gauss_is_lower
+    assert not matfun.REGISTRY["log"].gauss_is_lower
+    assert not matfun.REGISTRY["sqrt"].gauss_is_lower
+    assert all(f.guaranteed for f in matfun.REGISTRY.values())
+    with pytest.raises(ValueError, match="fn must be one of"):
+        matfun.fn_index("exp")
+    with pytest.raises(ValueError, match="fn must be one of"):
+        BIFSolver.create(fn="nope")
+    with pytest.raises(ValueError, match="precondition"):
+        BIFSolver.create(fn="log", precondition="jacobi")
+
+
+# ------------------------------------------------ (c): resume invariant
+
+def _assert_result_parity(ref, got, bit_exact, what):
+    np.testing.assert_array_equal(np.asarray(got.iterations),
+                                  np.asarray(ref.iterations), what)
+    np.testing.assert_array_equal(np.asarray(got.certified),
+                                  np.asarray(ref.certified), what)
+    for field in ("lower", "upper", "gauss_lower", "lobatto_upper"):
+        b = np.asarray(getattr(got, field))
+        s = np.asarray(getattr(ref, field))
+        if bit_exact:
+            np.testing.assert_array_equal(b, s, f"{what}.{field}")
+        else:
+            np.testing.assert_allclose(b, s, rtol=1e-12,
+                                       err_msg=f"{what}.{field}")
+
+
+@pytest.mark.parametrize("op_kind", ["dense", "sparse_coo", "sparse_bell"])
+def test_interrupted_resume_matches_uninterrupted(op_kind):
+    rng = np.random.default_rng(5)
+    a, _ = _problem(seed=5)
+    us = np.random.default_rng(6).standard_normal((4, a.shape[0]))
+    w = np.linalg.eigvalsh(a)
+    lmn, lmx = float(w[0] * 0.5), float(w[-1] * 2.5)
+    op, _ = _operator_and_dense(op_kind, a, rng)
+    s = BIFSolver.create(max_iters=30, rtol=1e-6, fn="log")
+    ref = s.solve(op, jnp.asarray(us), lam_min=lmn, lam_max=lmx)
+    state = s.init_state(op, jnp.asarray(us), lam_min=lmn, lam_max=lmx)
+    for k in (1, 2, 5):
+        state = s.step_n(state, k)
+    got = s.finalize(s.resume(state))
+    _assert_result_parity(ref, got, op_kind == "sparse_coo", op_kind)
+    # the coefficient history is part of the checkpoint contract
+    assert got.state.coeffs is not None
+    np.testing.assert_array_equal(np.asarray(got.state.coeffs.fnidx),
+                                  np.asarray(ref.state.coeffs.fnidx))
+    np.testing.assert_array_equal(np.asarray(got.state.coeffs.alphas),
+                                  np.asarray(ref.state.coeffs.alphas))
+
+
+def test_chunked_caps_and_jit_checkpoints():
+    a, _ = _problem(seed=11, kappa=400.0)
+    us = np.random.default_rng(12).standard_normal((4, a.shape[0]))
+    w = np.linalg.eigvalsh(a)
+    lmn, lmx = float(w[0] * 0.9), float(w[-1] * 1.1)
+    op = sparse_from_dense(a)
+    s = BIFSolver.create(max_iters=30, rtol=1e-8, fn="invsqrt")
+    ref = s.resume(s.init_state(op, jnp.asarray(us), lam_min=lmn,
+                                lam_max=lmx))
+    chk = s.resume_chunked(
+        s.init_state(op, jnp.asarray(us), lam_min=lmn, lam_max=lmx),
+        chunk_iters=4)
+    np.testing.assert_array_equal(np.asarray(ref.lower),
+                                  np.asarray(chk.lower))
+    np.testing.assert_array_equal(np.asarray(ref.it), np.asarray(chk.it))
+    # per-lane budgets freeze, lifting resumes to the same endpoint
+    cap = jnp.asarray([3, 5, 30, 1], jnp.int32)
+    part = s.resume(s.init_state(op, jnp.asarray(us), lam_min=lmn,
+                                 lam_max=lmx), it_cap=cap)
+    assert np.all(np.asarray(part.it) <= np.asarray(cap))
+    full = s.resume(part)
+    np.testing.assert_array_equal(np.asarray(full.lower),
+                                  np.asarray(ref.lower))
+    # jit + flatten round-trips keep the coeff history working
+    state = s.init_state(op, jnp.asarray(us), lam_min=lmn, lam_max=lmx)
+    eager = s.step_n(state, 5)
+    jitted = jax.jit(lambda st: s.step_n(st, 5))(state)
+    np.testing.assert_array_equal(np.asarray(eager.lower),
+                                  np.asarray(jitted.lower))
+    leaves, treedef = jax.tree.flatten(eager)
+    back = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(back, QuadState)
+    np.testing.assert_array_equal(
+        np.asarray(s.finalize(s.resume(back)).lower),
+        np.asarray(s.finalize(s.resume(eager)).lower))
+
+
+def test_threshold_judge_on_matfun_brackets():
+    """Alg.-4 judges work unchanged on u^T log(A) u: decisions against
+    dense-truth-derived thresholds come back certified-correct."""
+    a, u = _problem(seed=7)
+    w = np.linalg.eigvalsh(a)
+    lmn, lmx = float(w[0] * 0.99), float(w[-1] * 1.01)
+    us = np.stack([u] * 4)
+    true = _truth(a, u, np.log)
+    # log values are negative here; margins on both sides
+    t = jnp.asarray(np.array([true - 3.0, true - 0.1, true + 0.1,
+                              true + 3.0]))
+    s = BIFSolver.create(max_iters=40, fn="log")
+    res = s.judge_batch(Dense(jnp.asarray(a)), jnp.asarray(us), t,
+                        lam_min=lmn, lam_max=lmx)
+    np.testing.assert_array_equal(np.asarray(res.decision),
+                                  np.asarray(t) < true)
+    assert np.all(np.asarray(res.certified))
+
+
+# ------------------------------------------------ (d): fn='inv' parity
+
+def test_fn_inv_is_bit_exact_legacy_and_untracked():
+    a, _ = _problem(seed=9)
+    us = np.random.default_rng(10).standard_normal((3, a.shape[0]))
+    w = np.linalg.eigvalsh(a)
+    lmn, lmx = float(w[0] * 0.9), float(w[-1] * 1.1)
+    op = sparse_from_dense(a)
+    legacy = BIFSolver.create(max_iters=30, rtol=1e-8)
+    tagged = BIFSolver.create(max_iters=30, rtol=1e-8, fn="inv")
+    r0 = legacy.solve(op, jnp.asarray(us), lam_min=lmn, lam_max=lmx)
+    r1 = tagged.solve(op, jnp.asarray(us), lam_min=lmn, lam_max=lmx)
+    assert r1.state.coeffs is None  # no tracking overhead on the default
+    _assert_result_parity(r0, r1, True, "inv-tag")
+
+
+def test_eigensolve_route_reproduces_inv_recurrence():
+    """Evaluating the registry's inv entry on a tracked coefficient
+    history reproduces the Sherman-Morrison Radau bracket to float
+    tolerance — the eigensolve and the recurrence are two evaluations
+    of the same quadrature rules."""
+    a, _ = _problem(seed=13)
+    us = np.random.default_rng(14).standard_normal((3, a.shape[0]))
+    w = np.linalg.eigvalsh(a)
+    lmn, lmx = float(w[0] * 0.9), float(w[-1] * 1.1)
+    op = Dense(jnp.asarray(a))
+    never = lambda lo, hi: jnp.zeros(jnp.shape(lo), bool)  # noqa: E731
+    tracked = BIFSolver.create(max_iters=12, fn="log")
+    legacy = BIFSolver.create(max_iters=12)
+    st_t = tracked.init_state(op, jnp.asarray(us), lam_min=lmn,
+                              lam_max=lmx)
+    st_l = legacy.init_state(op, jnp.asarray(us), lam_min=lmn,
+                             lam_max=lmx)
+    for _ in range(8):
+        st_t = tracked.step_n(st_t, 1, never)
+        st_l = legacy.step_n(st_l, 1, never)
+        as_inv = dataclasses.replace(
+            st_t.coeffs, fnidx=jnp.zeros_like(st_t.coeffs.fnidx))
+        lo, hi, loose_lo, loose_hi = matfun.bracket(
+            as_inv, st_t.st, st_t.lam_min, st_t.lam_max)
+        np.testing.assert_allclose(np.asarray(lo), np.asarray(st_l.lower),
+                                   rtol=1e-9)
+        np.testing.assert_allclose(np.asarray(hi), np.asarray(st_l.upper),
+                                   rtol=1e-9)
+
+
+# ------------------------------------------------ engine fn tags
+
+def test_engine_serves_mixed_fn_pool():
+    a = make_spd(28, kappa=60.0, seed=2)
+    w, v = np.linalg.eigh(a)
+    lam = dict(lam_min=float(w[0] * 0.99), lam_max=float(w[-1] * 1.01))
+    op = Dense(jnp.asarray(a))
+    rng = np.random.default_rng(4)
+    us = rng.standard_normal((6, 28))
+    sv = BIFSolver.create(max_iters=40, rtol=1e-6, atol=1e-10, fn="log")
+    eng = BIFEngine(op, solver=sv, max_batch=4, **lam)
+    fns = ["log", "invsqrt", None, "inv", "sqrt", "log"]
+    reqs = [eng.submit(BIFRequest(u=u, fn=f)) for u, f in zip(us, fns)]
+    out = eng.flush()
+    assert out == reqs  # submission order
+    for r, f, u in zip(out, fns, us):
+        c = v.T @ u
+        true = float(np.sum(c * c * _F[f or "log"](w)))
+        assert r.resolved
+        assert r.lower <= true + 1e-8 * abs(true)
+        assert r.upper >= true - 1e-8 * abs(true)
+
+    # budget-interrupted matfun request resumes through the banked state
+    r = eng.submit(BIFRequest(u=us[0], fn="log", max_iters=3))
+    eng.flush()
+    assert not r.resolved and r.iterations == 3
+    assert r.state is not None and r.state.coeffs is not None
+    eng.submit(r)
+    eng.flush()
+    assert r.iterations > 3
+    c = v.T @ us[0]
+    true = float(np.sum(c * c * np.log(w)))
+    assert r.lower <= true <= r.upper
+
+    # resubmitting a banked solve under a different fn is rejected
+    r2 = eng.submit(BIFRequest(u=us[1], fn="invsqrt", max_iters=2))
+    eng.flush()
+    assert r2.state is not None
+    r2.fn = "log"
+    with pytest.raises(ValueError, match="banks a fn='invsqrt'"):
+        eng.submit(r2)
+
+    # legacy engines reject matfun tags at the door
+    legacy_eng = BIFEngine(op, max_batch=4, **lam)
+    with pytest.raises(ValueError, match="legacy f=1/x"):
+        legacy_eng.submit(BIFRequest(u=us[0], fn="log"))
+
+    # cross-pool banked states are rejected at the door, both ways: a
+    # matfun pool banks CoeffHistory lanes, a legacy pool coeff-free
+    # ones — a presence mismatch would poison a flush mid-flight
+    r3 = eng.submit(BIFRequest(u=us[2], fn="inv", max_iters=1))
+    eng.flush()
+    assert r3.state is not None and r3.state.coeffs is not None
+    with pytest.raises(ValueError, match="cannot resume on this one"):
+        legacy_eng.submit(r3)
+    r4 = legacy_eng.submit(BIFRequest(u=us[3], max_iters=1))
+    legacy_eng.flush()
+    assert r4.state is not None and r4.state.coeffs is None
+    r4.fn = "inv"
+    with pytest.raises(ValueError, match="cannot resume on this one"):
+        eng.submit(r4)
+
+
+def test_pair_driver_rejects_matfun():
+    a = make_spd(16, kappa=30.0, seed=0)
+    op = Dense(jnp.asarray(a))
+    u = jnp.asarray(np.random.default_rng(0).standard_normal(16))
+    s = BIFSolver.create(max_iters=10, fn="log")
+    with pytest.raises(NotImplementedError, match="pair driver"):
+        s.judge_kdpp_swap(op, u, op, u, 0.0, 0.5, lam_min=0.1,
+                          lam_max=10.0)
+
+
+def test_undersized_coeff_rows_freezes_soundly():
+    """A coeff history smaller than max_iters acts like an iteration
+    budget: lanes freeze at the buffer capacity with the bracket still
+    containing the truth (never silently corrupted past capacity), and
+    an unresolved capacity-frozen state finalizes uncertified."""
+    a, u = _problem(seed=17)
+    w = np.linalg.eigvalsh(a)
+    lmn, lmx = float(w[0] * 0.99), float(w[-1] * 1.01)
+    true = _truth(a, u, np.log)
+    s = BIFSolver.create(max_iters=40, rtol=1e-10, fn="log")
+    st = s.init_state(Dense(jnp.asarray(a)), jnp.asarray(u),
+                      lam_min=lmn, lam_max=lmx, coeff_rows=4)
+    st = s.resume(st)
+    assert int(st.it) == 4  # frozen at capacity, not at max_iters
+    res = s.finalize(st)
+    assert float(res.lower) <= true <= float(res.upper)
+    assert not bool(res.certified)
+
+
+def test_dpp_chain_judges_reject_matfun_solver():
+    """The chain judges compare Schur-complement thresholds against the
+    BIF; handing them a matfun solver would certify decisions about the
+    wrong quantity, so they reject it at the door."""
+    from repro.core import dpp, greedy_map
+    a = make_spd(16, kappa=30.0, seed=0)
+    op = Dense(jnp.asarray(a))
+    st = dpp.init_chain(jax.random.key(0), jnp.zeros(16).at[:3].set(1.0))
+    s = BIFSolver.create(max_iters=18, fn="log")
+    with pytest.raises(ValueError, match="fn='inv'"):
+        dpp.dpp_step(op, st, 0.1, 10.0, max_iters=18, solver=s)
+    with pytest.raises(ValueError, match="fn='inv'"):
+        dpp.kdpp_step(op, st, 0.1, 10.0, max_iters=18, solver=s)
+    with pytest.raises(ValueError, match="fn='inv'"):
+        greedy_map(op, 3, 0.1, 10.0, max_iters=18, solver=s)

@@ -1,0 +1,156 @@
+"""Stochastic trace estimation (core/trace.py) + the logdet workloads
+(dpp.log_likelihood, train.monitor.logdet_bounds), DESIGN.md Sec. 9.
+
+Oracles are dense eigendecompositions / ``slogdet`` throughout: exact
+unit-probe runs must bracket the TRUE trace deterministically; the
+Hutchinson runs must bracket the probe-sample mean (recomputed here
+from the identical reproducible probe stream) with the statistical
+interval containing the truth.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Dense, Masked, sparse_from_dense, trace_quad, \
+    logdet_quad, log_likelihood
+from repro.core.trace import _rademacher_probe
+from repro.train.monitor import logdet_bounds
+from conftest import make_spd
+
+
+def _problem(n=24, kappa=50.0, seed=0):
+    a = make_spd(n, kappa=kappa, seed=seed)
+    w, v = np.linalg.eigh(a)
+    return a, w, v, float(w[0] * 0.99), float(w[-1] * 1.01)
+
+
+@pytest.mark.parametrize("fn,f", [("log", np.log),
+                                  ("invsqrt", lambda x: x ** -0.5),
+                                  ("inv", lambda x: 1.0 / x)])
+@pytest.mark.parametrize("op_kind", ["dense", "sparse_coo"])
+def test_exact_probes_bracket_true_trace(fn, f, op_kind):
+    a, w, _, lmn, lmx = _problem()
+    op = Dense(jnp.asarray(a)) if op_kind == "dense" \
+        else sparse_from_dense(a)
+    true = float(np.sum(f(w)))
+    r = trace_quad(op, fn, None, lam_min=lmn, lam_max=lmx)
+    scale = max(abs(true), 1.0)
+    assert r.lower <= true + 1e-8 * scale
+    assert r.upper >= true - 1e-8 * scale
+    assert r.upper - r.lower <= 1e-3 * scale
+    # exact mode: no sampling error, stat interval == det bracket
+    assert r.std_error == 0.0
+    assert (r.stat_lower, r.stat_upper) == (r.lower, r.upper)
+    assert r.num_probes == a.shape[0]
+
+
+def test_hutchinson_brackets_probe_sample_mean():
+    a, w, v, lmn, lmx = _problem(seed=3)
+    n = a.shape[0]
+    key = jax.random.key(7)
+    r = trace_quad(Dense(jnp.asarray(a)), "log", 8, lam_min=lmn,
+                   lam_max=lmx, key=key)
+    # recompute the identical probes from the reproducible stream
+    vals = []
+    for i in range(8):
+        z = np.asarray(_rademacher_probe(key, i, n, np.float64))
+        c = v.T @ z
+        vals.append(float(np.sum(c * c * np.log(w))))
+    sample_mean = float(np.mean(vals))
+    assert r.lower <= sample_mean <= r.upper
+    # the per-probe brackets each contain their probe's true value
+    for i, val in enumerate(vals):
+        assert r.state.probe_lower[i] <= val <= r.state.probe_upper[i]
+    # the statistical interval covers the true trace here
+    true = float(np.sum(np.log(w)))
+    assert r.stat_lower <= true <= r.stat_upper
+    assert r.std_error > 0.0
+
+
+def test_probe_by_probe_resume_matches_direct():
+    a, _, _, lmn, lmx = _problem(seed=5)
+    op = sparse_from_dense(a)
+    key = jax.random.key(11)
+    r8 = trace_quad(op, "log", 8, lam_min=lmn, lam_max=lmx, key=key)
+    r16 = trace_quad(op, "log", 16, lam_min=lmn, lam_max=lmx, key=key,
+                     state=r8.state)
+    direct = trace_quad(op, "log", 16, lam_min=lmn, lam_max=lmx, key=key)
+    # SparseCOO lanes are bit-exact across batch shapes, so resumed ==
+    # direct exactly (probes 0..7 reuse the banked brackets)
+    assert (r16.lower, r16.upper) == (direct.lower, direct.upper)
+    assert r16.iterations == direct.iterations
+    np.testing.assert_array_equal(r16.state.probe_lower,
+                                  direct.state.probe_lower)
+    # chunked probe batches accumulate the same estimate
+    chunked = trace_quad(op, "log", 16, lam_min=lmn, lam_max=lmx,
+                         key=key, probe_chunk=4)
+    np.testing.assert_array_equal(chunked.state.probe_lower,
+                                  direct.state.probe_lower)
+    # guardrails
+    with pytest.raises(ValueError, match="resume state banks"):
+        trace_quad(op, "invsqrt", 16, lam_min=lmn, lam_max=lmx, key=key,
+                   state=r8.state)
+    with pytest.raises(ValueError, match="can only extend"):
+        trace_quad(op, "log", 4, lam_min=lmn, lam_max=lmx, key=key,
+                   state=r8.state)
+    with pytest.raises(ValueError, match="num_probes"):
+        trace_quad(op, "log", 0, lam_min=lmn, lam_max=lmx)
+    with pytest.raises(ValueError, match="different key"):
+        trace_quad(op, "log", 16, lam_min=lmn, lam_max=lmx,
+                   key=jax.random.key(99), state=r8.state)
+    with pytest.raises(ValueError, match="spectral interval"):
+        trace_quad(op, "log", 16, lam_min=lmn * 0.5, lam_max=lmx,
+                   key=key, state=r8.state)
+
+
+def test_log_likelihood_brackets_slogdet_truth():
+    a, w, _, lmn, lmx = _problem(seed=9, kappa=30.0)
+    n = a.shape[0]
+    rng = np.random.default_rng(5)
+    for seed in (0, 1):
+        mask = (rng.random(n) < 0.6).astype(float)
+        idx = np.where(mask > 0.5)[0]
+        true = float(np.linalg.slogdet(a[np.ix_(idx, idx)])[1]
+                     - np.linalg.slogdet(a + np.eye(n))[1])
+        ll = log_likelihood(Dense(jnp.asarray(a)), jnp.asarray(mask),
+                            lmn, lmx)
+        scale = max(abs(true), 1.0)
+        assert ll.lower <= true + 1e-8 * scale
+        assert ll.upper >= true - 1e-8 * scale
+        assert ll.upper - ll.lower <= 1e-3 * scale
+        assert abs(ll.estimate - true) <= 1e-4 * scale
+    # the empty set: logdet(L_{}) = 0, so log P = -logdet(L + I)
+    ll0 = log_likelihood(Dense(jnp.asarray(a)), jnp.zeros(n), lmn, lmx)
+    true0 = -float(np.linalg.slogdet(a + np.eye(n))[1])
+    assert ll0.lower <= true0 <= ll0.upper
+
+
+def test_logdet_quad_masked_needs_no_correction():
+    """tr log of the fixed-shape Masked operator IS logdet(A_Y): the
+    identity block contributes log(1) = 0 — pinned explicitly because
+    every other f would need a (N - |Y|) * f(1) correction."""
+    a, _, _, lmn, lmx = _problem(seed=13, kappa=20.0)
+    n = a.shape[0]
+    mask = (np.random.default_rng(2).random(n) < 0.5).astype(float)
+    idx = np.where(mask > 0.5)[0]
+    true = float(np.linalg.slogdet(a[np.ix_(idx, idx)])[1])
+    r = logdet_quad(Masked(Dense(jnp.asarray(a)), jnp.asarray(mask)),
+                    None, lam_min=min(lmn, 1.0), lam_max=max(lmx, 1.0))
+    assert r.lower <= true <= r.upper
+    assert r.upper - r.lower <= 1e-3 * max(abs(true), 1.0)
+
+
+def test_monitor_logdet_bounds():
+    rng = np.random.default_rng(0)
+    sketches = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    lam = 1e-2
+    s = np.asarray(sketches, np.float64)
+    f = s.T @ s / s.shape[0] + lam * np.eye(16)
+    true = float(np.linalg.slogdet(f)[1])
+    r = logdet_bounds(sketches, lam=lam, max_iters=32)
+    # f32 quadrature against an f64 oracle: containment to f32 slack
+    scale = max(abs(true), 1.0)
+    assert r.lower <= true + 1e-4 * scale
+    assert r.upper >= true - 1e-4 * scale
+    assert abs(r.estimate - true) <= 1e-2 * scale
