@@ -1,0 +1,26 @@
+"""quadlint: repo-specific static analysis for the quadrature runtime.
+
+``python -m repro.analysis src tests benchmarks`` walks the given paths
+and mechanically enforces the contracts DESIGN.md states in prose (full
+catalog with motivating bugs: DESIGN.md Sec. 10):
+
+  QL001  state-threading completeness: every field of QuadState /
+         GQLState / CoeffHistory is claimed by a threading-contract
+         registry and handled by the freeze loops, the sharded driver,
+         and the serving pool's admission/banking.
+  QL002  tracer leaks: python `if`/`while`/`bool()`/`float()`/`int()`/
+         `.item()` on traced values inside jit / shard_map /
+         lax.while_loop bodies.
+  QL003  jit discipline: module-level jits in serve/ carry a trace
+         counter; no jax.jit constructed inside function bodies.
+  QL004  collective pairing: collectives under a while_loop inside
+         shard_map require the psum-carried continue flag.
+  QL005  no imports of the removed PR-2 deprecation shims.
+  QL006  no unkeyed randomness in library/benchmark code.
+
+Findings print as ``path:line RULE message``; suppress a deliberate
+exception with ``# quadlint: disable=QLxxx -- reason`` (the reason is
+mandatory). The engine is stdlib-only (``ast``); QL001 additionally
+imports the runtime modules to read the live field sets.
+"""
+from .engine import Finding, main, run_paths  # noqa: F401

@@ -1,0 +1,132 @@
+"""QL004: collectives under ``lax.while_loop`` inside ``shard_map``
+must be guarded by a psum-carried continue flag.
+
+The PR 3 lockstep invariant (DESIGN.md Sec. 7): when a while_loop body
+issues collectives (``all_gather``/``psum``/...) inside a shard_map
+scope, every device must take exactly the same number of trips, or the
+body's collectives stop pairing and the program deadlocks / corrupts.
+The repo's pattern is a globally-reduced continue flag carried through
+the loop::
+
+    def cont_of(nm):
+        return jax.lax.psum(jnp.any(nm).astype(jnp.int32), axis) > 0
+
+A device whose local lanes all resolved keeps stepping (frozen) until
+the slowest lane anywhere resolves. This rule finds while_loops whose
+bodies reach a collective (transitively, through calls to sibling
+helpers in the same shard_map scope) and flags them unless the scope
+contains a psum-of-reduction continue flag.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from .engine import FileContext, Finding
+from .rules_ast import last_component
+
+_COLLECTIVES = {"all_gather", "psum", "psum_scatter", "all_to_all",
+                "ppermute", "pmax", "pmin", "pmean", "pshuffle"}
+_REDUCERS = {"any", "all", "max", "min", "sum", "pmax", "pmin"}
+
+
+def _shard_map_scopes(tree: ast.Module) -> list:
+    """Function nodes passed (as names or lambdas) to shard_map(...)."""
+    by_name: dict = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, []).append(node)
+    scopes = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and last_component(node.func) == "shard_map"):
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Lambda):
+                scopes.append(arg)
+            elif isinstance(arg, ast.Name):
+                scopes.extend(by_name.get(arg.id, ()))
+    return scopes
+
+
+def _local_defs(scope) -> dict:
+    """name -> def for every function defined anywhere in the scope."""
+    defs: dict = {}
+    for node in ast.walk(scope):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+    return defs
+
+
+def _reachable_collectives(fn, defs: dict) -> set:
+    """Collective callees reachable from ``fn`` following calls to
+    same-scope helper functions (the repo's body -> needs_more ->
+    gather chain)."""
+    seen_fns: set = set()
+    found: set = set()
+    stack = [fn]
+    while stack:
+        cur = stack.pop()
+        if id(cur) in seen_fns:
+            continue
+        seen_fns.add(id(cur))
+        for node in ast.walk(cur):
+            if not isinstance(node, ast.Call):
+                continue
+            name = last_component(node.func)
+            if name in _COLLECTIVES:
+                found.add(name)
+            elif name in defs:
+                stack.append(defs[name])
+    return found
+
+
+def _has_psum_continue_flag(scope) -> bool:
+    """A ``psum(<reduction(...)>, axis)``-style globally-reduced flag
+    anywhere in the shard_map scope."""
+    for node in ast.walk(scope):
+        if not (isinstance(node, ast.Call)
+                and last_component(node.func) in ("psum", "pmax", "pmin")
+                and node.args):
+            continue
+        for sub in ast.walk(node.args[0]):
+            if isinstance(sub, ast.Call) \
+                    and last_component(sub.func) in _REDUCERS:
+                return True
+    return False
+
+
+def _resolve_fn(arg, defs: dict) -> Optional[ast.AST]:
+    if isinstance(arg, ast.Lambda):
+        return arg
+    if isinstance(arg, ast.Name):
+        return defs.get(arg.id)
+    return None
+
+
+def check_collective_pairing(ctx: FileContext) -> Iterable[Finding]:
+    findings: list = []
+    for scope in _shard_map_scopes(ctx.tree):
+        if isinstance(scope, ast.Lambda):
+            continue  # a lambda cannot hold a while_loop
+        defs = _local_defs(scope)
+        guarded = _has_psum_continue_flag(scope)
+        for node in ast.walk(scope):
+            if not (isinstance(node, ast.Call)
+                    and last_component(node.func) == "while_loop"):
+                continue
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            if len(args) < 2:
+                continue
+            body = _resolve_fn(args[1], defs)
+            if body is None:
+                continue
+            reached = _reachable_collectives(body, defs)
+            if reached and not guarded:
+                findings.append(Finding(
+                    ctx.rel, node.lineno, "QL004",
+                    f"while_loop body issues collectives "
+                    f"({', '.join(sorted(reached))}) inside shard_map "
+                    f"without a psum-carried continue flag — trip counts "
+                    f"can diverge across devices (DESIGN.md Sec. 7)"))
+    return findings

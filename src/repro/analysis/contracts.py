@@ -1,0 +1,418 @@
+"""QL001: state-threading completeness for the runtime's pytrees.
+
+The resumable runtime carries three registered state containers —
+``QuadState`` (core/solver.py), ``GQLState`` (core/gql.py), and
+``CoeffHistory`` (core/matfun.py) — through four independent handler
+layers: the single-device freeze loops (``step_n``/``resume``), the
+sharded driver (``_drive_sharded``), the serving pool
+(``_pool_admit_run`` + per-lane banking), and the matfun coefficient
+writer. PRs 3-5 each shipped a review fix for a field added to one of
+these pytrees but not threaded through every handler; ROADMAP adds more
+(block-Krylov buffers, rank-update caches). This checker makes that a
+CI failure instead:
+
+  * the LIVE field sets come from importing the modules
+    (``QuadState._fields`` etc.), so a field added to the class is seen
+    the moment it exists;
+  * each field must be claimed by the threading-contract registries
+    next to the classes (``QUADSTATE_PER_LANE`` / ``QUADSTATE_CARRIED``
+    / ``QUADSTATE_PREPARED`` in solver.py), exactly once;
+  * the handler sites are checked by AST against those registries:
+    ``_replace``/ctor keyword coverage, ``tree_freeze`` arguments, and
+    the documented per-handler exclusions (``SHARDED_STATE_EXCLUDED``,
+    ``ENGINE_ADMIT_EXCLUDED``, ``COEFF_REPLACE_EXCLUDED``).
+
+Adding a ``block_basis`` field to QuadState without freezing, sharding,
+and banking it now fails ``python -m repro.analysis src`` (pinned by the
+mutation tests in tests/test_analysis.py).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import importlib
+import sys
+from pathlib import Path
+from typing import Iterable, Optional
+
+from .engine import FileContext, Finding
+
+RULE = "QL001"
+
+# repo-relative suffixes of the contract's handler files
+_ROLE_SUFFIX = {
+    "solver": ("src", "repro", "core", "solver.py"),
+    "gql": ("src", "repro", "core", "gql.py"),
+    "matfun": ("src", "repro", "core", "matfun.py"),
+    "sharded": ("src", "repro", "core", "sharded.py"),
+    "engine": ("src", "repro", "serve", "engine.py"),
+}
+_ROLE_MODULE = {
+    "solver": "repro.core.solver",
+    "gql": "repro.core.gql",
+    "matfun": "repro.core.matfun",
+    "sharded": "repro.core.sharded",
+    "engine": "repro.serve.engine",
+}
+
+
+def _role_paths(contexts: Iterable[FileContext]) -> Optional[dict]:
+    """Locate the five handler files. Activation is keyed on solver.py
+    being in the scan set; the siblings are derived from its location
+    (the contract is cross-file — scanning src/ always covers all)."""
+    anchor = None
+    for ctx in contexts:
+        if ctx.parts[-len(_ROLE_SUFFIX["solver"]):] \
+                == _ROLE_SUFFIX["solver"]:
+            anchor = ctx
+            break
+    if anchor is None:
+        return None
+    root = Path(*anchor.parts[:-len(_ROLE_SUFFIX["solver"])])
+    by_path = {c.path: c for c in contexts}
+    roles: dict = {}
+    for role, suffix in _ROLE_SUFFIX.items():
+        p = root.joinpath(*suffix)
+        roles[role] = by_path.get(p) or p
+    return roles
+
+
+def _parse(roles: dict, role: str) -> tuple:
+    """(rel display path, ast.Module) for a role file — from the scanned
+    context when available, from disk otherwise."""
+    entry = roles[role]
+    if isinstance(entry, FileContext):
+        return entry.rel, entry.tree
+    source = entry.read_text(encoding="utf-8")
+    return str(entry), ast.parse(source, filename=str(entry))
+
+
+def _import_role(roles: dict, role: str):
+    """Import the live module (registry + field sets). The already-
+    imported module is reused, so tests can monkeypatch mutations."""
+    mod_name = _ROLE_MODULE[role]
+    if mod_name in sys.modules:
+        return sys.modules[mod_name]
+    entry = roles[role]
+    path = entry.path if isinstance(entry, FileContext) else entry
+    src_dir = str(Path(*path.parts[:path.parts.index("repro")]))
+    if src_dir not in sys.path:
+        sys.path.insert(0, src_dir)
+    return importlib.import_module(mod_name)
+
+
+# ---------------------------------------------------------------------------
+# AST helpers
+
+
+def _find_def(tree: ast.Module, name: str):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == name:
+            return node
+    return None
+
+
+def _class_line(tree: ast.Module, name: str) -> int:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node.lineno
+    return 1
+
+
+def _call_name(node: ast.Call) -> Optional[str]:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _replace_kwargs(fn) -> set:
+    """Keyword names across every ``<expr>._replace(...)`` call in fn."""
+    out: set = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and _call_name(node) == "_replace":
+            out.update(kw.arg for kw in node.keywords if kw.arg)
+    return out
+
+
+def _frozen_names(fn) -> set:
+    """Names a ``tree_freeze(new, old, flag)`` call site threads: the
+    bare names / attribute tails of its first two arguments (so both
+    ``tree_freeze(st1, st, ...)`` and ``tree_freeze(state.st, st, ...)``
+    claim the field ``st``; the ``X1`` convention strips a trailing 1)."""
+    out: set = set()
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.Call)
+                and _call_name(node) == "tree_freeze"):
+            continue
+        for arg in node.args[:2]:
+            name = None
+            if isinstance(arg, ast.Name):
+                name = arg.id
+            elif isinstance(arg, ast.Attribute):
+                name = arg.attr
+            if name:
+                out.add(name)
+                if name.endswith("1"):
+                    out.add(name[:-1])
+    return out
+
+
+def _ctor_calls(tree: ast.Module, class_name: str) -> list:
+    return [node for node in ast.walk(tree)
+            if isinstance(node, ast.Call)
+            and _call_name(node) == class_name]
+
+
+def _tuple_literal(mod, attr: str) -> Optional[tuple]:
+    val = getattr(mod, attr, None)
+    if isinstance(val, (tuple, list)) \
+            and all(isinstance(x, str) for x in val):
+        return tuple(val)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the checks
+
+
+def check_contracts(contexts: Iterable[FileContext]) -> list:
+    contexts = list(contexts)
+    roles = _role_paths(contexts)
+    if roles is None:
+        return []
+    for role, entry in roles.items():
+        if not isinstance(entry, FileContext) and not entry.exists():
+            return [Finding(str(entry), 1, RULE,
+                            f"contract handler file for role '{role}' "
+                            f"is missing")]
+    findings: list = []
+    try:
+        solver_mod = _import_role(roles, "solver")
+        gql_mod = _import_role(roles, "gql")
+        matfun_mod = _import_role(roles, "matfun")
+        sharded_mod = _import_role(roles, "sharded")
+        engine_mod = _import_role(roles, "engine")
+    except Exception as e:  # pragma: no cover - import environment broken
+        rel, _ = _parse(roles, "solver")
+        return [Finding(rel, 1, RULE,
+                        f"cannot import the runtime modules to read the "
+                        f"live field sets: {e!r}")]
+
+    solver_rel, solver_tree = _parse(roles, "solver")
+    sharded_rel, sharded_tree = _parse(roles, "sharded")
+    engine_rel, engine_tree = _parse(roles, "engine")
+    gql_rel, gql_tree = _parse(roles, "gql")
+    matfun_rel, matfun_tree = _parse(roles, "matfun")
+
+    # ---- QuadState: registry partition --------------------------------
+    qfields = tuple(solver_mod.QuadState._fields)
+    qline = _class_line(solver_tree, "QuadState")
+    buckets = {}
+    for name in ("QUADSTATE_PER_LANE", "QUADSTATE_CARRIED",
+                 "QUADSTATE_PREPARED"):
+        bucket = _tuple_literal(solver_mod, name)
+        if bucket is None:
+            findings.append(Finding(
+                solver_rel, qline, RULE,
+                f"threading-contract registry `{name}` missing from "
+                f"core/solver.py (tuple of field-name strings)"))
+            bucket = ()
+        buckets[name] = bucket
+    claimed: list = [f for b in buckets.values() for f in b]
+    for f in qfields:
+        n = claimed.count(f)
+        if n == 0:
+            findings.append(Finding(
+                solver_rel, qline, RULE,
+                f"QuadState field '{f}' is not claimed by any threading-"
+                f"contract registry (QUADSTATE_PER_LANE/_CARRIED/"
+                f"_PREPARED) — decide how it threads before it ships"))
+        elif n > 1:
+            findings.append(Finding(
+                solver_rel, qline, RULE,
+                f"QuadState field '{f}' is claimed by {n} registries; "
+                f"buckets must partition the fields"))
+    for f in claimed:
+        if f not in qfields:
+            findings.append(Finding(
+                solver_rel, qline, RULE,
+                f"threading-contract registry names '{f}', which is not "
+                f"a QuadState field"))
+
+    per_lane = tuple(buckets["QUADSTATE_PER_LANE"])
+    threaded = per_lane + tuple(buckets["QUADSTATE_CARRIED"])
+
+    # ---- QuadState: ctor completeness ---------------------------------
+    for rel, tree in ((solver_rel, solver_tree), (sharded_rel,
+                      sharded_tree), (engine_rel, engine_tree)):
+        for call in _ctor_calls(tree, "QuadState"):
+            kwargs = {kw.arg for kw in call.keywords if kw.arg}
+            for f in qfields:
+                if f not in kwargs:
+                    findings.append(Finding(
+                        rel, call.lineno, RULE,
+                        f"QuadState(...) omits field '{f}' — every "
+                        f"construction site must thread all fields "
+                        f"explicitly (keyword form)"))
+
+    # ---- QuadState: freeze-loop handlers (step_n / resume) ------------
+    for fn_name in ("step_n", "resume"):
+        fn = _find_def(solver_tree, fn_name)
+        if fn is None:
+            findings.append(Finding(
+                solver_rel, 1, RULE,
+                f"BIFSolver.{fn_name} not found (the freeze-loop "
+                f"handler the contract is checked against)"))
+            continue
+        replaced = _replace_kwargs(fn)
+        frozen = _frozen_names(fn)
+        for f in threaded:
+            if f not in replaced:
+                findings.append(Finding(
+                    solver_rel, fn.lineno, RULE,
+                    f"BIFSolver.{fn_name} does not thread QuadState "
+                    f"field '{f}' through its _replace"))
+        for f in per_lane:
+            if f not in frozen:
+                findings.append(Finding(
+                    solver_rel, fn.lineno, RULE,
+                    f"BIFSolver.{fn_name} never tree_freeze-s per-lane "
+                    f"QuadState field '{f}' (resolved lanes would keep "
+                    f"stepping)"))
+
+    # ---- QuadState: sharded driver ------------------------------------
+    sharded_excluded = _tuple_literal(sharded_mod,
+                                      "SHARDED_STATE_EXCLUDED") or ()
+    if _tuple_literal(sharded_mod, "SHARDED_STATE_EXCLUDED") is None:
+        findings.append(Finding(
+            sharded_rel, 1, RULE,
+            "`SHARDED_STATE_EXCLUDED` registry missing from "
+            "core/sharded.py (fields the sharded driver rejects "
+            "up front)"))
+    drive = _find_def(sharded_tree, "_drive_sharded")
+    if drive is None:
+        findings.append(Finding(
+            sharded_rel, 1, RULE,
+            "_drive_sharded not found (the sharded threading handler)"))
+    else:
+        replaced = _replace_kwargs(drive)
+        frozen = _frozen_names(drive)
+        for f in threaded:
+            if f not in replaced and f not in sharded_excluded:
+                findings.append(Finding(
+                    sharded_rel, drive.lineno, RULE,
+                    f"_drive_sharded neither threads QuadState field "
+                    f"'{f}' through _replace nor lists it in "
+                    f"SHARDED_STATE_EXCLUDED"))
+        for f in per_lane:
+            if f not in frozen and f not in sharded_excluded:
+                findings.append(Finding(
+                    sharded_rel, drive.lineno, RULE,
+                    f"_drive_sharded never tree_freeze-s per-lane "
+                    f"field '{f}' (and it is not excluded)"))
+
+    # ---- QuadState: serving pool admission / banking ------------------
+    engine_excluded = _tuple_literal(engine_mod,
+                                     "ENGINE_ADMIT_EXCLUDED") or ()
+    if _tuple_literal(engine_mod, "ENGINE_ADMIT_EXCLUDED") is None:
+        findings.append(Finding(
+            engine_rel, 1, RULE,
+            "`ENGINE_ADMIT_EXCLUDED` registry missing from "
+            "serve/engine.py (per-lane fields the pool scheduler "
+            "refuses via its lockstep fallback)"))
+    admit = _find_def(engine_tree, "_pool_admit_run")
+    if admit is None:
+        findings.append(Finding(
+            engine_rel, 1, RULE,
+            "_pool_admit_run not found (the pool-admission handler)"))
+    else:
+        replaced = _replace_kwargs(admit)
+        frozen = _frozen_names(admit)
+        for f in per_lane:
+            if f not in replaced and f not in engine_excluded:
+                findings.append(Finding(
+                    engine_rel, admit.lineno, RULE,
+                    f"_pool_admit_run neither merges per-lane QuadState "
+                    f"field '{f}' through _replace nor lists it in "
+                    f"ENGINE_ADMIT_EXCLUDED"))
+            if f not in frozen and f not in engine_excluded:
+                findings.append(Finding(
+                    engine_rel, admit.lineno, RULE,
+                    f"_pool_admit_run never tree_freeze-s occupied lanes "
+                    f"of per-lane field '{f}' (admission would clobber "
+                    f"in-flight lanes)"))
+
+    # ---- GQLState: ctor completeness ----------------------------------
+    gfields = tuple(gql_mod.GQLState._fields)
+    gql_ctors = _ctor_calls(gql_tree, "GQLState")
+    if not gql_ctors:
+        findings.append(Finding(
+            gql_rel, 1, RULE, "no GQLState construction sites found"))
+    for call in gql_ctors:
+        kwargs = {kw.arg for kw in call.keywords if kw.arg}
+        for f in gfields:
+            if f not in kwargs:
+                findings.append(Finding(
+                    gql_rel, call.lineno, RULE,
+                    f"GQLState(...) omits field '{f}' — the recurrence "
+                    f"update must thread every field explicitly"))
+
+    # ---- CoeffHistory: pytree registration + writer -------------------
+    cfields = tuple(f.name for f in
+                    dataclasses.fields(matfun_mod.CoeffHistory))
+    cline = _class_line(matfun_tree, "CoeffHistory")
+    reg = None
+    for node in ast.walk(matfun_tree):
+        if isinstance(node, ast.Call) \
+                and _call_name(node) == "register_dataclass":
+            reg = node
+            break
+    if reg is None:
+        findings.append(Finding(
+            matfun_rel, cline, RULE,
+            "CoeffHistory is not register_dataclass-ed (it would stop "
+            "being a pytree and fall out of freeze/shard/bank)"))
+    else:
+        declared: set = set()
+        for kw in reg.keywords:
+            if kw.arg in ("data_fields", "meta_fields") \
+                    and isinstance(kw.value, (ast.List, ast.Tuple)):
+                declared.update(e.value for e in kw.value.elts
+                                if isinstance(e, ast.Constant))
+        for f in cfields:
+            if f not in declared:
+                findings.append(Finding(
+                    matfun_rel, reg.lineno, RULE,
+                    f"CoeffHistory field '{f}' missing from its "
+                    f"register_dataclass field lists — the pytree would "
+                    f"silently drop it"))
+    coeff_excluded = _tuple_literal(matfun_mod,
+                                    "COEFF_REPLACE_EXCLUDED") or ()
+    if _tuple_literal(matfun_mod, "COEFF_REPLACE_EXCLUDED") is None:
+        findings.append(Finding(
+            matfun_rel, cline, RULE,
+            "`COEFF_REPLACE_EXCLUDED` registry missing from "
+            "core/matfun.py (fields the per-step writer deliberately "
+            "never rewrites)"))
+    upd = _find_def(matfun_tree, "update_coeffs")
+    if upd is None:
+        findings.append(Finding(
+            matfun_rel, cline, RULE,
+            "update_coeffs not found (the coefficient writer)"))
+    else:
+        written: set = set()
+        for node in ast.walk(upd):
+            if isinstance(node, ast.Call) \
+                    and _call_name(node) == "replace":
+                written.update(kw.arg for kw in node.keywords if kw.arg)
+        for f in cfields:
+            if f not in written and f not in coeff_excluded:
+                findings.append(Finding(
+                    matfun_rel, upd.lineno, RULE,
+                    f"update_coeffs neither writes CoeffHistory field "
+                    f"'{f}' nor lists it in COEFF_REPLACE_EXCLUDED"))
+    return findings

@@ -1,0 +1,440 @@
+"""Per-file AST rules: tracer leaks, jit discipline, shim imports,
+unkeyed randomness (QL002 / QL003 / QL005 / QL006).
+
+Every rule here works on one parsed file at a time and knows nothing
+about the runtime beyond naming conventions (the cross-file pytree
+contracts live in contracts.py). The rules encode bugs PRs 3-5 actually
+shipped fixes for — see DESIGN.md Sec. 10 for the catalog.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from .engine import FileContext, Finding
+
+# ---------------------------------------------------------------------------
+# shared helpers
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'jax.lax.while_loop' for an attribute chain, or None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def last_component(node: ast.AST) -> Optional[str]:
+    d = dotted(node)
+    return None if d is None else d.rsplit(".", 1)[-1]
+
+
+_JIT_DOTTED = {"jax.jit", "jit"}
+_PARTIAL_DOTTED = {"partial", "functools.partial"}
+
+
+def jit_expr_info(node: ast.AST) -> Optional[ast.Call]:
+    """If ``node`` is a jit-construction expression — ``jax.jit``,
+    ``jax.jit(...)`` or ``partial(jax.jit, ...)`` — return the Call
+    carrying static-arg keywords (or the node itself for a bare
+    ``@jax.jit``); else None."""
+    if dotted(node) in _JIT_DOTTED:
+        return node if isinstance(node, ast.Call) else ast.Call(
+            func=node, args=[], keywords=[])
+    if isinstance(node, ast.Call):
+        if dotted(node.func) in _JIT_DOTTED:
+            return node
+        if dotted(node.func) in _PARTIAL_DOTTED and node.args \
+                and dotted(node.args[0]) in _JIT_DOTTED:
+            return node
+    return None
+
+
+def _static_names(call: Optional[ast.Call]) -> set:
+    """Literal static_argnames of a jit decorator (static params are
+    python values inside the trace, exempt from tracer-leak checks)."""
+    names: set = set()
+    if call is None:
+        return names
+    for kw in call.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+        for e in elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                names.add(e.value)
+    return names
+
+
+_FunctionNode = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+# callees whose function-valued arguments run under trace
+_TRACED_CALLEES = {"while_loop", "scan", "cond", "fori_loop", "shard_map",
+                   "jit", "vmap", "pmap", "checkpoint", "remat"}
+
+# attributes whose value is static metadata even on a traced array
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "_fields"}
+_STATIC_CALLS = {"len", "isinstance", "type"}
+
+
+class _Scopes(ast.NodeVisitor):
+    """Index every function node with its parent function and the jit
+    decorator (if any), plus name -> [def] for traced-callee resolution."""
+
+    def __init__(self):
+        self.parent: dict = {}
+        self.jit_call: dict = {}
+        self.by_name: dict = {}
+        self._stack: list = []
+
+    def _enter(self, node):
+        self.parent[node] = self._stack[-1] if self._stack else None
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.by_name.setdefault(node.name, []).append(node)
+            for dec in node.decorator_list:
+                call = jit_expr_info(dec)
+                if call is not None:
+                    self.jit_call[node] = call
+        self._stack.append(node)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_FunctionDef = _enter
+    visit_AsyncFunctionDef = _enter
+    visit_Lambda = _enter
+
+
+def _params(fn) -> list:
+    a = fn.args
+    return [x.arg for x in
+            a.posonlyargs + a.args + a.kwonlyargs
+            + ([a.vararg] if a.vararg else [])
+            + ([a.kwarg] if a.kwarg else [])]
+
+
+def _traced_roots(tree: ast.Module, scopes: _Scopes) -> set:
+    roots = set(scopes.jit_call)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if last_component(node.func) not in _TRACED_CALLEES:
+            continue
+        cands = list(node.args) + [kw.value for kw in node.keywords]
+        for arg in cands:
+            if isinstance(arg, ast.Lambda):
+                roots.add(arg)
+            elif isinstance(arg, ast.Name):
+                roots.update(scopes.by_name.get(arg.id, ()))
+    return roots
+
+
+def _is_traced(fn, roots, parent) -> bool:
+    while fn is not None:
+        if fn in roots:
+            return True
+        fn = parent[fn]
+    return False
+
+
+def _refs_traced(node: ast.AST, traced: set) -> bool:
+    """Does ``node`` read a traced name as a VALUE (not just static
+    metadata like ``x.shape`` / ``len(x)``)?"""
+    if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+        return False
+    if isinstance(node, ast.Call) and \
+            last_component(node.func) in _STATIC_CALLS:
+        return any(_refs_traced(kw.value, traced) for kw in node.keywords)
+    if isinstance(node, ast.Name):
+        return node.id in traced
+    return any(_refs_traced(c, traced) for c in ast.iter_child_nodes(node))
+
+
+def _static_test(test: ast.AST, traced: set) -> bool:
+    """A branch condition that is legal under trace: no traced-value
+    reads, or pure ``is (not) None`` structure checks."""
+    if not _refs_traced(test, traced):
+        return True
+    if isinstance(test, ast.Compare) and \
+            all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return True
+    if isinstance(test, ast.BoolOp):
+        return all(_static_test(v, traced) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _static_test(test.operand, traced)
+    return False
+
+
+def _walk_pruned(nodes) -> Iterable[ast.AST]:
+    """Walk a function body WITHOUT descending into nested function
+    definitions (which get their own scan with inherited names)."""
+    stack = list(nodes)
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, _FunctionNode):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _traced_names(fn, inherited: set, statics: set) -> set:
+    """Params + names assigned from traced-name expressions (two passes
+    cover use-before-def between sibling statements)."""
+    names = (set(_params(fn)) - statics) | inherited
+    if isinstance(fn, ast.Lambda):
+        return names
+
+    def targets(t) -> Iterable[str]:
+        if isinstance(t, ast.Name):
+            yield t.id
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                yield from targets(e)
+        elif isinstance(t, ast.Starred):
+            yield from targets(t.value)
+
+    for _ in range(2):
+        for node in _walk_pruned(fn.body):
+            value, tgts = None, []
+            if isinstance(node, ast.Assign):
+                value, tgts = node.value, node.targets
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                value, tgts = node.value, [node.target]
+            elif isinstance(node, ast.AugAssign):
+                value, tgts = node.value, [node.target]
+            if value is not None and _refs_traced(value, names):
+                for t in tgts:
+                    names.update(targets(t))
+    return names
+
+
+def check_tracer_leaks(ctx: FileContext) -> Iterable[Finding]:
+    """QL002: python control flow / concretization on traced arrays.
+
+    Inside a jit-decorated function or a function passed to
+    lax.while_loop/scan/cond/fori_loop/shard_map/vmap, an ``if``/
+    ``while`` on a traced value, or ``bool()/float()/int()/.item()`` of
+    one, raises ``TracerBoolConversionError`` at trace time — or worse,
+    silently bakes in the first trace's value via weak typing. PR 4's
+    review fixed exactly this class in the scheduler loop."""
+    scopes = _Scopes()
+    scopes.visit(ctx.tree)
+    roots = _traced_roots(ctx.tree, scopes)
+    findings: list = []
+
+    def scan_fn(fn, inherited: set):
+        statics = _static_names(scopes.jit_call.get(fn))
+        traced = _traced_names(fn, inherited, statics)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for node in _walk_pruned(body):
+            if isinstance(node, _FunctionNode):
+                # nested defs get their own scan, inheriting the
+                # enclosing traced names through the closure
+                scan_fn(node, traced)
+                continue
+            if isinstance(node, (ast.If, ast.While)) and \
+                    not _static_test(node.test, traced):
+                findings.append(Finding(
+                    ctx.rel, node.lineno, "QL002",
+                    f"python `{type(node).__name__.lower()}` on a "
+                    f"traced value inside a traced scope (use lax.cond"
+                    f"/jnp.where/while_loop)"))
+            if isinstance(node, ast.Call):
+                callee = dotted(node.func)
+                if callee in ("bool", "float", "int") and node.args \
+                        and _refs_traced(node.args[0], traced):
+                    findings.append(Finding(
+                        ctx.rel, node.lineno, "QL002",
+                        f"`{callee}()` concretizes a traced value "
+                        f"inside a traced scope"))
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" \
+                        and _refs_traced(node.func.value, traced):
+                    findings.append(Finding(
+                        ctx.rel, node.lineno, "QL002",
+                        "`.item()` concretizes a traced value inside "
+                        "a traced scope"))
+
+    for fn in scopes.parent:
+        if fn in roots and not _is_traced(scopes.parent[fn], roots,
+                                          scopes.parent):
+            # only scan outermost traced functions; nested defs are
+            # visited recursively with inherited traced names
+            scan_fn(fn, set())
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# QL003: jit discipline
+
+
+def _has_trace_counter(fn) -> bool:
+    """A ``_*_TRACES[0] += 1`` bump anywhere in the function body (the
+    flush_trace_count convention of serve/engine.py)."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.AugAssign) and \
+                isinstance(node.op, ast.Add) and \
+                isinstance(node.target, ast.Subscript) and \
+                isinstance(node.target.value, ast.Name) and \
+                node.target.value.id.endswith("TRACES"):
+            return True
+    return False
+
+
+def check_jit_discipline(ctx: FileContext) -> Iterable[Finding]:
+    """QL003 (library code only).
+
+    (a) Module-level jits in serve/ need a paired trace counter: the
+    engine's shared drivers are cache-keyed on (config, treedef,
+    shapes), and the ONLY way tests pin "this path reuses a compile" is
+    the flush_trace_count convention. A counter-less jit silently loses
+    that contract (the PR 4 kv_select padding-bucket regression).
+
+    (b) ``jax.jit`` constructed inside a function body builds a fresh
+    cache per call — the per-call retrace trap serve/kv_select.py
+    documents. Hoist to module level, or suppress with a reason for
+    genuine one-shot factories (launch/dryrun.py)."""
+    if not ctx.in_src:
+        return []
+    findings: list = []
+
+    if ctx.in_serve:
+        for node in ctx.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                jitted = any(jit_expr_info(d) is not None
+                             for d in node.decorator_list)
+                if jitted and not _has_trace_counter(node):
+                    findings.append(Finding(
+                        ctx.rel, node.lineno, "QL003",
+                        f"module-level jit `{node.name}` has no paired "
+                        f"trace counter (bump a `*_TRACES[0] += 1` like "
+                        f"flush_trace_count)"))
+
+    stack: list = []
+
+    def visit(node):
+        if isinstance(node, _FunctionNode):
+            if not isinstance(node, ast.Lambda):
+                for dec in node.decorator_list:
+                    visit(dec)  # decorators evaluate in the OUTER scope
+            stack.append(node)
+            children = node.body if isinstance(node.body, list) \
+                else [node.body]
+            for child in children:
+                visit(child)
+            if not isinstance(node, ast.Lambda):
+                for default in node.args.defaults + \
+                        [d for d in node.args.kw_defaults if d]:
+                    visit(default)
+            stack.pop()
+            return
+        if isinstance(node, ast.Call) and stack \
+                and dotted(node.func) in _JIT_DOTTED:
+            findings.append(Finding(
+                ctx.rel, node.lineno, "QL003",
+                "jax.jit constructed inside a function body (fresh "
+                "compile cache per call); hoist to module level"))
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(ctx.tree)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# QL005: the PR-2 shim names, removed in PR 6, stay removed
+
+_BANNED_FUNCTIONS = {"bif_bounds", "bif_refine_until", "judge_threshold",
+                     "judge_kdpp_swap", "judge_double_greedy",
+                     "preconditioned_bif_bounds"}
+_BANNED_MODULES = {"deprecation", "judge", "precond"}
+
+
+def check_shim_imports(ctx: FileContext) -> Iterable[Finding]:
+    """QL005 (library code only): no imports of the deleted PR-2
+    deprecation shims (DESIGN.md Sec. 5 removal schedule) — callers use
+    ``BIFSolver.create(...)`` methods."""
+    if not ctx.in_src:
+        return []
+    findings: list = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            from_repro = node.level > 0 or mod.startswith("repro")
+            if from_repro and mod.rsplit(".", 1)[-1] in _BANNED_MODULES:
+                findings.append(Finding(
+                    ctx.rel, node.lineno, "QL005",
+                    f"import from removed shim module '{mod}' (deleted "
+                    f"per DESIGN.md Sec. 5; use BIFSolver)"))
+                continue
+            for alias in node.names:
+                if from_repro and alias.name in _BANNED_FUNCTIONS:
+                    findings.append(Finding(
+                        ctx.rel, node.lineno, "QL005",
+                        f"import of removed shim `{alias.name}` (use the "
+                        f"BIFSolver.create(...) equivalent)"))
+                elif from_repro and alias.name in _BANNED_MODULES:
+                    findings.append(Finding(
+                        ctx.rel, node.lineno, "QL005",
+                        f"import of removed shim module "
+                        f"`{alias.name}` (deleted per DESIGN.md Sec. 5)"))
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.startswith("repro") and \
+                        alias.name.rsplit(".", 1)[-1] in _BANNED_MODULES:
+                    findings.append(Finding(
+                        ctx.rel, node.lineno, "QL005",
+                        f"import of removed shim module '{alias.name}'"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# QL006: unkeyed randomness
+
+_ALLOWED_NP_RANDOM = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                      "Philox", "SFC64", "BitGenerator"}
+
+
+def check_randomness(ctx: FileContext) -> Iterable[Finding]:
+    """QL006 (library + benchmark code; tests may do as they like):
+    randomness must flow from an explicit seed — legacy global-state
+    ``np.random.*``, argless ``default_rng()``, and the stdlib ``random``
+    module all draw OS entropy, which breaks the repo's reproducibility
+    contract (every stream/benchmark is seed-addressable)."""
+    if ctx.in_tests:
+        return []
+    findings: list = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if d is None:
+                continue
+            parts = d.split(".")
+            if len(parts) >= 3 and parts[-2] == "random" \
+                    and parts[-3] in ("np", "numpy") \
+                    and parts[-1] not in _ALLOWED_NP_RANDOM:
+                findings.append(Finding(
+                    ctx.rel, node.lineno, "QL006",
+                    f"legacy global-state `{d}(...)` (use a seeded "
+                    f"np.random.default_rng)"))
+            elif parts[-1] == "default_rng" and not node.args \
+                    and not node.keywords:
+                findings.append(Finding(
+                    ctx.rel, node.lineno, "QL006",
+                    "argless default_rng() draws an OS seed; pass an "
+                    "explicit seed"))
+        elif isinstance(node, ast.Import):
+            if any(alias.name == "random" for alias in node.names):
+                findings.append(Finding(
+                    ctx.rel, node.lineno, "QL006",
+                    "stdlib `random` is process-global and unseeded here; "
+                    "use np.random.default_rng(seed) or jax.random"))
+        elif isinstance(node, ast.ImportFrom) and node.module == "random" \
+                and node.level == 0:
+            findings.append(Finding(
+                ctx.rel, node.lineno, "QL006",
+                "stdlib `random` is process-global and unseeded here; "
+                "use np.random.default_rng(seed) or jax.random"))
+    return findings

@@ -71,15 +71,16 @@ Public API:
   double_greedy.double_greedy
   spectrum.{lanczos_extremal, gershgorin_bounds, ridge_bounds}
   loop_utils.tree_freeze                           -- lane freezing (once)
+  bounds.{bif_bounds_trace, BIFTrace, BIFBounds}   -- Fig. 1 sequences
 
-Deprecated shims (thin wrappers over ``BIFSolver``, kept for stability):
-
-  bounds.{bif_bounds, bif_bounds_trace, bif_refine_until}
-  judge.{judge_threshold, judge_kdpp_swap, judge_double_greedy}
-  precond.preconditioned_bif_bounds
+The PR-2 deprecation shims (``bif_bounds``, ``bif_refine_until``,
+``judge_threshold``, ``judge_kdpp_swap``, ``judge_double_greedy``,
+``preconditioned_bif_bounds``) were removed on DESIGN.md Sec. 5's
+schedule — use the ``BIFSolver.create(...)`` equivalents; quadlint
+QL005 (``python -m repro.analysis``) keeps them from coming back.
 """
-from . import bounds, deprecation, double_greedy, dpp, gql, judge, lanczos, \
-    loop_utils, matfun, operators, precond, sharded, solver, spectrum, \
+from . import bounds, double_greedy, dpp, gql, lanczos, \
+    loop_utils, matfun, operators, sharded, solver, spectrum, \
     trace  # noqa: F401
 
 from .solver import ArgmaxResult, BIFSolver, JudgeResult, PairState, \
@@ -97,10 +98,4 @@ from .dpp import ChainState, GreedyMapResult, LogLikelihoodResult, \
 from .double_greedy import DGResult, double_greedy as run_double_greedy  # noqa: F401
 from .spectrum import SpectrumBounds, gershgorin_bounds, lanczos_extremal, \
     ridge_bounds  # noqa: F401
-
-# Deprecated entry points (shims over BIFSolver; see their docstrings).
-from .bounds import BIFBounds, BIFTrace, bif_bounds, bif_bounds_trace, \
-    bif_refine_until  # noqa: F401
-from .judge import judge_double_greedy, judge_kdpp_swap, \
-    judge_threshold  # noqa: F401
-from .precond import preconditioned_bif_bounds  # noqa: F401
+from .bounds import BIFBounds, BIFTrace, bif_bounds_trace  # noqa: F401

@@ -1,21 +1,22 @@
-"""Legacy BIF bound entry points — thin shims over ``solver.BIFSolver``.
+"""Fig.-1 trace entry point and the legacy result container.
 
-``bif_bounds_trace`` reproduces paper Fig. 1 (all four estimate sequences);
-``bif_bounds`` adaptively brackets ``u^T A^-1 u``; ``bif_refine_until`` is
-the generic retrospective loop (Alg. 2).  All three are deprecated aliases
-kept for API stability: new code should configure a
-:class:`repro.core.solver.BIFSolver` and call ``solve``/``trace`` directly
-(which also unlocks spectrum estimation, Jacobi preconditioning, and the
-fused Pallas backend through one interface).
+``bif_bounds_trace`` reproduces paper Fig. 1 (all four estimate
+sequences) as sugar over ``BIFSolver.trace``; :class:`BIFBounds` is the
+lean (lower, upper, iterations, converged) result tuple a few consumers
+(train/monitor.py) prefer over the full :class:`SolveResult`.
+
+The PR-2 deprecation shims that used to live here (``bif_bounds``,
+``bif_refine_until``) were removed on DESIGN.md Sec. 5's schedule:
+configure a :class:`repro.core.solver.BIFSolver` and call
+``solve``/``trace`` directly (quadlint QL005 keeps the shims out).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 
 from . import solver as _solver
-from .deprecation import warn_once as _warn_once
 
 Array = jax.Array
 
@@ -32,43 +33,7 @@ class BIFBounds(NamedTuple):
 
 def bif_bounds_trace(op, u: Array, lam_min, lam_max, num_iters: int,
                      reorth: bool = False) -> BIFTrace:
-    """Run exactly ``num_iters`` GQL iterations, returning every estimate.
-
-    .. deprecated:: use ``BIFSolver(SolverConfig(reorth=...)).trace(...)``.
-    """
+    """Run exactly ``num_iters`` GQL iterations, returning every
+    estimate sequence (sugar over ``BIFSolver.trace``)."""
     return _solver.BIFSolver.create(reorth=reorth).trace(
         op, u, num_iters, lam_min=lam_min, lam_max=lam_max)
-
-
-def bif_bounds(op, u: Array, lam_min, lam_max, *, max_iters: int,
-               rtol: float = 1e-2, atol: float = 0.0) -> BIFBounds:
-    """Adaptive bracket on u^T A^-1 u, batched with lockstep early exit.
-
-    .. deprecated:: use ``BIFSolver(SolverConfig(...)).solve(op, u, ...)``,
-       whose ``SolveResult`` also carries the Gauss/Lobatto estimates,
-       certification, and the final quadrature state.
-    """
-    _warn_once("bounds.bif_bounds", "BIFSolver.solve")
-    res = _solver.BIFSolver.create(
-        max_iters=max_iters, rtol=rtol, atol=atol).solve(
-            op, u, lam_min=lam_min, lam_max=lam_max)
-    return BIFBounds(lower=res.lower, upper=res.upper,
-                     iterations=res.iterations, converged=res.converged)
-
-
-def bif_refine_until(op, u: Array, lam_min, lam_max, *, max_iters: int,
-                     decided_fn: Callable[[Array, Array], Array]):
-    """Generic retrospective loop (Alg. 2): iterate GQL until
-    ``decided_fn(lower, upper)`` is True on every lane (or exhaustion).
-
-    Returns the final GQLState; the caller extracts its decision from the
-    final bracket, which is guaranteed to contain the true BIF, so the
-    decision matches the exact-value decision whenever decided_fn resolved.
-
-    .. deprecated:: use ``BIFSolver(...).solve(op, u, decide=decided_fn,
-       ...)`` and read ``SolveResult.state`` (a resumable ``QuadState``
-       whose ``.st`` is this GQLState).
-    """
-    _warn_once("bounds.bif_refine_until", "BIFSolver.solve(decide=...)")
-    return _solver.BIFSolver.create(max_iters=max_iters).solve(
-        op, u, decide=decided_fn, lam_min=lam_min, lam_max=lam_max).state.st

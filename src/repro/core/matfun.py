@@ -151,6 +151,12 @@ class CoeffHistory:
 jax.tree_util.register_dataclass(
     CoeffHistory, data_fields=["alphas", "betas", "fnidx"], meta_fields=[])
 
+# CoeffHistory threading contract (quadlint QL001): fields the per-step
+# writer deliberately never rewrites. `fnidx` names each lane's spectral
+# function — set at init/admission, constant across steps; update_coeffs
+# only records the new (alpha, beta) row.
+COEFF_REPLACE_EXCLUDED = ("fnidx",)
+
 
 def init_coeffs(st0, fn: str | Array, rows: int) -> CoeffHistory:
     """Coefficient storage for a fresh drive: capacity ``rows``

@@ -62,6 +62,12 @@ Array = jax.Array
 # always True and the needs_more rule reduces to the unbudgeted one.
 _NO_CAP = jnp.iinfo(jnp.int32).max
 
+# QuadState threading contract (quadlint QL001): per-lane fields the
+# sharded driver does NOT thread. `basis` (reorthogonalization storage)
+# is rejected up front by _check_state — reorth is unsupported sharded —
+# so _drive_sharded legitimately never carries or freezes it.
+SHARDED_STATE_EXCLUDED = ("basis",)
+
 
 def _pad_lane_arg(a, k: int, kp: int):
     """Zero-pad the leading lane dim of a (K, ...) decide argument to Kp;

@@ -35,9 +35,9 @@ Config axes:
 static pytrees, so they cross ``jit`` / ``vmap`` / ``scan`` boundaries and
 can be closure-captured or passed as arguments freely.
 
-The legacy entry points (``bounds.bif_bounds``, ``bounds.bif_refine_until``,
-``judge.judge_threshold``, ``judge.judge_kdpp_swap``,
-``judge.judge_double_greedy``) are thin shims over this driver.
+The PR-2 legacy entry points (``bounds.bif_bounds``, ``judge.*``,
+``precond.preconditioned_bif_bounds``) that used to shim this driver
+were removed per DESIGN.md Sec. 5; quadlint QL005 keeps them out.
 """
 from __future__ import annotations
 
@@ -198,6 +198,24 @@ class QuadState(NamedTuple):
     @property
     def done(self) -> Array:
         return self.st.done
+
+
+# The QuadState threading contract (DESIGN.md Sec. 10, enforced by
+# quadlint QL001): every field lives in exactly ONE bucket, and the
+# handler layers are checked against the buckets —
+#   per-lane : advanced by the loop and frozen per lane as lanes resolve
+#              (step_n/resume tree_freeze carries), sharded with the
+#              lanes by core/sharded.py, banked/scattered per lane by
+#              serve/engine.py's pool;
+#   carried  : whole-state bookkeeping threaded through every drive's
+#              _replace (no per-lane freeze semantics);
+#   prepared : resolved once by init_state and read-only afterwards.
+# A new QuadState field (block-Krylov buffers, rank-update caches, ...)
+# that is not added to a bucket AND to every non-excluded handler is a
+# CI failure, not a review catch.
+QUADSTATE_PER_LANE = ("st", "basis", "coeffs")
+QUADSTATE_CARRIED = ("step",)
+QUADSTATE_PREPARED = ("op", "lam_min", "lam_max")
 
 
 def _argmax_scores(lo: Array, hi: Array, shift, scale, valid,

@@ -74,6 +74,7 @@ def main():
 
     fn = steps_mod.build_train_step(cfg, mesh, plan, opt,
                                     microbatches=args.microbatches)
+    # quadlint: disable=QL003 -- jitted once per process in the launcher
     step_fn = jax.jit(fn, donate_argnums=(0, 1))
 
     def stepper(params, opt_state, batch):

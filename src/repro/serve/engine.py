@@ -47,6 +47,32 @@ class Request:
     out_tokens: Optional[np.ndarray] = None
 
 
+# Trace-time counter for the shared generation drivers (prefill +
+# decode), same convention as _FLUSH_TRACES below: increments once per
+# fresh compile. The jit cache keys on (cfg, shapes), so two Engines
+# around the same reduced arch reuse one compile — instance-level jits
+# here used to rebuild the cache per Engine.
+_GEN_TRACES = [0]
+
+
+def generate_trace_count() -> int:
+    """How many times the shared prefill/decode drivers have been traced
+    (== compiled) in this process."""
+    return _GEN_TRACES[0]
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _prefill_run(cfg, params, batch, caches):
+    _GEN_TRACES[0] += 1
+    return M.prefill(cfg, params, batch, caches)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _decode_run(cfg, params, caches, batch):
+    _GEN_TRACES[0] += 1
+    return M.decode_step(cfg, params, caches, batch)
+
+
 class Engine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  max_seq: int = 256, kv_dtype=jnp.float32,
@@ -58,10 +84,12 @@ class Engine:
         self.kv_dtype = kv_dtype
         self.quantized_kv = quantized_kv
         self.key = jax.random.key(seed)
-        self._prefill = jax.jit(
-            lambda p, b, c: M.prefill(cfg, p, b, c))
-        self._decode = jax.jit(
-            lambda p, c, b: M.decode_step(cfg, p, c, b))
+
+    def _prefill(self, params, batch, caches):
+        return _prefill_run(self.cfg, params, batch, caches)
+
+    def _decode(self, params, caches, batch):
+        return _decode_run(self.cfg, params, caches, batch)
 
     def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
         if temperature <= 0.0:
@@ -145,6 +173,13 @@ class BIFRequest:
 # bucketed-padding contract of serve.kv_select.rank_blocks with it.
 _FLUSH_TRACES = [0]
 
+# QuadState threading contract (quadlint QL001): per-lane fields the
+# continuous-batching pool does NOT merge/bank. `basis` (reorth storage)
+# never reaches the scheduler — _flush_continuous falls back to the
+# lockstep path for reorth configs — so admission and banking
+# legitimately skip it (banked states carry basis=None).
+ENGINE_ADMIT_EXCLUDED = ("basis",)
+
 
 def flush_trace_count() -> int:
     """How many times the shared BIFEngine flush drivers have been traced
@@ -190,6 +225,7 @@ def _pool_scatter_run(st, lane_st, idx):
     """Insert one banked lane state (GQLState, and the lane's coeff
     history on matfun pools) at pool slot ``idx`` (warm admission of a
     resubmitted partial request)."""
+    _FLUSH_TRACES[0] += 1
     return jax.tree.map(lambda pool, lane: pool.at[idx].set(lane),
                         st, lane_st)
 

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import Dense, bif_bounds, bif_bounds_trace
+from repro.core import BIFSolver, Dense, bif_bounds_trace
 from conftest import make_spd
 
 ATOL = 1e-7
@@ -148,8 +148,8 @@ def test_adaptive_bounds_batched():
     u = rng.standard_normal((8, n))
     true = np.einsum("bi,bi->b", u, np.linalg.solve(a, u.T).T)
     op = Dense(jnp.broadcast_to(jnp.asarray(a), (8, n, n)))
-    res = bif_bounds(op, jnp.asarray(u), w[0] * 0.99, w[-1] * 1.01,
-                     max_iters=n + 2, rtol=1e-3)
+    res = BIFSolver.create(max_iters=n + 2, rtol=1e-3).solve(
+        op, jnp.asarray(u), lam_min=w[0] * 0.99, lam_max=w[-1] * 1.01)
     lo, hi = np.asarray(res.lower), np.asarray(res.upper)
     assert (lo <= true + 1e-7).all() and (hi >= true - 1e-7).all()
     assert ((hi - lo) <= 1e-3 * np.abs(lo) + 1e-9).all()

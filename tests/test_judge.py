@@ -1,18 +1,34 @@
 """The retrospective judges must reproduce exact-arithmetic decisions
 (the paper's correctness claim for Alg. 2/4/7/9) while spending far
 fewer iterations than full tridiagonalization."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, strategies as st
 
-from repro.core import Dense, Masked, judge_double_greedy, \
-    judge_kdpp_swap, judge_threshold
+from repro.core import BIFSolver, Dense, Masked
 from conftest import make_spd
 
 
 def _exact_bif(a, u):
     return u @ np.linalg.solve(a, u)
+
+
+# Thin local wrappers keeping the original positional signatures; the
+# module-level shims they mirror were removed per DESIGN.md Sec. 5.
+def judge_threshold(op, u, t, lam_min, lam_max, *, max_iters):
+    return BIFSolver.create(max_iters=max_iters).judge_threshold(
+        op, u, t, lam_min=lam_min, lam_max=lam_max)
+
+
+def judge_kdpp_swap(op_a, u, op_b, v, t, p, lam_min, lam_max, *, max_iters):
+    return BIFSolver.create(max_iters=max_iters).judge_kdpp_swap(
+        op_a, u, op_b, v, t, p, lam_min=lam_min, lam_max=lam_max)
+
+
+def judge_double_greedy(op_x, u, op_y, v, t, p, lam_min, lam_max, *,
+                        max_iters):
+    return BIFSolver.create(max_iters=max_iters).judge_double_greedy(
+        op_x, u, op_y, v, t, p, lam_min=lam_min, lam_max=lam_max)
 
 
 @given(seed=st.integers(0, 200))

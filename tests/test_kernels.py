@@ -129,8 +129,9 @@ def test_fused_matvec_inside_lanczos():
     op = operators.MatvecFn(
         fn=lambda x: ops.fused_matvec(ab, x, interpret=True)[0],
         n_static=n, diag_vals=jnp.asarray(np.diag(a))[None])
-    from repro.core import bif_bounds
-    res = bif_bounds(op, jnp.asarray(u), float(w[0] * 0.9),
-                     float(w[-1] * 1.1), max_iters=60, rtol=1e-3)
+    from repro.core import BIFSolver
+    res = BIFSolver.create(max_iters=60, rtol=1e-3).solve(
+        op, jnp.asarray(u), lam_min=float(w[0] * 0.9),
+        lam_max=float(w[-1] * 1.1))
     assert float(res.lower[0]) <= true * 1.001
     assert float(res.upper[0]) >= true * 0.999

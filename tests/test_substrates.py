@@ -7,8 +7,7 @@ import pytest
 from hypothesis import given, strategies as st
 
 from repro.configs import get_arch, list_archs
-from repro.core import Dense, bif_bounds, lanczos_extremal
-from repro.core.precond import preconditioned_bif_bounds
+from repro.core import BIFSolver, Dense, lanczos_extremal
 from repro.data import (DataConfig, DPPBatchStream, DPPSelector,
                         TokenStream, density, graph_laplacian, rbf_kernel)
 from repro.models import model as M
@@ -164,11 +163,12 @@ def test_preconditioning_reduces_iterations():
     w = np.linalg.eigvalsh(a)
     u = rng.standard_normal(n)
     true = u @ np.linalg.solve(a, u)
-    plain = bif_bounds(Dense(jnp.asarray(a)), jnp.asarray(u),
-                       float(w[0] * 0.99), float(w[-1] * 1.01),
-                       max_iters=n, rtol=1e-4)
-    pre = preconditioned_bif_bounds(Dense(jnp.asarray(a)), jnp.asarray(u),
-                                    max_iters=n, rtol=1e-4)
+    plain = BIFSolver.create(max_iters=n, rtol=1e-4).solve(
+        Dense(jnp.asarray(a)), jnp.asarray(u),
+        lam_min=float(w[0] * 0.99), lam_max=float(w[-1] * 1.01))
+    pre = BIFSolver.create(max_iters=n, rtol=1e-4, precondition="jacobi",
+                           spectrum="lanczos").solve(
+        Dense(jnp.asarray(a)), jnp.asarray(u))
     assert int(pre.iterations) < int(plain.iterations)
     assert float(pre.lower) <= true * 1.001
     assert float(pre.upper) >= true * 0.999
