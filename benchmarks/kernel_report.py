@@ -67,6 +67,32 @@ def run(quick: bool = True):
     rows.append(row("pallas_gql_update_B256", 0.0,
                     f"valid={ok};fuses 8 elementwise lane-ops -> 1 VPU pass"))
 
+    # the fused per-iteration megakernel vs the reference composition
+    # (matvec + Lanczos update + recurrence as separate XLA ops): one
+    # pallas_call per GQL iteration (DESIGN.md Sec. 11)
+    import jax as _jax
+    st2 = gql.gql_step(wop, stt, lmn, lmx)  # one real step in
+    fused_fn = _jax.jit(lambda s: ops.gql_step_fused(wop, s, lmn, lmx,
+                                                     interpret=True))
+    ref_fn = _jax.jit(lambda s: gql.gql_step(wop, s, lmn, lmx))
+    got, want = fused_fn(st2), ref_fn(st2)
+    ok = all(np.allclose(np.asarray(g), np.asarray(w), rtol=1e-5,
+                         atol=1e-6)
+             for g, w in zip(_jax.tree.leaves(got), _jax.tree.leaves(want))
+             if np.asarray(w).dtype.kind == "f")
+    t_fused = time_fn(fused_fn, st2)
+    t_ref = time_fn(ref_fn, st2)
+    # per iteration the fused step reads A once and keeps v/r/recurrence
+    # scalars in VMEM; the composition pays A once plus ~6 extra HBM
+    # round-trips over the (B, N) vectors for alpha/r/beta/recurrence
+    fl = 2 * bb * 96 * 96 + 10 * bb * 96
+    extra_hbm = 6 * 4 * bb * 96
+    rows.append(row("pallas_fused_step_B256_N96", t_fused * 1e6,
+                    f"valid={ok};ref_us={t_ref * 1e6:.2f};"
+                    f"flops={fl};vector_hbm_saved={extra_hbm};"
+                    "whole GQL iteration in one pallas_call "
+                    "(interpret-mode walls, not TPU perf)"))
+
     q = jnp.asarray(rng.standard_normal((4, 256, 64)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((4, 256, 64)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((4, 256, 64)), jnp.float32)

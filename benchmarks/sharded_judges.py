@@ -1,15 +1,34 @@
-"""1-device vs 8-virtual-device scaling of the sharded batched judges
-(DESIGN.md Sec. 7).
+"""1-device vs 8-virtual-device scaling of the sharded batched judges,
+swept over the decision-round cadence (DESIGN.md Sec. 7 and 11).
 
 Times ``judge_batch`` on one device against ``judge_batch_sharded`` on
-an 8-virtual-CPU-device lane mesh for N in {256, 1024} x K in {8, 64}.
-On virtual devices (one physical CPU carved up by
-``--xla_force_host_platform_device_count``) NO speedup is expected —
-the lanes time-share the same cores and pay the all-gather/psum of the
-lockstep continue flag on top; the table is the artifact: it records
-the collective overhead that real multi-chip lanes must amortize, and
-it regresses loudly if the sharded driver's step count or overhead
-blows up.
+an 8-virtual-CPU-device lane mesh for N in {256, 1024} x K in {8, 64},
+at ``decide_every`` R in {1, 4, 8}.
+
+Virtual devices time-share the host's cores (the CI rig has ONE), so
+the raw sharded/1-device ratio conflates two different taxes:
+
+  * the *compute floor* — eight serialized lane programs are slower
+    than one batched gemm on the same silicon no matter what the
+    collectives cost. The benchmark MEASURES this floor instead of
+    guessing: a third mode runs the identical lane-sharded drive with
+    ZERO collectives (``shard_map`` of the single-device ``judge_batch``
+    over the lane shards — valid because the threshold decide is
+    per-lane, and asserted to reach identical decisions);
+  * the *collective tax* — what the lockstep gather rounds add on top
+    of that floor. This is the quantity the round cadence and the
+    packed flag-folding gather actually optimize, and it is the
+    headline ``vdev_overhead`` (labelled via ``vdev_overhead_baseline``;
+    the raw cross-topology ratio stays in the table as
+    ``vdev_overhead_vs_1dev`` next to the measured
+    ``floor_overhead_vs_1dev`` rig physics).
+
+Each sharded timing also pins the COMPILED collective census: the
+worker lowers the jitted drive and counts collective instructions in
+the HLO (``repro.utils.hlo.collective_counts``). A ``lax.while`` body
+appears once in HLO, so the count reads as collectives-per-round plus
+the loop-boundary gather — and it must show zero psum at every cadence.
+Decisions are asserted identical across all three modes AND cadences.
 
 Because the device count must be fixed BEFORE jax initializes, each
 timing runs in a subprocess of this file (``--worker``) with its own
@@ -25,9 +44,10 @@ import sys
 from pathlib import Path
 
 SIZES = [(256, 8), (256, 64), (1024, 8), (1024, 64)]
+CADENCES = [1, 4, 8]
 
 
-def _worker_main(mode: str, sizes) -> None:
+def _worker_main(mode: str, sizes, cadences) -> None:
     """Runs inside a subprocess whose XLA_FLAGS are already set."""
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
     import jax
@@ -39,6 +59,7 @@ def _worker_main(mode: str, sizes) -> None:
     import numpy as np
 
     from repro.core import BIFSolver, Dense, gershgorin_bounds
+    from repro.utils.hlo import collective_counts
 
     def problem(n, k, seed=0, bandwidth=128):
         # block-banded diagonally dominant SPD: the certified Gershgorin
@@ -54,7 +75,7 @@ def _worker_main(mode: str, sizes) -> None:
         ts = true * np.where(rng.random(k) < 0.5, 0.97, 1.03)
         return a, jnp.asarray(us), jnp.asarray(ts)
 
-    def time_fn(fn, repeats=3, warmup=1):
+    def time_fn(fn, repeats=5, warmup=2):
         import time
         for _ in range(warmup):
             jax.block_until_ready(fn())
@@ -66,8 +87,10 @@ def _worker_main(mode: str, sizes) -> None:
         times.sort()
         return times[len(times) // 2]
 
-    solver = BIFSolver.create(max_iters=64, rtol=1e-3)
-    if mode == "sharded":
+    if mode in ("sharded", "floor"):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
         from repro.launch.mesh import make_lane_mesh
         mesh = make_lane_mesh()
 
@@ -77,29 +100,59 @@ def _worker_main(mode: str, sizes) -> None:
         op = Dense(jnp.asarray(a))
         est = gershgorin_bounds(op)
         lmn, lmx = float(est.lam_min), float(est.lam_max)
-        if mode == "sharded":
-            fn = jax.jit(lambda us_, ts_, op=op: solver.judge_batch_sharded(
-                op, us_, ts_, mesh=mesh, lam_min=lmn, lam_max=lmx))
-        else:
-            fn = jax.jit(lambda us_, ts_, op=op: solver.judge_batch(
-                op, us_, ts_, lam_min=lmn, lam_max=lmx))
-        res = jax.block_until_ready(fn(us, ts))
-        out["results"][f"dense_n{n}_k{k}"] = {
-            "wall_s": round(time_fn(lambda: fn(us, ts)), 5),
-            "iters_max": int(np.asarray(res.iterations).max()),
-            "decisions_true": int(np.asarray(res.decision).sum()),
-        }
+        per_r = {}
+        for r in cadences:
+            solver = BIFSolver.create(max_iters=64, rtol=1e-3,
+                                      decide_every=r)
+            if mode == "sharded":
+                fn = jax.jit(
+                    lambda us_, ts_, op=op, solver=solver:
+                    solver.judge_batch_sharded(op, us_, ts_, mesh=mesh,
+                                               lam_min=lmn, lam_max=lmx))
+            elif mode == "floor":
+                # the collective-free control: the SAME lane shards run
+                # the single-device drive independently (no gathers, no
+                # lockstep). Valid because the threshold decide is
+                # per-lane; decisions are asserted identical outside.
+                fn = jax.jit(shard_map(
+                    lambda us_, ts_, op=op, solver=solver:
+                    solver.judge_batch(op, us_, ts_, lam_min=lmn,
+                                       lam_max=lmx),
+                    mesh=mesh, in_specs=(P("lanes"), P("lanes")),
+                    out_specs=P("lanes"), check_rep=False))
+            else:
+                fn = jax.jit(
+                    lambda us_, ts_, op=op, solver=solver:
+                    solver.judge_batch(op, us_, ts_, lam_min=lmn,
+                                       lam_max=lmx))
+            res = jax.block_until_ready(fn(us, ts))
+            entry = {
+                "wall_s": round(time_fn(lambda: fn(us, ts)), 5),
+                "iters_max": int(np.asarray(res.iterations).max()),
+                "decisions_true": int(np.asarray(res.decision).sum()),
+            }
+            if mode == "sharded":
+                # the compiled collective census: the while body appears
+                # once in HLO, so this pins collectives-per-round (+ the
+                # boundary gather) — and must show ZERO all-reduce/psum
+                hlo = fn.lower(us, ts).compile().as_text()
+                counts = collective_counts(hlo)
+                entry["hlo_collectives"] = {
+                    kk: vv for kk, vv in counts.items() if kk != "count"}
+                entry["hlo_collective_count"] = counts["count"]
+            per_r[f"R{r}"] = entry
+        out["results"][f"dense_n{n}_k{k}"] = per_r
     print("JSON:" + json.dumps(out))
 
 
-def _spawn(mode: str, devices: int, sizes):
+def _spawn(mode: str, devices: int, sizes, cadences):
     env = dict(os.environ)
     env["XLA_FLAGS"] = \
         f"--xla_force_host_platform_device_count={devices}"
     proc = subprocess.run(
         [sys.executable, str(Path(__file__).resolve()), "--worker", mode,
-         json.dumps(sizes)],
-        capture_output=True, text=True, timeout=1200, env=env)
+         json.dumps(sizes), json.dumps(cadences)],
+        capture_output=True, text=True, timeout=2400, env=env)
     for line in proc.stdout.splitlines():
         if line.startswith("JSON:"):
             return json.loads(line[5:])
@@ -109,36 +162,77 @@ def _spawn(mode: str, devices: int, sizes):
 
 
 def run(quick: bool = True):
-    # the acceptance grid N in {256,1024} x K in {8,64} runs in BOTH
-    # modes; --full adds nothing (the grid IS the artifact)
+    # the acceptance grid N in {256,1024} x K in {8,64} runs in all
+    # modes at every cadence; --full adds nothing (the grid IS the
+    # artifact)
     sizes = SIZES
-    single = _spawn("single", 1, sizes)
-    sharded = _spawn("sharded", 8, sizes)
+    single = _spawn("single", 1, sizes, [1])
+    floor = _spawn("floor", 8, sizes, CADENCES)
+    sharded = _spawn("sharded", 8, sizes, CADENCES)
     rows, tables = [], {}
     for key in single["results"]:
-        s1, s8 = single["results"][key], sharded["results"][key]
-        assert s1["decisions_true"] == s8["decisions_true"], \
-            f"sharded decisions diverged on {key}"
-        entry = {
-            "wall_s_1dev": s1["wall_s"],
-            "wall_s_8vdev": s8["wall_s"],
-            # >1 means the virtual-device collectives cost that much on
-            # one physical CPU; real multi-chip lanes buy this back
-            "vdev_overhead": round(s8["wall_s"] / max(s1["wall_s"], 1e-9),
-                                   2),
-            "iters_max_1dev": s1["iters_max"],
-            "iters_max_8vdev": s8["iters_max"],
-        }
+        s1 = single["results"][key]["R1"]
+        entry = {"wall_s_1dev": s1["wall_s"],
+                 "iters_max_1dev": s1["iters_max"],
+                 "cadence": {}}
+        best = best_vs1 = None
+        for r in CADENCES:
+            s8 = sharded["results"][key][f"R{r}"]
+            sf = floor["results"][key][f"R{r}"]
+            # the decision set is cadence- and topology-invariant
+            # (Thm. 4.2); a divergence here is a correctness bug, not
+            # a perf regression
+            assert s1["decisions_true"] == s8["decisions_true"], \
+                f"sharded decisions diverged on {key} at R={r}"
+            assert s1["decisions_true"] == sf["decisions_true"], \
+                f"collective-free floor decisions diverged on {key} R={r}"
+            assert not s8["hlo_collectives"].get("all-reduce"), \
+                f"psum leaked back into the sharded drive on {key} R={r}"
+            tax = round(s8["wall_s"] / max(sf["wall_s"], 1e-9), 2)
+            vs1 = round(s8["wall_s"] / max(s1["wall_s"], 1e-9), 2)
+            entry["cadence"][f"R{r}"] = {
+                "wall_s_8vdev": s8["wall_s"],
+                "wall_s_floor_8vdev": sf["wall_s"],
+                "collective_tax": tax,
+                "vdev_overhead_vs_1dev": vs1,
+                "iters_max_8vdev": s8["iters_max"],
+                "hlo_collectives": s8["hlo_collectives"],
+            }
+            rows.append({
+                "name": f"sharded_judges_{key}_R{r}",
+                "us_per_call": round(s8["wall_s"] * 1e6, 2),
+                "derived": f"collective_tax_{tax}x;"
+                           f"vs_1dev_{vs1}x;"
+                           f"hlo_collectives_"
+                           f"{s8['hlo_collective_count']}"})
+            if best is None or tax < best[1]:
+                best = (r, tax)
+            if best_vs1 is None or vs1 < best_vs1[1]:
+                best_vs1 = (r, vs1)
+        # headline overhead = what the collectives ADD over the measured
+        # collective-free floor at the tuned cadence (decide_every exists
+        # precisely to amortize the per-round gather away); the raw
+        # cross-topology ratio (at ITS best cadence) and the rig's
+        # time-sharing floor (at R1, the natural compute-floor point —
+        # coarser cadences inflate iterations) sit next to it so nothing
+        # hides
+        entry["vdev_overhead"] = best[1]
+        entry["vdev_overhead_cadence"] = f"R{best[0]}"
+        entry["vdev_overhead_baseline"] = \
+            "collective-free lane-local drive on the same 8-vdev mesh"
+        entry["vdev_overhead_vs_1dev"] = best_vs1[1]
+        entry["vdev_overhead_vs_1dev_cadence"] = f"R{best_vs1[0]}"
+        entry["floor_overhead_vs_1dev"] = round(
+            floor["results"][key]["R1"]["wall_s"]
+            / max(s1["wall_s"], 1e-9), 2)
         tables[key] = entry
-        rows.append({"name": f"sharded_judges_{key}",
-                     "us_per_call": round(s8["wall_s"] * 1e6, 2),
-                     "derived": f"vdev_overhead_{entry['vdev_overhead']}x"})
     return rows, tables
 
 
 if __name__ == "__main__":
     if len(sys.argv) >= 3 and sys.argv[1] == "--worker":
-        _worker_main(sys.argv[2], json.loads(sys.argv[3]))
+        cadences = json.loads(sys.argv[4]) if len(sys.argv) > 4 else [1]
+        _worker_main(sys.argv[2], json.loads(sys.argv[3]), cadences)
     else:
         rows, tables = run()
         print(json.dumps(tables, indent=1))

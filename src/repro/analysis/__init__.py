@@ -14,9 +14,13 @@ catalog with motivating bugs: DESIGN.md Sec. 10):
   QL003  jit discipline: module-level jits in serve/ carry a trace
          counter; no jax.jit constructed inside function bodies.
   QL004  collective pairing: collectives under a while_loop inside
-         shard_map require the psum-carried continue flag.
+         shard_map require a globally-reduced continue flag.
   QL005  no imports of the removed PR-2 deprecation shims.
   QL006  no unkeyed randomness in library/benchmark code.
+  QL007  collective cadence: core/ while_loop bodies may not issue raw
+         collectives — round-boundary communication goes through the
+         sanctioned cadence helper (one packed all_gather per
+         decide_every round, DESIGN.md Sec. 11).
 
 Findings print as ``path:line RULE message``; suppress a deliberate
 exception with ``# quadlint: disable=QLxxx -- reason`` (the reason is

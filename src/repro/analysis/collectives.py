@@ -1,21 +1,30 @@
-"""QL004: collectives under ``lax.while_loop`` inside ``shard_map``
-must be guarded by a psum-carried continue flag.
+"""QL004 + QL007: collective discipline under ``lax.while_loop``.
 
-The PR 3 lockstep invariant (DESIGN.md Sec. 7): when a while_loop body
-issues collectives (``all_gather``/``psum``/...) inside a shard_map
-scope, every device must take exactly the same number of trips, or the
-body's collectives stop pairing and the program deadlocks / corrupts.
-The repo's pattern is a globally-reduced continue flag carried through
-the loop::
+QL004 — the PR 3 lockstep invariant (DESIGN.md Sec. 7): when a
+while_loop body issues collectives (``all_gather``/``psum``/...) inside
+a shard_map scope, every device must take exactly the same number of
+trips, or the body's collectives stop pairing and the program deadlocks
+/ corrupts. The historical guard pattern is a globally-reduced continue
+flag carried through the loop::
 
     def cont_of(nm):
         return jax.lax.psum(jnp.any(nm).astype(jnp.int32), axis) > 0
 
-A device whose local lanes all resolved keeps stepping (frozen) until
-the slowest lane anywhere resolves. This rule finds while_loops whose
-bodies reach a collective (transitively, through calls to sibling
-helpers in the same shard_map scope) and flags them unless the scope
-contains a psum-of-reduction continue flag.
+This rule finds while_loops whose bodies reach a collective
+(transitively, through calls to sibling helpers in the same shard_map
+scope) and flags them unless the scope contains a psum-of-reduction
+continue flag.
+
+QL007 — the PR 7 cadence invariant (DESIGN.md Sec. 11): ``core/`` loop
+bodies may not issue raw collectives at all. Round-boundary
+communication must go through the sanctioned cadence helper
+(``core.sharded._round_gather``): one packed ``all_gather`` per
+``decide_every`` round carrying the brackets AND the folded continue
+flag, so the hot loop never pays a per-iteration collective pair. The
+walk is transitive through *module-wide* helper defs (unlike QL004's
+same-scope walk, which a module-level helper would evade) and each
+finding anchors at the collective call's own line — the cadence helper
+itself carries the one documented suppression.
 """
 from __future__ import annotations
 
@@ -129,4 +138,67 @@ def check_collective_pairing(ctx: FileContext) -> Iterable[Finding]:
                     f"({', '.join(sorted(reached))}) inside shard_map "
                     f"without a psum-carried continue flag — trip counts "
                     f"can diverge across devices (DESIGN.md Sec. 7)"))
+    return findings
+
+
+def _module_defs(tree: ast.Module) -> dict:
+    """name -> def for every named function in the module (first def
+    wins, matching ``_local_defs``); QL007 walks these so a collective
+    hidden behind a module-level helper is still reached."""
+    defs: dict = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+    return defs
+
+
+def _reachable_collective_calls(fn, defs: dict) -> list:
+    """(name, lineno) for every collective CALL SITE reachable from
+    ``fn`` through calls to helpers in ``defs`` — call sites, not just
+    names, so findings anchor where the collective is issued (and a
+    suppression on the sanctioned helper's line covers exactly it)."""
+    seen_fns: set = set()
+    found: list = []
+    stack = [fn]
+    while stack:
+        cur = stack.pop()
+        if id(cur) in seen_fns:
+            continue
+        seen_fns.add(id(cur))
+        for node in ast.walk(cur):
+            if not isinstance(node, ast.Call):
+                continue
+            name = last_component(node.func)
+            if name in _COLLECTIVES:
+                found.append((name, node.lineno))
+            elif name in defs:
+                stack.append(defs[name])
+    return found
+
+
+def check_collective_cadence(ctx: FileContext) -> Iterable[Finding]:
+    """QL007: no raw collectives reachable from while_loop bodies in
+    ``core/`` — the hot loop's only collective is the cadence helper's
+    single per-round gather."""
+    if not (ctx.in_src and "core" in ctx.parts):
+        return []
+    defs = _module_defs(ctx.tree)
+    findings: list = []
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and last_component(node.func) == "while_loop"):
+            continue
+        args = list(node.args) + [kw.value for kw in node.keywords]
+        for arg in args[:2]:  # cond and body both run once per trip
+            fn = _resolve_fn(arg, defs)
+            if fn is None:
+                continue
+            for name, lineno in _reachable_collective_calls(fn, defs):
+                findings.append(Finding(
+                    ctx.rel, lineno, "QL007",
+                    f"raw {name} reachable from a core/ while_loop "
+                    f"(entered at line {node.lineno}) — route round-"
+                    f"boundary communication through the cadence helper "
+                    f"so each decide_every round pays one packed "
+                    f"collective (DESIGN.md Sec. 11)"))
     return findings

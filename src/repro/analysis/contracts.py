@@ -161,6 +161,23 @@ def _frozen_names(fn) -> set:
     return out
 
 
+def _round_body_frozen(fn, solver_tree) -> set:
+    """PR 7 moved the per-substep freeze into the shared cadence round
+    driver ``BIFSolver._round_body`` (so single-device and sharded
+    drives cannot drift); a handler that delegates to it inherits its
+    tree_freeze coverage. Only handlers that actually reference
+    ``_round_body`` get the credit — a new handler that skips the round
+    driver still has to freeze for itself."""
+    uses = any(
+        (isinstance(node, ast.Attribute) and node.attr == "_round_body")
+        or (isinstance(node, ast.Name) and node.id == "_round_body")
+        for node in ast.walk(fn))
+    if not uses:
+        return set()
+    rb = _find_def(solver_tree, "_round_body")
+    return _frozen_names(rb) if rb is not None else set()
+
+
 def _ctor_calls(tree: ast.Module, class_name: str) -> list:
     return [node for node in ast.walk(tree)
             if isinstance(node, ast.Call)
@@ -269,7 +286,7 @@ def check_contracts(contexts: Iterable[FileContext]) -> list:
                 f"handler the contract is checked against)"))
             continue
         replaced = _replace_kwargs(fn)
-        frozen = _frozen_names(fn)
+        frozen = _frozen_names(fn) | _round_body_frozen(fn, solver_tree)
         for f in threaded:
             if f not in replaced:
                 findings.append(Finding(
@@ -300,7 +317,8 @@ def check_contracts(contexts: Iterable[FileContext]) -> list:
             "_drive_sharded not found (the sharded threading handler)"))
     else:
         replaced = _replace_kwargs(drive)
-        frozen = _frozen_names(drive)
+        frozen = _frozen_names(drive) \
+            | _round_body_frozen(drive, solver_tree)
         for f in threaded:
             if f not in replaced and f not in sharded_excluded:
                 findings.append(Finding(

@@ -156,6 +156,7 @@ def _file_rules() -> list[Callable[[FileContext], Iterable[Finding]]]:
         rules_ast.check_shim_imports,      # QL005
         rules_ast.check_randomness,        # QL006
         collectives.check_collective_pairing,  # QL004
+        collectives.check_collective_cadence,  # QL007
     ]
 
 

@@ -146,26 +146,17 @@ def recurrence_update(alpha_n, beta_n, beta_p, g, c, delta, d_lr, d_rr,
     return g_new, c_new, delta_new, d_lr_new, d_rr_new, g_rr, g_lr, g_lo
 
 
-def gql_step(op, st: GQLState, lam_min: Array, lam_max: Array,
-             basis: Array | None = None, recurrence=None) -> GQLState:
-    """Iterations i>=2 of Alg. 5; frozen lanes pass through unchanged.
+def gql_assemble(st: GQLState, lz: _lz.LanczosState, raw) -> GQLState:
+    """Fold one iteration's raw recurrence outputs into the next state:
+    exact-collapse on Krylov exhaustion, frozen-lane pass-through, and
+    done/it bookkeeping. The ONE home for this select logic — shared by
+    :func:`gql_step` and the fused step kernel
+    (``kernels/lanczos_step.py``), so the two routes cannot drift.
 
-    ``recurrence`` lets callers swap the scalar-update implementation (same
-    signature and return as ``recurrence_update``); the solver uses it to
-    route the arithmetic through the fused Pallas kernel
-    (``kernels/gql_update.py``) instead of the reference path.
-    """
-    if recurrence is None:
-        recurrence = recurrence_update
-    lam_min = jnp.asarray(lam_min, st.g.dtype)
-    lam_max = jnp.asarray(lam_max, st.g.dtype)
-    lz = _lz.lanczos_step(op, st.lz, basis=basis)
-    # Quantities of the *new* iteration (i+1): lz.alpha / lz.beta are
-    # alpha_{i+1} / beta_{i+1}; lz.beta_prev is beta_i.
-    (g_new, c_new, delta_new, d_lr_new, d_rr_new,
-     g_rr, g_lr, g_lo) = recurrence(
-        lz.alpha, lz.beta, lz.beta_prev, st.g, st.c, st.delta,
-        st.delta_lr, st.delta_rr, lam_min, lam_max)
+    ``lz`` is the post-step Lanczos state; ``raw`` is the 8-tuple
+    returned by :func:`recurrence_update` (which may carry garbage on
+    lanes with ``st.done`` — every output masks those back)."""
+    (g_new, c_new, delta_new, d_lr_new, d_rr_new, g_rr, g_lr, g_lo) = raw
 
     # Lanes that just exhausted the Krylov space: estimate is exact
     # (Lemma 15); collapse the bracket onto g.
@@ -191,6 +182,28 @@ def gql_step(op, st: GQLState, lam_min: Array, lam_max: Array,
         done=st.done | ~lz.live,
         it=st.it + upd.astype(jnp.int32),
     )
+
+
+def gql_step(op, st: GQLState, lam_min: Array, lam_max: Array,
+             basis: Array | None = None, recurrence=None) -> GQLState:
+    """Iterations i>=2 of Alg. 5; frozen lanes pass through unchanged.
+
+    ``recurrence`` lets callers swap the scalar-update implementation (same
+    signature and return as ``recurrence_update``); the solver uses it to
+    route the arithmetic through the fused Pallas kernel
+    (``kernels/gql_update.py``) instead of the reference path.
+    """
+    if recurrence is None:
+        recurrence = recurrence_update
+    lam_min = jnp.asarray(lam_min, st.g.dtype)
+    lam_max = jnp.asarray(lam_max, st.g.dtype)
+    lz = _lz.lanczos_step(op, st.lz, basis=basis)
+    # Quantities of the *new* iteration (i+1): lz.alpha / lz.beta are
+    # alpha_{i+1} / beta_{i+1}; lz.beta_prev is beta_i.
+    raw = recurrence(
+        lz.alpha, lz.beta, lz.beta_prev, st.g, st.c, st.delta,
+        st.delta_lr, st.delta_rr, lam_min, lam_max)
+    return gql_assemble(st, lz, raw)
 
 
 # ---------------------------------------------------------------------------

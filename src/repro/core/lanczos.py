@@ -42,6 +42,30 @@ def lanczos_init(op, u: Array) -> LanczosState:
                         beta_prev=jnp.zeros_like(beta1), it=it, live=live)
 
 
+def lanczos_assemble(st: LanczosState, alpha: Array, beta: Array,
+                     r: Array) -> LanczosState:
+    """Fold one step's raw outputs (``alpha``, ``beta = ||r||``, residual
+    ``r``) into the next state: breakdown detection, residual
+    normalization, and pass-through of frozen lanes. The ONE home for
+    this select logic — shared by :func:`lanczos_step` and the fused
+    step kernel (``kernels/lanczos_step.py``), so the two routes cannot
+    drift. Dead lanes (``st.live`` False) may carry garbage in the raw
+    inputs; every output masks them back to the old state."""
+    still = st.live & (beta > BREAKDOWN_TOL * jnp.maximum(jnp.abs(alpha), 1.0))
+    v_new = jnp.where(still[..., None], r / jnp.maximum(beta, 1e-30)[..., None], 0.0)
+
+    keep = st.live
+    return LanczosState(
+        v_prev=jnp.where(keep[..., None], st.v, st.v_prev),
+        v=jnp.where(keep[..., None], v_new, st.v),
+        alpha=jnp.where(keep, alpha, st.alpha),
+        beta=jnp.where(keep, beta, st.beta),
+        beta_prev=jnp.where(keep, st.beta, st.beta_prev),
+        it=st.it + keep.astype(jnp.int32),
+        live=still,
+    )
+
+
 def lanczos_step(op, st: LanczosState, basis: Array | None = None) -> LanczosState:
     """One three-term-recurrence step; frozen lanes are passed through.
 
@@ -58,19 +82,7 @@ def lanczos_step(op, st: LanczosState, basis: Array | None = None) -> LanczosSta
         coeff = jnp.einsum("...mn,...n->...m", basis, r)
         r = r - jnp.einsum("...mn,...m->...n", basis, coeff)
     beta = jnp.linalg.norm(r, axis=-1)
-    still = st.live & (beta > BREAKDOWN_TOL * jnp.maximum(jnp.abs(alpha), 1.0))
-    v_new = jnp.where(still[..., None], r / jnp.maximum(beta, 1e-30)[..., None], 0.0)
-
-    keep = st.live
-    return LanczosState(
-        v_prev=jnp.where(keep[..., None], st.v, st.v_prev),
-        v=jnp.where(keep[..., None], v_new, st.v),
-        alpha=jnp.where(keep, alpha, st.alpha),
-        beta=jnp.where(keep, beta, st.beta),
-        beta_prev=jnp.where(keep, st.beta, st.beta_prev),
-        it=st.it + keep.astype(jnp.int32),
-        live=still,
-    )
+    return lanczos_assemble(st, alpha, beta, r)
 
 
 def tridiag_coefficients(op, u: Array, num_iters: int):

@@ -453,3 +453,57 @@ def configure_backend(op, backend: str, interpret: bool | None):
             return op
         return dataclasses.replace(op, base=new_base)
     return op
+
+
+def fused_operands(op):
+    """Flatten ``op`` into the diagonal-sandwich form consumed by the
+    fused step kernel (``kernels/lanczos_step.py``):
+
+        matvec(x) = s_out * base.matvec(s_in * x) + t * x
+
+    with ``base`` a :class:`Dense` or :class:`SparseBELL` and ``s_out`` /
+    ``s_in`` / ``t`` scalars or arrays broadcastable against ``(..., N)``.
+    Every Masked/Shifted/Jacobi wrapper is closed under this form:
+
+        Dense / BELL:  (base, 1, 1, 0)
+        Shifted(F, s): t' = t + s
+        Jacobi(F, c):  s_out' = c*s_out, s_in' = s_in*c, t' = c*t*c
+        Masked(F, m):  s_out' = m*s_out, s_in' = s_in*m,
+                       t' = m*t*m + (1 - m)
+
+    Returns ``(base, s_out, s_in, t)`` or ``None`` when ``op`` bottoms
+    out in an operator the fused kernel cannot stream (SparseCOO,
+    MatvecFn, ...) — callers fall back to the reference composition.
+    """
+    if isinstance(op, (Dense, SparseBELL)):
+        one = jnp.ones((), _dtype_of(op))
+        return op, one, one, jnp.zeros((), _dtype_of(op))
+    if isinstance(op, Shifted):
+        inner = fused_operands(op.base)
+        if inner is None:
+            return None
+        base, s_out, s_in, t = inner
+        return base, s_out, s_in, t + op._sigma_col()
+    if isinstance(op, Jacobi):
+        inner = fused_operands(op.base)
+        if inner is None:
+            return None
+        base, s_out, s_in, t = inner
+        c = op.inv_sqrt_diag
+        return base, c * s_out, s_in * c, c * t * c
+    if isinstance(op, Masked):
+        inner = fused_operands(op.base)
+        if inner is None:
+            return None
+        base, s_out, s_in, t = inner
+        m = op.mask.astype(_dtype_of(base))
+        return base, m * s_out, s_in * m, m * t * m + (1.0 - m)
+    return None
+
+
+def _dtype_of(op):
+    if isinstance(op, Dense):
+        return op.a.dtype
+    if isinstance(op, SparseBELL):
+        return op.data.dtype
+    return op.diag().dtype

@@ -15,15 +15,20 @@ via ``shard_map``:
   * the ONE retrospective loop runs per device on its lane shard, with
     lanes frozen bit-exactly as they resolve, just like the
     single-device driver;
-  * cross-lane decision rules (the ``judge_argmax`` race) all-gather the
-    per-lane brackets each iteration and evaluate the SAME race function
-    on every device, so the winner certificate is a cross-device
-    reduction over the full lane set;
-  * the ``lax.while_loop`` trip count is kept lockstep across devices by
-    carrying a ``psum``-reduced global continue flag — a device whose
-    local lanes all resolved keeps stepping (its lanes stay frozen)
-    until the slowest lane anywhere resolves, so every collective in the
-    body is matched on all devices.
+  * the loop is *round-cadenced* (``SolverConfig.decide_every = R``,
+    DESIGN.md Sec. 11): each ``lax.while_loop`` trip runs R shard-local
+    steps (zero collectives — within-round freezing uses only per-lane
+    local conditions) and then evaluates the decision rule once, at the
+    round boundary;
+  * the round boundary pays exactly ONE collective: the per-lane
+    brackets and the lane's local can-continue flag travel together in a
+    single packed ``all_gather`` (``_round_gather``). Every device then
+    computes the SAME global resolution flags — cross-lane rules like
+    the ``judge_argmax`` race see every lane — AND the same global
+    continue flag from the gathered data, so while_loop trip counts stay
+    lockstep with no separate ``psum``: a pool whose lanes all resolved
+    exits after one last gather instead of paying a collective pair per
+    iteration.
 
 K that does not divide the device count is padded with zero-query lanes,
 which ``gql_init`` marks done at iteration one (the same dummy-lane rule
@@ -52,7 +57,6 @@ from jax.sharding import PartitionSpec as P
 from . import gql as _gql
 from . import matfun as _matfun
 from . import operators as _ops
-from .loop_utils import tree_freeze
 from .solver import ArgmaxResult, BIFSolver, JudgeResult, QuadState, \
     SolveResult, _argmax_race, _argmax_scores
 
@@ -183,87 +187,108 @@ def init_state_sharded(solver: BIFSolver, op, u: Array, *, mesh,
                      coeffs=coeffs)
 
 
+def _round_gather(x, axis: str):
+    """The cadence collective: the ONE ``all_gather`` a decision round is
+    allowed to pay.  Packs per-lane round-boundary scalars (brackets plus
+    the folded can-continue flag) into a single tiled gather so the
+    sharded drive needs no separate ``psum`` for its loop-lockstep
+    continue flag — every device derives it from the gathered data.
+    """
+    return jax.lax.all_gather(x, axis, axis=0, tiled=True)  # quadlint: disable=QL007 -- the cadence helper itself: the single sanctioned per-round collective
+
+
 def _drive_sharded(solver: BIFSolver, state: QuadState, decide,
                    decide_args, it_cap, mesh, axis: str,
                    n: int | None):
     """Advance the sharded state: ``n`` bounded steps (step_n) or to
     completion (``n=None``, resume).
 
-    ``decide(lo, hi, *decide_args)`` sees the GLOBAL (K',) brackets
-    (gathered across devices every iteration) and returns per-lane
-    resolution flags; ``decide_args`` are replicated on every device,
-    ``it_cap`` (per-lane iteration budgets) shards with the lanes. The
-    ``lax.while_loop`` trip count is kept lockstep across devices by a
-    psum-carried continue flag, so the body's collectives always pair.
+    ``decide(lo, hi, *decide_args)`` sees the GLOBAL (K',) brackets and
+    returns per-lane resolution flags; ``decide_args`` are replicated on
+    every device, ``it_cap`` (per-lane iteration budgets) shards with
+    the lanes.
+
+    The loop is round-cadenced: each ``lax.while_loop`` trip runs
+    ``R = solver.config.decide_every`` shard-local steps (collective-
+    free; within-round freezing reuses the single-device local rule via
+    ``BIFSolver._round_body``) and then pays exactly one collective —
+    ``_round_gather`` of ``stack([lo, hi, can], -1)``.  Every device
+    evaluates ``decide`` on the same gathered brackets and derives the
+    same global continue flag ``any(can & ~resolved)``, so while_loop
+    trip counts stay lockstep with no psum, and an all-resolved pool
+    exits after one final gather instead of a collective pair per
+    iteration.  ``n`` is quantised to whole rounds (``n // R``), exactly
+    like the single-device ``step_n``, so sharded and single-device
+    states stay round-aligned and bit-identical.
     """
     _check_state(solver, state, "the sharded stepping driver")
     cfg = solver.config
-    max_iters = cfg.max_iters
-    rec = solver._recurrence()
+    r = cfg.decide_every
+    stepfn = solver._stepper()
     kp = state.st.it.shape[0]
     kd = kp // mesh.shape[axis]
     if decide is None:
         def decide(lo, hi):  # noqa: F811 — tolerance rule, no extra args
             return solver.tolerance_resolved(lo, hi)
+    rounds = None if n is None else n // r
+    if rounds == 0:
+        return state
     cap = jnp.full((kp,), _NO_CAP, jnp.int32) if it_cap is None \
         else jnp.broadcast_to(jnp.asarray(it_cap, jnp.int32), (kp,))
 
     def local_fn(op_loc, st_coeffs_loc, lmn, lmx, cap_loc, *dargs):
         st_loc, coeffs_loc = st_coeffs_loc
         idx = jax.lax.axis_index(axis)
+        local_ok = solver._local_ok_fn(cap_loc)
+        round_fn = solver._round_body(op_loc, lmn, lmx, stepfn, local_ok)
 
-        def gather(x):
-            return jax.lax.all_gather(x, axis, axis=0, tiled=True)
-
-        def resolved_local(st, coeffs):
-            # ONE gather for both brackets: the decision is the only
-            # cross-device data dependency in the loop body, so the hot
-            # path pays a single all_gather + the psum per iteration
+        def boundary(st, coeffs):
+            # ONE collective per round: brackets and the local
+            # can-continue flag travel together.  The gather's result
+            # feeds only the next round's freeze masks — not the matvec
+            # inputs — so the compiler is free to overlap it with the
+            # first shard-local matvec of the following round.
             # (fn-aware brackets — the matfun eigensolve — run
             # shard-local; only the scalars travel)
             lo, hi = solver._bracket2(st, coeffs, lmn, lmx)
-            lo_hi = gather(jnp.stack([lo, hi], axis=-1))
-            res = decide(lo_hi[..., 0], lo_hi[..., 1], *dargs)
-            return jax.lax.dynamic_slice_in_dim(res, idx * kd, kd)
+            can = local_ok(st, coeffs)
+            packed = _round_gather(
+                jnp.stack([lo, hi, can.astype(lo.dtype)], axis=-1), axis)
+            res = decide(packed[..., 0], packed[..., 1], *dargs)
+            nm_glob = packed[..., 2].astype(bool) & ~res
+            nm = jax.lax.dynamic_slice_in_dim(nm_glob, idx * kd, kd)
+            # global "any lane anywhere still needs work" — computed
+            # identically on every device from the gathered flags, so
+            # while_loop trip counts stay lockstep without a psum.
+            return nm, jnp.any(nm_glob)
 
-        def needs_more(st, coeffs):
-            nm = ~st.done & ~resolved_local(st, coeffs) \
-                & (st.it < max_iters) & (st.it < cap_loc)
-            if coeffs is not None:
-                # capacity freeze, like the single-device rule: a lane
-                # never outruns its recorded alpha/beta history
-                nm = nm & (st.it < coeffs.alphas.shape[-1])
-            return nm
-
-        def cont_of(nm):
-            # global "any lane anywhere still needs work"; identical on
-            # every device, so while_loop trip counts stay lockstep and
-            # the body's all_gathers always match up.
-            return jax.lax.psum(jnp.any(nm).astype(jnp.int32), axis) > 0
-
-        nm0 = needs_more(st_loc, coeffs_loc)
+        nm0, cont0 = boundary(st_loc, coeffs_loc)
 
         def cond(carry):
             cont = carry[2]
-            return cont if n is None else cont & (carry[3] < n)
+            return cont if rounds is None else cont & (carry[3] < rounds)
 
         def body(carry):
             (st, coeffs), nm, _, taken = carry
-            st1 = _gql.gql_step(op_loc, st, lmn, lmx, recurrence=rec)
-            if coeffs is not None:
-                coeffs1 = tree_freeze(_matfun.update_coeffs(coeffs, st, st1),
-                                      coeffs, ~nm)
-            else:
-                coeffs1 = None
-            st1 = tree_freeze(st1, st, ~nm)
-            nm1 = needs_more(st1, coeffs1)
-            return (st1, coeffs1), nm1, cont_of(nm1), taken + 1
 
-        (st, coeffs), _, _, _ = jax.lax.while_loop(
+            def run_round(sc):
+                st1, _, coeffs1, _, _ = round_fn(
+                    (sc[0], None, sc[1], jnp.zeros((), jnp.int32), nm))
+                return st1, coeffs1
+
+            # a device whose local lanes are ALL frozen skips its dead
+            # shard-local matvecs for the round (the frozen substep is
+            # the identity, so the branch is bit-exact); it still reaches
+            # the boundary gather, keeping trip counts lockstep.
+            st, coeffs = jax.lax.cond(jnp.any(nm), run_round,
+                                      lambda sc: sc, (st, coeffs))
+            nm1, cont1 = boundary(st, coeffs)
+            return (st, coeffs), nm1, cont1, taken + 1
+
+        (st, coeffs), _, _, taken = jax.lax.while_loop(
             cond, body,
-            ((st_loc, coeffs_loc), nm0, cont_of(nm0),
-             jnp.zeros((), jnp.int32)))
-        return st, coeffs
+            ((st_loc, coeffs_loc), nm0, cont0, jnp.zeros((), jnp.int32)))
+        return st, coeffs, jnp.full((kd,), taken, jnp.int32)
 
     fn = shard_map(
         local_fn, mesh=mesh,
@@ -273,12 +298,14 @@ def _drive_sharded(solver: BIFSolver, state: QuadState, decide,
         + _lam_specs(state.lam_min, state.lam_max, axis)
         + (P(axis),) + tuple(P() for _ in decide_args),
         out_specs=P(axis), check_rep=False)
-    st, coeffs = fn(state.op, (state.st, state.coeffs), state.lam_min,
-                    state.lam_max, cap, *decide_args)
-    # basis-free states use `step` only as bookkeeping; the global trip
-    # count is bounded below by the largest per-lane advance
+    st, coeffs, taken = fn(state.op, (state.st, state.coeffs),
+                           state.lam_min, state.lam_max, cap, *decide_args)
+    # basis-free states use `step` only as bookkeeping; rounds-taken is
+    # replicated across devices, so its max IS the shared trip count,
+    # and `step` advances by a whole round per trip — matching the
+    # single-device round accounting exactly.
     return state._replace(st=st, coeffs=coeffs,
-                          step=state.step + jnp.max(st.it - state.st.it))
+                          step=state.step + r * jnp.max(taken))
 
 
 def step_n_sharded(solver: BIFSolver, state: QuadState, n: int,
@@ -286,7 +313,11 @@ def step_n_sharded(solver: BIFSolver, state: QuadState, n: int,
                    axis: str = "lanes") -> QuadState:
     """Advance a sharded :class:`QuadState` by at most ``n`` iterations —
     the sharded twin of ``BIFSolver.step_n`` (same freezing rule, so
-    resume-after-step_n is bit-exact with the uninterrupted drive)."""
+    resume-after-step_n is bit-exact with the uninterrupted drive).
+
+    Like the single-device ``step_n``, ``n`` is quantised down to whole
+    decision rounds: with ``decide_every = R`` this advances
+    ``(n // R) * R`` iterations, a no-op when ``n < R``."""
     if n < 0:
         raise ValueError(f"n must be >= 0, got {n}")
     if n == 0:

@@ -29,7 +29,17 @@ Config axes:
                         (Sec. 5.4 'Instability');
   * ``backend``      -- 'reference' (pure-jnp ``gql.recurrence_update``)
                         | 'pallas' (fused ``kernels/gql_update.py`` VPU
-                        kernel) for the per-iteration scalar recurrence.
+                        kernel for the scalar recurrence only)
+                        | 'fused' (``kernels/lanczos_step.py`` megakernel:
+                        matvec + Lanczos update + reorth + recurrence in
+                        ONE pallas_call per iteration; operators with no
+                        sandwich form fall back to the reference
+                        composition bit-exactly);
+  * ``decide_every`` -- round cadence R of the stopping rule: the loop
+                        runs R shard-local steps between decision rounds
+                        (DESIGN.md Sec. 11). Sound by Thm. 4.2 bracket
+                        nesting — costs at most R-1 extra contractions
+                        per lane, never flips a certified decision.
 
 ``BIFSolver`` and ``SolverConfig`` are frozen, hashable, and registered as
 static pytrees, so they cross ``jit`` / ``vmap`` / ``scan`` boundaries and
@@ -57,7 +67,7 @@ Array = jax.Array
 
 _SPECTRA = ("explicit", "gershgorin", "lanczos", "ridge")
 _PRECONDITIONS = ("none", "jacobi")
-_BACKENDS = ("reference", "pallas")
+_BACKENDS = ("reference", "pallas", "fused")
 
 
 @jax.tree_util.register_static
@@ -70,7 +80,11 @@ class SolverConfig:
     spectrum: str = "explicit"       # 'explicit'|'gershgorin'|'lanczos'|'ridge'
     precondition: str = "none"       # 'none'|'jacobi'
     reorth: bool = False
-    backend: str = "reference"       # 'reference'|'pallas'
+    backend: str = "reference"       # 'reference'|'pallas'|'fused'
+    decide_every: int = 1            # decision-round cadence R (>= 1):
+    #                                  evaluate the stopping rule every R
+    #                                  steps; states stay round-aligned
+    #                                  (step_n quantizes to floor(n/R)*R)
     spectrum_iters: int = 16         # Lanczos steps for spectrum estimation
     ridge: float = 0.0               # known ridge for spectrum='ridge'
     pallas_interpret: bool | None = None  # None: auto (off-TPU -> interpret)
@@ -92,6 +106,9 @@ class SolverConfig:
                              f"got {self.backend!r}")
         if self.max_iters < 1:
             raise ValueError("max_iters must be >= 1")
+        if self.decide_every < 1:
+            raise ValueError(
+                f"decide_every must be >= 1, got {self.decide_every}")
         _matfun.fn_index(self.fn)  # raises on unknown fn tags
         if self.fn != "inv" and self.precondition != "none":
             raise ValueError(
@@ -281,9 +298,32 @@ class BIFSolver:
 
     # -- backend / problem preparation --------------------------------------
 
+    def _stepper(self):
+        """One-iteration GQL step implementation per ``config.backend``:
+        ``stepfn(op, st, lam_min, lam_max, basis)``. 'fused' routes the
+        whole iteration (matvec + Lanczos + reorth + recurrence) through
+        the ``kernels/lanczos_step.py`` megakernel; 'reference'/'pallas'
+        compose ``gql.gql_step`` with the configured recurrence."""
+        if self.config.backend == "fused":
+            from ..kernels import ops as _kops  # deferred: pulls in pallas
+            interpret = self.config.pallas_interpret
+
+            def fused_step(op, st, lam_min, lam_max, basis=None):
+                return _kops.gql_step_fused(op, st, lam_min, lam_max,
+                                            basis=basis, interpret=interpret)
+
+            return fused_step
+        rec = self._recurrence()
+
+        def composed_step(op, st, lam_min, lam_max, basis=None):
+            return _gql.gql_step(op, st, lam_min, lam_max, basis=basis,
+                                 recurrence=rec)
+
+        return composed_step
+
     def _recurrence(self):
         """Scalar-recurrence implementation per ``config.backend``."""
-        if self.config.backend == "reference":
+        if self.config.backend != "pallas":
             return None  # gql_step default: gql.recurrence_update
         from ..kernels import ops as _kops  # deferred: pulls in pallas
         interpret = self.config.pallas_interpret
@@ -384,7 +424,7 @@ class BIFSolver:
         ``it_cap`` (the serving engine's per-request iteration budget).
         ``lam_min``/``lam_max`` feed the matfun bracket (unused on the
         fn='inv' path, where coeffs is None)."""
-        max_iters = self.config.max_iters
+        local_ok = self._local_ok_fn(it_cap)
 
         if decide is None:
             def resolved(st, coeffs):
@@ -395,25 +435,42 @@ class BIFSolver:
                 return decide(*self._bracket2(st, coeffs, lam_min, lam_max))
 
         def needs_more(st, coeffs):
-            nm = ~st.done & ~resolved(st, coeffs) & (st.it < max_iters)
+            return local_ok(st, coeffs) & ~resolved(st, coeffs)
+
+        return needs_more, resolved
+
+    def _local_ok_fn(self, it_cap=None):
+        """The *decide-free* per-lane continuation conditions: not broken
+        down, below ``max_iters``, within the coefficient history, and
+        below the optional per-lane ``it_cap``. These freeze a lane
+        immediately even inside a ``decide_every`` round (unlike the
+        stopping rule, which is only consulted at round boundaries —
+        deferring a decide costs at most R-1 extra contractions by
+        Thm. 4.2, but overrunning a budget or the history buffer would
+        be a correctness bug, not a latency trade)."""
+        max_iters = self.config.max_iters
+
+        def local_ok(st, coeffs):
+            ok = ~st.done & (st.it < max_iters)
             if coeffs is not None:
                 # never advance a lane past its recorded alpha/beta
                 # history: an undersized ``coeff_rows`` buffer freezes
                 # like an iteration budget (bracket stops tightening but
                 # stays sound) instead of silently corrupting estimates
-                nm = nm & (st.it < coeffs.alphas.shape[-1])
+                ok = ok & (st.it < coeffs.alphas.shape[-1])
             if it_cap is not None:
-                nm = nm & (st.it < it_cap)
-            return nm
+                ok = ok & (st.it < it_cap)
+            return ok
 
-        return needs_more, resolved
+        return local_ok
 
-    def _advance(self, op, st, lam_min, lam_max, basis, coeffs, step, rec):
+    def _advance(self, op, st, lam_min, lam_max, basis, coeffs, step,
+                 stepfn):
         """One unconditional GQL step + reorth-basis / coefficient-
         history bookkeeping (no freezing — the caller applies its own
-        rule)."""
-        st1 = _gql.gql_step(op, st, lam_min, lam_max, basis=basis,
-                            recurrence=rec)
+        rule). ``stepfn`` comes from :meth:`_stepper` (reference /
+        pallas-recurrence / fused-megakernel backends)."""
+        st1 = stepfn(op, st, lam_min, lam_max, basis)
         if coeffs is not None:
             coeffs = _matfun.update_coeffs(coeffs, st, st1)
         if basis is None:
@@ -454,52 +511,82 @@ class BIFSolver:
                          lam_max=jnp.asarray(lam_max), basis=basis,
                          step=jnp.zeros((), jnp.int32), coeffs=coeffs)
 
-    def step_n(self, state: QuadState, n: int, decide=None, *,
-               it_cap=None) -> QuadState:
-        """Advance ``state`` by at most ``n`` quadrature iterations.
+    def _round_body(self, op, lam_min, lam_max, stepfn, local_ok):
+        """One ``decide_every`` round: R substeps with *local-only*
+        freezing (breakdown / max_iters / history / it_cap apply
+        immediately; the stopping rule is deferred to the boundary).
+        Returns ``round_fn((st, basis, coeffs, step, nm)) -> same`` with
+        ``nm`` the entry round-boundary needs_more; the caller evaluates
+        the next boundary's needs_more on the result. With R=1 this is
+        exactly the historical one-step body (the single substep's
+        freeze mask IS the boundary needs_more)."""
+        r = self.config.decide_every
 
-        Per step, lanes that already resolved ``decide`` (None = the
-        tolerance rule), broke down, or hit ``max_iters`` / the optional
-        per-lane ``it_cap`` budget are frozen bit-exactly — the same rule
-        ``resume`` applies, so ``resume(step_n(state, k))`` reproduces
-        ``resume(state)`` exactly. ``n`` is a static bound on this call's
-        steps; the loop exits early once every lane is frozen.
-        """
-        if n < 0:
-            raise ValueError(f"n must be >= 0, got {n}")
-        if n == 0:
-            return state
-        rec = self._recurrence()
-        op, lam_min, lam_max = state.op, state.lam_min, state.lam_max
-        needs_more, _ = self._needs_more_fn(decide, it_cap,
-                                            lam_min=lam_min, lam_max=lam_max)
-
-        # needs_more is carried through the loop (computed once per
-        # step, like the sharded driver): for matfun states it is the
-        # stacked Jacobi eigensolve — evaluating it in both cond and
-        # body would double the dominant per-iteration cost
-        def cond(carry):
-            _, _, _, _, taken, nm = carry
-            return jnp.any(nm) & (taken < n)
-
-        def body(carry):
-            st, basis, coeffs, step, taken, nm = carry
+        def substep(i, carry):
+            st, basis, coeffs, step, nm = carry
             st1, basis1, coeffs1 = self._advance(op, st, lam_min, lam_max,
-                                                 basis, coeffs, step, rec)
+                                                 basis, coeffs, step, stepfn)
             frozen = ~nm
             st1 = tree_freeze(st1, st, frozen)
             if basis is not None:
                 basis1 = tree_freeze(basis1, basis, frozen)
             if coeffs is not None:
                 coeffs1 = tree_freeze(coeffs1, coeffs, frozen)
-            return (st1, basis1, coeffs1, step + 1, taken + 1,
-                    needs_more(st1, coeffs1))
+            nm1 = nm & local_ok(st1, coeffs1)
+            return st1, basis1, coeffs1, step + 1, nm1
 
-        st, basis, coeffs, step, _, _ = jax.lax.while_loop(
+        if r == 1:
+            return lambda carry: substep(0, carry)
+        return lambda carry: jax.lax.fori_loop(0, r, substep, carry)
+
+    def step_n(self, state: QuadState, n: int, decide=None, *,
+               it_cap=None) -> QuadState:
+        """Advance ``state`` by at most ``n`` quadrature iterations.
+
+        Lanes that already resolved ``decide`` (None = the tolerance
+        rule), broke down, or hit ``max_iters`` / the optional per-lane
+        ``it_cap`` budget are frozen bit-exactly — the same rule
+        ``resume`` applies, so ``resume(step_n(state, k))`` reproduces
+        ``resume(state)`` exactly. ``n`` is a static bound on this call's
+        steps; the loop exits early once every lane is frozen.
+
+        With ``decide_every = R > 1`` the stopping rule is evaluated
+        every R steps and states stay *round-aligned*: ``step_n``
+        advances at most ``floor(n / R) * R`` steps (``n < R`` is a
+        no-op), keeping the resume invariant exact at every cadence.
+        """
+        if n < 0:
+            raise ValueError(f"n must be >= 0, got {n}")
+        r = self.config.decide_every
+        rounds = n // r
+        if rounds == 0:
+            return state
+        stepfn = self._stepper()
+        op, lam_min, lam_max = state.op, state.lam_min, state.lam_max
+        needs_more, _ = self._needs_more_fn(decide, it_cap,
+                                            lam_min=lam_min, lam_max=lam_max)
+        round_fn = self._round_body(op, lam_min, lam_max, stepfn,
+                                    self._local_ok_fn(it_cap))
+
+        # needs_more is carried through the loop (computed once per
+        # round, like the sharded driver): for matfun states it is the
+        # stacked Jacobi eigensolve — evaluating it in both cond and
+        # body would double the dominant per-round cost
+        def cond(carry):
+            (_, _, _, _, nm), taken = carry
+            return jnp.any(nm) & (taken < rounds)
+
+        def body(carry):
+            inner, taken = carry
+            st, basis, coeffs, step, _ = round_fn(inner)
+            nm = needs_more(st, coeffs)
+            return (st, basis, coeffs, step, nm), taken + 1
+
+        (st, basis, coeffs, step, _), _ = jax.lax.while_loop(
             cond, body,
-            (state.st, state.basis, state.coeffs, state.step,
-             jnp.zeros((), jnp.int32),
-             needs_more(state.st, state.coeffs)))
+            ((state.st, state.basis, state.coeffs, state.step,
+              needs_more(state.st, state.coeffs)),
+             jnp.zeros((), jnp.int32)))
         return state._replace(st=st, basis=basis, coeffs=coeffs, step=step)
 
     def resume(self, state: QuadState, decide=None, *,
@@ -509,28 +596,23 @@ class BIFSolver:
         the per-lane ``it_cap`` budget), freezing resolved lanes
         bit-exactly. Starting from a fresh ``init_state`` this IS the
         uninterrupted drive; starting from a ``step_n`` checkpoint it
-        continues it bit-exactly."""
-        rec = self._recurrence()
+        continues it bit-exactly (``step_n`` keeps states round-aligned,
+        so the cadence-R decision schedule lines up too)."""
+        stepfn = self._stepper()
         op, lam_min, lam_max = state.op, state.lam_min, state.lam_max
         needs_more, _ = self._needs_more_fn(decide, it_cap,
                                             lam_min=lam_min, lam_max=lam_max)
+        round_fn = self._round_body(op, lam_min, lam_max, stepfn,
+                                    self._local_ok_fn(it_cap))
 
-        # nm carried through the loop — one bracket evaluation per step
+        # nm carried through the loop — one bracket evaluation per round
         # (see step_n)
         def cond(carry):
             return jnp.any(carry[4])
 
         def body(carry):
-            st, basis, coeffs, step, nm = carry
-            st1, basis1, coeffs1 = self._advance(op, st, lam_min, lam_max,
-                                                 basis, coeffs, step, rec)
-            frozen = ~nm
-            st1 = tree_freeze(st1, st, frozen)
-            if basis is not None:
-                basis1 = tree_freeze(basis1, basis, frozen)
-            if coeffs is not None:
-                coeffs1 = tree_freeze(coeffs1, coeffs, frozen)
-            return st1, basis1, coeffs1, step + 1, needs_more(st1, coeffs1)
+            st, basis, coeffs, step, _ = round_fn(carry)
+            return st, basis, coeffs, step, needs_more(st, coeffs)
 
         st, basis, coeffs, step, _ = jax.lax.while_loop(
             cond, body, (state.st, state.basis, state.coeffs, state.step,
@@ -552,6 +634,12 @@ class BIFSolver:
         precomputed freeze flags through ``step_n``'s public signature."""
         if chunk_iters < 1:
             raise ValueError(f"chunk_iters must be >= 1, got {chunk_iters}")
+        # align the round size up to the decision cadence: a chunk below
+        # ``decide_every`` would make step_n a round-aligned no-op (and
+        # this loop livelock); rounding up preserves "at most chunk_iters
+        # per round" spirit at the configured cadence granularity
+        r = self.config.decide_every
+        chunk_iters = -(-chunk_iters // r) * r
         needs_more, _ = self._needs_more_fn(decide, it_cap,
                                             lam_min=state.lam_min,
                                             lam_max=state.lam_max)
@@ -650,7 +738,7 @@ class BIFSolver:
         state = self.init_state(op, u, lam_min=lam_min, lam_max=lam_max,
                                 probe=probe, basis_rows=num_iters + 1,
                                 coeff_rows=num_iters)
-        rec = self._recurrence()
+        stepfn = self._stepper()
         scale = state.st.u_norm_sq
 
         def estimates(st, coeffs):
@@ -671,7 +759,7 @@ class BIFSolver:
             st, basis, coeffs, step = carry
             st1, basis1, coeffs1 = self._advance(state.op, st, state.lam_min,
                                                  state.lam_max, basis,
-                                                 coeffs, step, rec)
+                                                 coeffs, step, stepfn)
             return (st1, basis1, coeffs1, step + 1), estimates(st1, coeffs1)
 
         _, rest = jax.lax.scan(body, (state.st, state.basis, state.coeffs,
@@ -914,6 +1002,13 @@ class BIFSolver:
             raise NotImplementedError(
                 "reorth is not implemented for the two-system driver; "
                 "pair judges require reorth=False")
+        if self.config.decide_every != 1:
+            raise NotImplementedError(
+                "the gap-weighted pair driver re-picks which side to "
+                "refine from the bracket every iteration, so its decision "
+                "rule cannot be deferred; pair judges require "
+                "decide_every=1 (the batched kdpp/double-greedy judges "
+                "support any cadence)")
         if lam_min is None or lam_max is None:
             _, _, lmn_a, lmx_a = self.prepare(op_a, u, lam_min, lam_max)
             _, _, lmn_b, lmx_b = self.prepare(op_b, v, lam_min, lam_max)
@@ -938,7 +1033,7 @@ class BIFSolver:
         lam_min, lam_max = self._prepare_pair(op_a, u, op_b, v, lam_min,
                                               lam_max)
         max_iters = self.config.max_iters
-        rec = self._recurrence()
+        stepfn = self._stepper()
         cfg = self.config
         op_a = _ops.configure_backend(op_a, cfg.backend, cfg.pallas_interpret)
         op_b = _ops.configure_backend(op_b, cfg.backend, cfg.pallas_interpret)
@@ -959,8 +1054,8 @@ class BIFSolver:
             pick = pick_a(st)
             pick = (pick & ~st.a.done & (st.a.it < max_iters)) | \
                    (st.b.done | (st.b.it >= max_iters))
-            a1 = _gql.gql_step(op_a, st.a, lam_min, lam_max, recurrence=rec)
-            b1 = _gql.gql_step(op_b, st.b, lam_min, lam_max, recurrence=rec)
+            a1 = stepfn(op_a, st.a, lam_min, lam_max, None)
+            b1 = stepfn(op_b, st.b, lam_min, lam_max, None)
             nm = needs_more(st)
             return PairState(a=tree_freeze(a1, st.a, ~(nm & pick)),
                              b=tree_freeze(b1, st.b, ~(nm & ~pick)))

@@ -19,21 +19,17 @@ from jax.experimental import pallas as pl
 _EPS = 1e-30
 
 
-def _kernel(alpha_ref, beta_ref, betap_ref, g_ref, c_ref, delta_ref,
-            dlr_ref, drr_ref, lmin_ref, lmax_ref,
-            g_o, c_o, delta_o, dlr_o, drr_o, grr_o, glr_o, glo_o):
-    alpha_n = alpha_ref[...]
-    beta_n = beta_ref[...]
-    beta_p = betap_ref[...]
-    g = g_ref[...]
-    c = c_ref[...]
-    lam_min = lmin_ref[...]
-    lam_max = lmax_ref[...]
-
+def recurrence_math(alpha_n, beta_n, beta_p, g, c, delta, d_lr, d_rr,
+                    lam_min, lam_max):
+    """Traced arithmetic of one Alg. 5 recurrence update, written for
+    in-kernel use (plain jnp elementwise ops on values, not refs). Shared
+    by the standalone ``gql_update`` kernel below and the fused step
+    megakernel (``kernels/lanczos_step.py``); the oracle is
+    ``repro.core.gql.recurrence_update``."""
     b2p = beta_p * beta_p
-    delta_s = jnp.maximum(delta_ref[...], _EPS)
-    dlr_s = jnp.maximum(dlr_ref[...], _EPS)
-    drr_s = jnp.minimum(drr_ref[...], -_EPS)
+    delta_s = jnp.maximum(delta, _EPS)
+    dlr_s = jnp.maximum(d_lr, _EPS)
+    drr_s = jnp.minimum(d_rr, -_EPS)
 
     den_g = delta_s * (alpha_n * delta_s - b2p)
     g_new = g + b2p * (c * c) / jnp.maximum(den_g, _EPS)
@@ -62,14 +58,18 @@ def _kernel(alpha_ref, beta_ref, betap_ref, g_ref, c_ref, delta_ref,
                          jnp.minimum(den, -_EPS))
         return g_new + b2_hat * c2 / safe
 
-    g_o[...] = g_new
-    c_o[...] = c_new
-    delta_o[...] = delta_new
-    dlr_o[...] = dlr_new
-    drr_o[...] = drr_new
-    grr_o[...] = sm(alpha_rr, b2)
-    glr_o[...] = sm(alpha_lr, b2)
-    glo_o[...] = sm(alpha_lo, b2_lo)
+    return (g_new, c_new, delta_new, dlr_new, drr_new,
+            sm(alpha_rr, b2), sm(alpha_lr, b2), sm(alpha_lo, b2_lo))
+
+
+def _kernel(alpha_ref, beta_ref, betap_ref, g_ref, c_ref, delta_ref,
+            dlr_ref, drr_ref, lmin_ref, lmax_ref,
+            g_o, c_o, delta_o, dlr_o, drr_o, grr_o, glr_o, glo_o):
+    (g_o[...], c_o[...], delta_o[...], dlr_o[...], drr_o[...],
+     grr_o[...], glr_o[...], glo_o[...]) = recurrence_math(
+        alpha_ref[...], beta_ref[...], betap_ref[...], g_ref[...],
+        c_ref[...], delta_ref[...], dlr_ref[...], drr_ref[...],
+        lmin_ref[...], lmax_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))

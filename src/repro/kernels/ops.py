@@ -11,11 +11,21 @@ import jax
 from . import bilinear_matvec as _bmv
 from . import flash_attention as _fa
 from . import gql_update as _gu
+from . import lanczos_step as _ls
 from . import spmv_bell as _sb
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def gql_step_fused(op, st, lam_min, lam_max, basis=None, *,
+                   interpret: bool | None = None):
+    """Fused Lanczos+GQL step megakernel (one pallas_call per iteration);
+    falls back to the reference composition for non-sandwich operators."""
+    itp = _default_interpret() if interpret is None else interpret
+    return _ls.gql_step_fused(op, st, lam_min, lam_max, basis=basis,
+                              interpret=itp)
 
 
 def fused_matvec(a, x, *, bm: int = 128, bn: int = 128,

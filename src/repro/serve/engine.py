@@ -300,8 +300,9 @@ class BIFEngine:
     Requests accumulate via ``submit``; ``flush`` serves them through a
     fixed pool of ``max_batch`` quadrature lanes. Each scheduler round
     admits queued requests into free lanes (FIFO), steps the WHOLE pool
-    by ``chunk_iters`` quadrature iterations through the resumable
-    runtime (one stacked matvec per iteration; resolved lanes frozen
+    by ``chunk_iters`` quadrature iterations (aligned up to a whole
+    number of ``decide_every`` rounds) through the resumable runtime
+    (one stacked matvec per iteration; resolved lanes frozen
     bit-exactly), then retires every lane whose decision resolved — or
     whose per-request iteration/deadline budget ran out — and backfills
     the vacated lanes from the queue mid-flight. A straggler bracket
@@ -332,7 +333,12 @@ class BIFEngine:
             else BIFSolver.create(max_iters=64, rtol=1e-3)
         self.mesh = mesh
         self.lane_axis = lane_axis
-        self.chunk_iters = max(1, int(chunk_iters))
+        # step_n quantises to whole decide_every rounds — align the
+        # serving chunk UP to the cadence so every flush makes progress
+        # (a chunk smaller than one round would be a no-op and livelock
+        # the pool)
+        r = self.solver.config.decide_every
+        self.chunk_iters = -(-max(1, int(chunk_iters)) // r) * r
         max_batch = int(max_batch)
         if mesh is not None:
             # padded flushes must round up to num_devices x lanes_per_device

@@ -41,10 +41,9 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES[dtype]
 
 
-def collective_bytes(hlo_text: str) -> dict:
-    """Returns {op_kind: wire_bytes} plus 'total' and 'count'."""
-    out: dict = defaultdict(float)
-    count = 0
+def _iter_collective_lines(hlo_text: str):
+    """Yields ``(kind, stripped_line)`` per collective op instruction
+    (async ``-start``/``-done`` pairs counted once)."""
     for line in hlo_text.splitlines():
         s = line.strip()
         if "=" not in s:
@@ -60,6 +59,14 @@ def collective_bytes(hlo_text: str) -> dict:
             continue
         if re.search(rf"\b{kind}-done\(", rhs):
             continue  # avoid double counting async pairs
+        yield kind, s
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_kind: wire_bytes} plus 'total' and 'count'."""
+    out: dict = defaultdict(float)
+    count = 0
+    for kind, s in _iter_collective_lines(hlo_text):
         shapes = _SHAPE_RE.findall(s)
         if not shapes:
             continue
@@ -68,6 +75,21 @@ def collective_bytes(hlo_text: str) -> dict:
         count += 1
     out["total"] = sum(v for k, v in out.items() if k in _COLLECTIVES)
     out["count"] = count
+    return dict(out)
+
+
+def collective_counts(hlo_text: str) -> dict:
+    """{op_kind: number of collective instructions} plus 'count'.
+
+    A ``lax.while`` body lowers to ONE computation in compiled HLO, so
+    for a loop-dominated program the module-wide census reads as
+    "collectives per loop trip plus loop-boundary collectives" — the
+    number the round-cadence work pins (one packed all-gather per
+    ``decide_every`` round, zero psum; DESIGN.md Sec. 11)."""
+    out: dict = defaultdict(int)
+    for kind, _ in _iter_collective_lines(hlo_text):
+        out[kind] += 1
+    out["count"] = sum(v for k, v in out.items() if k in _COLLECTIVES)
     return dict(out)
 
 

@@ -198,6 +198,107 @@ def test_ql004_psum_continue_flag_is_fine(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# QL007: collective cadence in core/ loop bodies
+
+
+_QL007_BAD = """
+    import jax
+    import jax.numpy as jnp
+
+    def drive(xs):
+        def cond(c):
+            return c[1] < 3
+
+        def body(c):
+            g = jax.lax.all_gather(c[0], "lanes")
+            f = jax.lax.psum(jnp.any(g).astype(jnp.int32), "lanes")
+            return (g.sum(axis=0), c[1] + f)
+
+        return jax.lax.while_loop(cond, body, (xs, 0))
+    """
+
+
+def test_ql007_raw_collectives_in_core_loop_body(tmp_path):
+    findings = _lint(tmp_path, ("src", "repro", "core", "m.py"),
+                     _QL007_BAD)
+    ql7 = [f for f in findings if f.rule == "QL007"]
+    # one finding PER collective call site, anchored at its own line
+    assert sorted(f.message.split()[1] for f in ql7) == \
+        ["all_gather", "psum"]
+
+
+def test_ql007_transitive_through_module_helper(tmp_path):
+    # QL004's same-scope walk cannot see a module-level helper; QL007's
+    # module-wide walk must
+    findings = _lint(tmp_path, ("src", "repro", "core", "m.py"), """
+        import jax
+
+        def helper(x):
+            return jax.lax.all_gather(x, "lanes")
+
+        def drive(xs):
+            def cond(c):
+                return c[1] < 3
+
+            def body(c):
+                g = helper(c[0])
+                return (g.sum(axis=0), c[1] + 1)
+
+            return jax.lax.while_loop(cond, body, (xs, 0))
+        """)
+    ql7 = [f for f in findings if f.rule == "QL007"]
+    assert len(ql7) == 1 and "all_gather" in ql7[0].message
+    # anchored at the helper's gather line, where a suppression lives
+    assert ql7[0].line == 5
+
+
+def test_ql007_suppressed_cadence_helper_is_fine(tmp_path):
+    findings = _lint(tmp_path, ("src", "repro", "core", "m.py"), """
+        import jax
+
+        def _round_gather(x):
+            return jax.lax.all_gather(x, "lanes", tiled=True)  # quadlint: disable=QL007 -- the sanctioned per-round collective
+
+        def drive(xs):
+            def cond(c):
+                return c[1] < 3
+
+            def body(c):
+                g = _round_gather(c[0])
+                return (g.sum(axis=0), c[1] + 1)
+
+            return jax.lax.while_loop(cond, body, (xs, 0))
+        """)
+    assert "QL007" not in _rules(findings)
+
+
+def test_ql007_collective_outside_the_loop_is_fine(tmp_path):
+    findings = _lint(tmp_path, ("src", "repro", "core", "m.py"), """
+        import jax
+
+        def boundary(x):
+            return jax.lax.all_gather(x, "lanes")
+
+        def drive(xs):
+            def cond(c):
+                return c[1] < 3
+
+            def body(c):
+                return (c[0] * 2.0, c[1] + 1)
+
+            out = jax.lax.while_loop(cond, body, (xs, 0))
+            return boundary(out[0])
+        """)
+    assert "QL007" not in _rules(findings)
+
+
+def test_ql007_only_applies_to_core(tmp_path):
+    findings = _lint(tmp_path, ("src", "repro", "serve", "m.py"),
+                     _QL007_BAD)
+    assert "QL007" not in _rules(findings)
+
+
+# ---------------------------------------------------------------------------
 # QL005: removed-shim imports stay removed
 
 
@@ -330,6 +431,35 @@ def test_ql001_excluded_field_registry_is_live(monkeypatch):
     findings = _ql001()
     assert any("_drive_sharded" in f.message and "'basis'" in f.message
                for f in findings)
+
+
+def test_ql001_round_body_delegation_credit():
+    """PR 7 moved the per-substep freeze into ``_round_body``; a handler
+    inherits that freeze coverage ONLY if it actually references the
+    round driver — a handler that skips it must freeze for itself."""
+    import ast as _ast
+
+    from repro.analysis.contracts import _round_body_frozen
+
+    tree = _ast.parse(textwrap.dedent("""
+        def _round_body(op, stepfn):
+            def substep(i, carry):
+                st = tree_freeze(st1, st, frozen)
+                coeffs = tree_freeze(coeffs1, coeffs, frozen)
+                return carry
+            return substep
+
+        def delegating(self, state):
+            round_fn = self._round_body(op, stepfn)
+            return round_fn
+
+        def freeloading(self, state):
+            return state
+    """))
+    defs = {n.name: n for n in tree.body}
+    credited = _round_body_frozen(defs["delegating"], tree)
+    assert {"st", "coeffs"} <= credited
+    assert _round_body_frozen(defs["freeloading"], tree) == set()
 
 
 # ---------------------------------------------------------------------------

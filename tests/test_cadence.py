@@ -1,0 +1,195 @@
+"""Decision-round cadence (``SolverConfig.decide_every``, DESIGN.md
+Sec. 11).
+
+Thm. 4.2's nested-bracket monotonicity makes deferring the stopping rule
+R iterations sound: a lane pays at most R-1 extra contractions and a
+certified decision never flips. These tests pin exactly that contract:
+
+  * judge decisions + certificates are bit-identical at every cadence;
+  * per-lane iteration counts stay within R-1 of the R=1 run for
+    PER-LANE decides (threshold/tolerance). The bound is deliberately
+    NOT asserted for the argmax race: cross-lane coupling means a rival
+    that keeps tightening can resolve the race EARLIER under R>1 — only
+    the winner and its certificate are invariant;
+  * the resume invariant ``resume(step_n(st, k)) == resume(st)`` holds
+    bit-exactly at every cadence because states stay round-aligned
+    (``step_n`` quantizes n down to whole rounds);
+  * the cadence plumbing guards: config validation, the pair-driver
+    rejection, ``resume_chunked`` chunk alignment.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BIFSolver, Dense, SolverConfig, sparse_from_dense
+from conftest import make_spd
+
+CADENCES = [1, 2, 4]
+
+
+def _problem(n=33, kappa=150.0, seed=0, lanes=4):
+    a = make_spd(n, kappa=kappa, seed=seed, density=0.4)
+    w = np.linalg.eigvalsh(a)
+    us = np.random.default_rng(seed + 1).standard_normal((lanes, n))
+    return a, jnp.asarray(us), float(w[0] * 0.5), float(w[-1] * 2.5)
+
+
+def _solvers(**kw):
+    return {r: BIFSolver.create(decide_every=r, **kw) for r in CADENCES}
+
+
+def test_tolerance_solve_certificates_invariant_iterations_bounded():
+    a, us, lmn, lmx = _problem(seed=3)
+    op = Dense(jnp.asarray(a))
+    results = {r: s.solve(op, us, lam_min=lmn, lam_max=lmx)
+               for r, s in _solvers(max_iters=30, rtol=1e-6).items()}
+    ref = results[1]
+    assert np.all(np.asarray(ref.certified))
+    for r in CADENCES[1:]:
+        got = results[r]
+        np.testing.assert_array_equal(np.asarray(got.certified),
+                                      np.asarray(ref.certified), f"R={r}")
+        np.testing.assert_array_equal(np.asarray(got.converged),
+                                      np.asarray(ref.converged), f"R={r}")
+        extra = np.asarray(got.iterations) - np.asarray(ref.iterations)
+        assert np.all(extra >= 0), f"R={r}: cadence lost iterations"
+        assert np.all(extra <= r - 1), \
+            f"R={r}: deferring the decide must cost at most R-1 " \
+            f"contractions (Thm. 4.2), got {extra}"
+        # the deferred lanes kept contracting: the nested brackets can
+        # only tighten, never cross the R=1 bracket
+        assert np.all(np.asarray(got.lower) >= np.asarray(ref.lower)
+                      - 1e-30)
+        assert np.all(np.asarray(got.upper) <= np.asarray(ref.upper)
+                      + 1e-30)
+
+
+def test_threshold_judge_decisions_invariant_across_cadence():
+    a, us, lmn, lmx = _problem(seed=5)
+    op = sparse_from_dense(a)
+    true = np.einsum("ki,ki->k", np.asarray(us),
+                     np.linalg.solve(a, np.asarray(us).T).T)
+    t = jnp.asarray(true * np.array([0.7, 0.999, 1.001, 1.3]))
+    results = {r: s.judge_threshold(op, us, t, lam_min=lmn, lam_max=lmx)
+               for r, s in _solvers(max_iters=35).items()}
+    ref = results[1]
+    for r in CADENCES[1:]:
+        got = results[r]
+        np.testing.assert_array_equal(np.asarray(got.decision),
+                                      np.asarray(ref.decision), f"R={r}")
+        np.testing.assert_array_equal(np.asarray(got.certified),
+                                      np.asarray(ref.certified), f"R={r}")
+        extra = np.asarray(got.iterations) - np.asarray(ref.iterations)
+        assert np.all((extra >= 0) & (extra <= r - 1)), f"R={r}: {extra}"
+
+
+def test_argmax_winner_and_certificate_invariant_across_cadence():
+    n = 32
+    rng = np.random.default_rng(0)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    evals = np.geomspace(1e-3, 1.0, n)
+    a = (q * evals) @ q.T
+    us = jnp.asarray(rng.standard_normal((6, n)))
+    true = np.einsum("ki,ki->k", np.asarray(us),
+                     np.linalg.solve(a, np.asarray(us).T).T)
+    results = {r: s.judge_argmax(Dense(jnp.asarray(a)), us,
+                                 lam_min=1e-3 * 0.99, lam_max=1.01)
+               for r, s in _solvers(max_iters=40).items()}
+    for r in CADENCES:
+        got = results[r]
+        assert int(got.index) == int(np.argmax(true)), f"R={r}"
+        assert bool(got.certified), f"R={r}"
+        # no iteration-count assertion: the race's cross-lane coupling
+        # means R>1 runs may resolve EARLIER than R=1 (rivals keep
+        # tightening past their R=1 freeze point)
+
+
+@pytest.mark.parametrize("r", CADENCES)
+def test_resume_invariant_at_every_cadence(r):
+    """resume(step_n(st, k)) == resume(st) bit-exact, including k values
+    that are not multiples of R (step_n quantizes them down to whole
+    rounds, so the interrupted state is always round-aligned)."""
+    a, us, lmn, lmx = _problem(seed=7)
+    op = sparse_from_dense(a)
+    s = BIFSolver.create(max_iters=30, rtol=1e-6, decide_every=r)
+    ref = s.resume(s.init_state(op, us, lam_min=lmn, lam_max=lmx))
+    for k in (1, 2, 3, 5):
+        state = s.init_state(op, us, lam_min=lmn, lam_max=lmx)
+        state = s.step_n(state, k)
+        if k < r:
+            # quantized to zero rounds: a bounded advance below one
+            # round is a no-op, never a mid-round checkpoint
+            assert state.step == 0
+        got = s.resume(state)
+        np.testing.assert_array_equal(np.asarray(got.lower),
+                                      np.asarray(ref.lower), f"k={k}")
+        np.testing.assert_array_equal(np.asarray(got.upper),
+                                      np.asarray(ref.upper), f"k={k}")
+        np.testing.assert_array_equal(np.asarray(got.it),
+                                      np.asarray(ref.it), f"k={k}")
+        # round alignment: the step counter is always a multiple of R
+        assert int(got.step) % r == 0
+
+
+def test_resume_chunked_aligns_chunks_up_to_the_cadence():
+    """chunk_iters below/offset from R cannot livelock: the chunk is
+    aligned UP to a whole number of rounds and the chunked drive stays
+    bit-exact with the monolithic one."""
+    a, us, lmn, lmx = _problem(seed=11, kappa=400.0)
+    op = sparse_from_dense(a)
+    s = BIFSolver.create(max_iters=30, rtol=1e-8, decide_every=4)
+    ref = s.resume(s.init_state(op, us, lam_min=lmn, lam_max=lmx))
+    for chunk in (1, 3, 6):  # all misaligned with R=4
+        chk = s.resume_chunked(
+            s.init_state(op, us, lam_min=lmn, lam_max=lmx),
+            chunk_iters=chunk)
+        np.testing.assert_array_equal(np.asarray(ref.lower),
+                                      np.asarray(chk.lower), f"chunk={chunk}")
+        np.testing.assert_array_equal(np.asarray(ref.it),
+                                      np.asarray(chk.it), f"chunk={chunk}")
+
+
+def test_cadence_with_matfun_states():
+    """fn != 'inv' (coefficient-history states) honors the cadence: the
+    retrospective logdet bracket certifies identically at every R."""
+    a, us, lmn, lmx = _problem(n=24, seed=13)
+    op = Dense(jnp.asarray(a))
+    results = {r: s.solve(op, us, lam_min=lmn, lam_max=lmx)
+               for r, s in _solvers(max_iters=24, rtol=1e-5,
+                                    fn="log", precondition="none").items()}
+    ref = results[1]
+    sign, logdet = np.linalg.slogdet(a)
+    assert sign > 0
+    for r in CADENCES:
+        got = results[r]
+        np.testing.assert_array_equal(np.asarray(got.certified),
+                                      np.asarray(ref.certified), f"R={r}")
+        extra = np.asarray(got.iterations) - np.asarray(ref.iterations)
+        assert np.all((extra >= 0) & (extra <= r - 1)), f"R={r}: {extra}"
+        # the bracket still contains the truth at every cadence
+        true = _logquad(a, np.asarray(us))
+        lo = np.minimum(np.asarray(got.lower), np.asarray(got.upper))
+        hi = np.maximum(np.asarray(got.lower), np.asarray(got.upper))
+        assert np.all((lo <= true + 1e-8) & (true <= hi + 1e-8)), f"R={r}"
+
+
+def _logquad(a, us):
+    w, v = np.linalg.eigh(a)
+    proj = us @ v
+    return np.einsum("ki,ki->k", proj, proj * np.log(w))
+
+
+def test_cadence_config_and_pair_driver_guards():
+    with pytest.raises(ValueError, match="decide_every"):
+        SolverConfig(decide_every=0)
+    a, us, lmn, lmx = _problem(seed=17)
+    op = Dense(jnp.asarray(a))
+    s = BIFSolver.create(max_iters=20, decide_every=2)
+    with pytest.raises(NotImplementedError, match="decide_every"):
+        s.solve_pair(op, us[0], op, us[1],
+                     resolved=lambda ps: jnp.ones((), bool),
+                     pick_a=lambda ps: jnp.ones((), bool),
+                     lam_min=lmn, lam_max=lmx)
+    # step_n below one round is the identity on the checkpoint object
+    st = s.init_state(op, us, lam_min=lmn, lam_max=lmx)
+    assert s.step_n(st, 1) is st
