@@ -1,0 +1,68 @@
+"""Incremental greedy MAP (DESIGN.md Sec. 12): carried Cholesky factor
+vs warm-started brackets vs from-scratch quadrature.
+
+All three drivers select the SAME set (certified-identical argmax races;
+asserted here and pinned in tests/test_update.py) — what changes is how
+much quadrature each round pays. ``warm_start`` banks the previous
+round's score upper bounds; ``incremental`` additionally reads exact
+scores off the carried factor, seeding BOTH bracket sides so every lane
+resolves at its first decide check: total iterations hit the N*T floor.
+The iteration counts and wall times per T-round run land in
+BENCH_incremental_greedy.json.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Dense, greedy_map
+
+from .common import row, time_fn
+
+from .conftest_shim import make_spd
+
+
+def _measure(op, t, lmn, lmx, n, **kw):
+    f = jax.jit(lambda: greedy_map(op, t, lmn, lmx, max_iters=n + 2, **kw))
+    secs = time_fn(f, repeats=3, warmup=1)
+    res = f()
+    return secs, np.asarray(res.order), int(res.quad_iterations), \
+        int(res.uncertified)
+
+
+def run(quick: bool = True):
+    rows, tables = [], {}
+    sizes = [(64, 16)] if quick else [(64, 16), (256, 32)]
+    for n, t in sizes:
+        for kappa in ([1e2, 1e4] if quick else [1e2, 1e4, 1e5]):
+            a = make_spd(n, kappa=kappa, seed=5)
+            w = np.linalg.eigvalsh(a)
+            lmn, lmx = float(w[0] * 0.99), float(w[-1] * 1.01)
+            op = Dense(jnp.asarray(a))
+            s_c, o_c, it_c, u_c = _measure(op, t, lmn, lmx, n)
+            s_w, o_w, it_w, u_w = _measure(op, t, lmn, lmx, n,
+                                           warm_start=True)
+            s_i, o_i, it_i, u_i = _measure(op, t, lmn, lmx, n,
+                                           incremental=True)
+            same = bool(np.array_equal(o_c, o_w)
+                        and np.array_equal(o_c, o_i))
+            name = f"greedy_n{n}_T{t}_kappa{kappa:g}"
+            rows.append(row(
+                name, s_i * 1e6,
+                f"iters_scratch={it_c};iters_warm={it_w};iters_inc={it_i};"
+                f"same_selection={same};speedup_vs_warm={s_w / s_i:.2f}x"))
+            tables[name] = {
+                "n": n, "T": t, "kappa": kappa,
+                "us_scratch": round(s_c * 1e6, 2),
+                "us_warm": round(s_w * 1e6, 2),
+                "us_incremental": round(s_i * 1e6, 2),
+                "iters_scratch": it_c, "iters_warm": it_w,
+                "iters_incremental": it_i,
+                "iters_floor_NT": n * t,
+                "same_selection": same,
+                "uncertified": u_c + u_w + u_i,
+            }
+            assert same, f"{name}: selections diverged"
+            assert it_i < it_w <= it_c, f"{name}: no iteration savings"
+    return rows, tables

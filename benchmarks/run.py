@@ -32,12 +32,13 @@ MODULES = [
     "sharded_judges",         # 1-dev vs 8-virtual-device lanes (Sec. 7)
     "engine_throughput",      # lockstep vs continuous batching (Sec. 8)
     "trace_logdet",           # bracketed logdet vs dense slogdet (Sec. 9)
+    "incremental_greedy",     # factor carry vs warm vs scratch (Sec. 12)
 ]
 
 # Suites whose tables are ALSO written to BENCH_<name>.json at the repo
 # root, so the perf trajectory is tracked in-tree across PRs.
 ROOT_TRACKED = {"batched_judges", "sharded_judges", "engine_throughput",
-                "trace_logdet"}
+                "trace_logdet", "incremental_greedy"}
 
 
 def main() -> None:

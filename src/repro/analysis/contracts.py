@@ -46,6 +46,7 @@ _ROLE_SUFFIX = {
     "matfun": ("src", "repro", "core", "matfun.py"),
     "sharded": ("src", "repro", "core", "sharded.py"),
     "engine": ("src", "repro", "serve", "engine.py"),
+    "update": ("src", "repro", "core", "update.py"),
 }
 _ROLE_MODULE = {
     "solver": "repro.core.solver",
@@ -53,6 +54,7 @@ _ROLE_MODULE = {
     "matfun": "repro.core.matfun",
     "sharded": "repro.core.sharded",
     "engine": "repro.serve.engine",
+    "update": "repro.core.update",
 }
 
 
@@ -433,4 +435,76 @@ def check_contracts(contexts: Iterable[FileContext]) -> list:
                     matfun_rel, upd.lineno, RULE,
                     f"update_coeffs neither writes CoeffHistory field "
                     f"'{f}' nor lists it in COEFF_REPLACE_EXCLUDED"))
+
+    # ---- ChainFactor: pytree registration + carry writers -------------
+    # The incremental-chain factor (core/update.py, DESIGN.md Sec. 12)
+    # is carried through lax.scan rounds by its two writers; a field
+    # added to the dataclass but not registered or not rewritten by a
+    # writer would silently drop out of the carry.
+    try:
+        update_mod = _import_role(roles, "update")
+    except Exception as e:  # pragma: no cover - import environment broken
+        rel, _ = _parse(roles, "update")
+        findings.append(Finding(rel, 1, RULE,
+                                f"cannot import repro.core.update to read "
+                                f"the live ChainFactor fields: {e!r}"))
+        return findings
+    update_rel, update_tree = _parse(roles, "update")
+    ffields = tuple(f.name for f in
+                    dataclasses.fields(update_mod.ChainFactor))
+    fline = _class_line(update_tree, "ChainFactor")
+    reg = None
+    for node in ast.walk(update_tree):
+        if isinstance(node, ast.Call) \
+                and _call_name(node) == "register_dataclass":
+            reg = node
+            break
+    if reg is None:
+        findings.append(Finding(
+            update_rel, fline, RULE,
+            "ChainFactor is not register_dataclass-ed (it would stop "
+            "being a pytree and fall out of the scan carry / "
+            "tree_select accept-reject)"))
+    else:
+        declared: set = set()
+        for kw in reg.keywords:
+            if kw.arg in ("data_fields", "meta_fields") \
+                    and isinstance(kw.value, (ast.List, ast.Tuple)):
+                declared.update(e.value for e in kw.value.elts
+                                if isinstance(e, ast.Constant))
+        for f in ffields:
+            if f not in declared:
+                findings.append(Finding(
+                    update_rel, reg.lineno, RULE,
+                    f"ChainFactor field '{f}' missing from its "
+                    f"register_dataclass field lists — the pytree would "
+                    f"silently drop it"))
+    factor_excluded = _tuple_literal(update_mod,
+                                     "FACTOR_REPLACE_EXCLUDED") or ()
+    if _tuple_literal(update_mod, "FACTOR_REPLACE_EXCLUDED") is None:
+        findings.append(Finding(
+            update_rel, fline, RULE,
+            "`FACTOR_REPLACE_EXCLUDED` registry missing from "
+            "core/update.py (fields the carry writers deliberately "
+            "never rewrite)"))
+    for writer in ("extend", "downdate"):
+        fn = _find_def(update_tree, writer)
+        if fn is None:
+            findings.append(Finding(
+                update_rel, fline, RULE,
+                f"{writer} not found (a ChainFactor carry writer)"))
+            continue
+        written = set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if _call_name(node) in ("replace", "ChainFactor"):
+                written.update(kw.arg for kw in node.keywords if kw.arg)
+        for f in ffields:
+            if f not in written and f not in factor_excluded:
+                findings.append(Finding(
+                    update_rel, fn.lineno, RULE,
+                    f"{writer} neither writes ChainFactor field '{f}' "
+                    f"nor lists it in FACTOR_REPLACE_EXCLUDED — the "
+                    f"carry would silently keep a stale value"))
     return findings

@@ -81,7 +81,7 @@ QL005 (``python -m repro.analysis``) keeps them from coming back.
 """
 from . import bounds, double_greedy, dpp, gql, lanczos, \
     loop_utils, matfun, operators, sharded, solver, spectrum, \
-    trace  # noqa: F401
+    trace, update  # noqa: F401
 
 from .solver import ArgmaxResult, BIFSolver, JudgeResult, PairState, \
     QuadratureTrace, QuadState, SolveResult, SolverConfig  # noqa: F401
@@ -95,6 +95,7 @@ from .operators import Dense, Jacobi, Masked, MatvecFn, Shifted, SparseBELL, \
     stack_masks, stack_ops  # noqa: F401
 from .dpp import ChainState, GreedyMapResult, LogLikelihoodResult, \
     greedy_map, log_likelihood, sample_dpp, sample_kdpp  # noqa: F401
+from .update import ChainFactor  # noqa: F401
 from .double_greedy import DGResult, double_greedy as run_double_greedy  # noqa: F401
 from .spectrum import SpectrumBounds, gershgorin_bounds, lanczos_extremal, \
     ridge_bounds  # noqa: F401

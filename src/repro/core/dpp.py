@@ -21,13 +21,14 @@ w.r.t. the DPP). We implement the Metropolis rule — threshold
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from . import operators as _ops
 from . import solver as _solver
+from . import update as _update
 
 Array = jax.Array
 
@@ -58,12 +59,16 @@ class ChainState(NamedTuple):
     mask: Array  # (..., N) float {0,1}
     key: Array
     stats: ChainStats
+    # Optional ChainFactor of L_Y carried across accepted moves
+    # (incremental scoring, DESIGN.md Sec. 12); None keeps the
+    # quadrature/exact paths and the pre-PR-8 pytree leaves.
+    factor: Any = None
 
 
-def init_chain(key: Array, init_mask: Array) -> ChainState:
+def init_chain(key: Array, init_mask: Array, factor=None) -> ChainState:
     z = jnp.zeros((), jnp.int32)
     return ChainState(mask=init_mask.astype(jnp.float32), key=key,
-                      stats=ChainStats(z, z, z, z))
+                      stats=ChainStats(z, z, z, z), factor=factor)
 
 
 def _column(op, y: Array, n: int) -> Array:
@@ -86,7 +91,23 @@ def _exact_bif(op, mask: Array, u: Array) -> Array:
 def dpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
              exact: bool = False,
              solver: _solver.BIFSolver | None = None) -> ChainState:
-    """One add/remove MH move (Alg. 3)."""
+    """One add/remove MH move (Alg. 3).
+
+    When ``state.factor`` carries a :class:`~repro.core.update.ChainFactor`
+    of L_Y (``init_chain(..., factor=update.from_mask(op, mask))``), the
+    Schur comparison is evaluated EXACTLY from the maintained factor —
+    two O(|Y|^2) triangular solves instead of a quadrature solve — and
+    the factor is carried across accepted moves (downdate on remove,
+    extend on add; DESIGN.md Sec. 12). Accept/reject decisions match the
+    ``exact=True`` oracle; ``stats.quad_iterations`` stays flat.
+    """
+    incremental = state.factor is not None
+    if incremental and exact:
+        raise ValueError(
+            "state.factor already scores moves exactly from the "
+            "maintained Cholesky factor; exact=True would shadow it — "
+            "drop the factor (init_chain(..., factor=None)) for the "
+            "dense-solve oracle")
     n = op.n
     key, k_y, k_p = jax.random.split(state.key, 3)
     y = jax.random.randint(k_y, (), 0, n)
@@ -104,7 +125,16 @@ def dpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
     # p < 1/q <=> q < 1/p <=> l_yy - 1/p < bif.
     t = jnp.where(in_y, l_yy - 1.0 / jnp.maximum(p, 1e-12), l_yy - p)
     mop = _ops.Masked(op, m_wo)
-    if exact:
+    f_wo = None
+    if incremental:
+        # f_wo represents Y \ {y} either way: downdate of an absent item
+        # is the exact identity. Both move outcomes reuse it below.
+        f_wo = _update.downdate(state.factor, y)
+        bif = _update.bif(f_wo, u)
+        res = _solver.JudgeResult(decision=t < bif,
+                                  certified=f_wo.ok,
+                                  iterations=jnp.zeros((), jnp.int32))
+    elif exact:
         bif = _exact_bif(op, m_wo, u)
         decision = t < bif
         res = _solver.JudgeResult(decision=decision,
@@ -118,13 +148,22 @@ def dpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
     new_mask = jnp.where(in_y,
                          jnp.where(accept, m_wo, state.mask),
                          jnp.where(accept, state.mask + hot, state.mask))
+    new_factor = state.factor
+    if incremental:
+        # accepted remove keeps the downdated factor; accepted add
+        # extends it with y's (unmasked) column; reject restores the
+        # original — all branchless, the scan carry stays fixed-shape
+        grown = _update.tree_select(in_y, f_wo,
+                                    _update.extend(f_wo, col, y))
+        new_factor = _update.tree_select(accept, grown, state.factor)
     st = state.stats
     stats = ChainStats(steps=st.steps + 1,
                        accepts=st.accepts + accept.astype(jnp.int32),
                        quad_iterations=st.quad_iterations + res.iterations,
                        uncertified=st.uncertified
                        + (~res.certified).astype(jnp.int32))
-    return ChainState(mask=new_mask, key=key, stats=stats)
+    return ChainState(mask=new_mask, key=key, stats=stats,
+                      factor=new_factor)
 
 
 def kdpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
@@ -144,7 +183,20 @@ def kdpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
     in fixed-size decision rounds, carrying the unresolved systems'
     banked QuadState between rounds instead of re-solving (DESIGN.md
     Sec. 8) — the hook an async chain scheduler steps through.
-    Decisions are certified-identical every way."""
+    Decisions are certified-identical every way.
+
+    With ``state.factor`` set (a maintained
+    :class:`~repro.core.update.ChainFactor` of L_Y), both candidate BIFs
+    come EXACTLY off the factor of Y' = Y \\ {v} — one downdate plus two
+    triangular solves per move, zero quadrature iterations — and the
+    factor carries across accepted swaps (DESIGN.md Sec. 12)."""
+    incremental = state.factor is not None
+    if incremental and (exact or mesh is not None
+                        or chunk_iters is not None):
+        raise ValueError(
+            "state.factor scores the swap exactly from the maintained "
+            "factor (no quadrature lanes run) — exact/mesh/chunk_iters "
+            "do not apply; drop the factor to use those paths")
     if mesh is not None and (exact or not batched):
         raise ValueError(
             "mesh requires the batched driver: pass batched=True, "
@@ -167,14 +219,24 @@ def kdpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
     hot_v = jax.nn.one_hot(v, n, dtype=state.mask.dtype)
     hot_u = jax.nn.one_hot(uu, n, dtype=state.mask.dtype)
     m_wo = state.mask * (1.0 - hot_v)        # Y' = Y \ {v}
-    col_u = _column(op, uu, n) * m_wo
+    raw_u = _column(op, uu, n)               # unmasked: extend() reads the
+    #                                          full column of the base
+    col_u = raw_u * m_wo
     col_v = _column(op, v, n) * m_wo
     d = op.diag()
     # accept iff p (L_vv - bif_v) < L_uu - bif_u
     #        iff t := p L_vv - L_uu < p bif_v - bif_u   (Alg. 7)
     t = p * d[v] - d[uu]
     mop = _ops.Masked(op, m_wo)
-    if exact:
+    f_wo = None
+    if incremental:
+        f_wo = _update.downdate(state.factor, v)   # factor of Y'
+        bif_u = _update.bif(f_wo, col_u)
+        bif_v = _update.bif(f_wo, col_v)
+        res = _solver.JudgeResult(decision=t < p * bif_v - bif_u,
+                                  certified=f_wo.ok,
+                                  iterations=jnp.zeros((), jnp.int32))
+    elif exact:
         bif_u = _exact_bif(op, m_wo, col_u)
         bif_v = _exact_bif(op, m_wo, col_v)
         decision = t < p * bif_v - bif_u
@@ -195,24 +257,34 @@ def kdpp_step(op, state: ChainState, lam_min, lam_max, *, max_iters: int,
             mop, col_u, mop, col_v, t, p, lam_min=lam_min, lam_max=lam_max)
 
     new_mask = jnp.where(res.decision, m_wo + hot_u, state.mask)
+    new_factor = state.factor
+    if incremental:
+        new_factor = _update.tree_select(
+            res.decision, _update.extend(f_wo, raw_u, uu), state.factor)
     st = state.stats
     stats = ChainStats(steps=st.steps + 1,
                        accepts=st.accepts + res.decision.astype(jnp.int32),
                        quad_iterations=st.quad_iterations + res.iterations,
                        uncertified=st.uncertified
                        + (~res.certified).astype(jnp.int32))
-    return ChainState(mask=new_mask, key=key, stats=stats)
+    return ChainState(mask=new_mask, key=key, stats=stats,
+                      factor=new_factor)
 
 
 def run_chain(step_fn, op, key: Array, init_mask: Array, num_steps: int,
               lam_min, lam_max, *, max_iters: int, exact: bool = False,
-              solver: _solver.BIFSolver | None = None) -> ChainState:
-    """Drive ``num_steps`` moves under ``lax.scan`` (jit-friendly)."""
+              solver: _solver.BIFSolver | None = None,
+              factor=None) -> ChainState:
+    """Drive ``num_steps`` moves under ``lax.scan`` (jit-friendly).
+
+    ``factor`` (a ChainFactor of the INITIAL mask, e.g.
+    ``update.from_mask(op, init_mask)``) switches the step to the
+    incremental exact scorer and rides the scan carry."""
     def body(state, _):
         return step_fn(op, state, lam_min, lam_max, max_iters=max_iters,
                        exact=exact, solver=solver), None
 
-    state0 = init_chain(key, init_mask)
+    state0 = init_chain(key, init_mask, factor=factor)
     state, _ = jax.lax.scan(body, state0, None, length=num_steps)
     return state
 
@@ -230,7 +302,8 @@ def greedy_map(op, k: int, lam_min, lam_max, *, max_iters: int,
                exact: bool = False,
                solver: _solver.BIFSolver | None = None, mesh=None,
                lane_axis: str = "lanes",
-               warm_start: bool = False) -> GreedyMapResult:
+               warm_start: bool = False,
+               incremental: bool = False) -> GreedyMapResult:
     """Greedy MAP for the DPP (paper Alg. 4), batched over candidates.
 
     Per step, EVERY candidate's marginal gain  L_ii - u_i^T L_Y^-1 u_i
@@ -250,6 +323,19 @@ def greedy_map(op, k: int, lam_min, lam_max, *, max_iters: int,
     re-solving. Selections stay certified-identical; only iteration
     counts drop.
 
+    ``incremental=True`` additionally carries the small Cholesky factor
+    of L_Y across the scan rounds (:mod:`repro.core.update`, DESIGN.md
+    Sec. 12): each round it (a) reads the winner's exact gain off the
+    factor (no quadrature midpoint) and (b) tightens EVERY surviving
+    candidate's banked upper bound to its exact current score before the
+    argmax race admits it — the exact Schur complement is itself a valid
+    (the tightest) upper bound, so rivals freeze after their first
+    bracket and the winner certifies against exact rival scores.
+    Selections stay certified-identical to ``warm_start``-only and
+    from-scratch runs while total quadrature iterations drop further
+    (pinned in tests/test_update.py; tracked in
+    BENCH_incremental_greedy.json). Composes with ``mesh``.
+
     ``mesh`` shards the N candidate lanes across a lane mesh
     (``judge_argmax_sharded``, DESIGN.md Sec. 7): the race's dominance
     checks become cross-device reductions, selections stay certified-
@@ -259,6 +345,11 @@ def greedy_map(op, k: int, lam_min, lam_max, *, max_iters: int,
     if mesh is not None and exact:
         raise ValueError("mesh requires the quadrature path: the exact "
                          "scorer runs single-device (pass exact=False)")
+    if incremental and exact:
+        raise ValueError(
+            "incremental=True maintains the exact factor to ACCELERATE "
+            "the quadrature race; the exact scorer has no race to "
+            "accelerate (pass exact=False)")
     if mesh is not None:
         from . import sharded as _sharded
         quad_argmax = lambda mop_, u_, **kw: _sharded.judge_argmax_sharded(  # noqa: E731,E501
@@ -270,8 +361,13 @@ def greedy_map(op, k: int, lam_min, lam_max, *, max_iters: int,
     # candidate columns, once: row i of A (symmetric) = column i
     cols = op.matvec(jnp.eye(n, dtype=d.dtype))
 
+    use_prior = warm_start or incremental
+
     def step(carry, _):
-        mask, prior = carry
+        if incremental:
+            mask, prior, factor = carry
+        else:
+            mask, prior = carry
         u = cols * mask[None, :]            # lane i: col_i restricted to Y
         valid = mask < 0.5
         if exact:
@@ -281,25 +377,46 @@ def greedy_map(op, k: int, lam_min, lam_max, *, max_iters: int,
             gain, cert = score[idx], jnp.ones((), bool)
             iters = jnp.zeros((), jnp.int32)
         else:
+            if incremental:
+                # exact current scores off the maintained factor: the
+                # tightest valid uppers the race can be seeded with —
+                # AND, being exact, equally valid lowers. Seeded on both
+                # sides, every lane resolves at its first decide check
+                # (dominated or certified winner), so the race costs one
+                # iteration per lane instead of a full Lanczos.
+                ex = _update.gains(factor, d, cols)
+                prior = jnp.minimum(prior, ex)
             res = quad_argmax(_ops.Masked(op, mask), u, shift=d,
                               scale=-1.0, valid=valid,
-                              prior_upper=prior if warm_start else None,
+                              prior_upper=prior if use_prior else None,
+                              prior_lower=ex if incremental else None,
                               lam_min=lam_min, lam_max=lam_max)
             idx, cert = res.index, res.certified
-            gain = 0.5 * (res.lower[idx] + res.upper[idx])
+            if incremental:
+                # the winner's EXACT gain, straight off the factor
+                gain = ex[idx]
+            else:
+                gain = 0.5 * (res.lower[idx] + res.upper[idx])
             iters = jnp.sum(res.iterations)
-            if warm_start:
+            if use_prior:
                 # bank this round's upper bounds: still valid next round
                 # (invalid lanes carry the -1e30 sentinel and stay
                 # excluded by `valid` anyway)
                 prior = jnp.minimum(prior, res.upper)
         new_mask = mask + jax.nn.one_hot(idx, n, dtype=mask.dtype)
+        if incremental:
+            factor = _update.extend(factor, cols[idx], idx)
+            return (new_mask, prior, factor), (idx, gain, cert, iters)
         return (new_mask, prior), (idx, gain, cert, iters)
 
     mask0 = jnp.zeros((n,), d.dtype)
     prior0 = jnp.full((n,), jnp.inf, d.dtype)
-    (mask, _), (order, gains, cert, iters) = jax.lax.scan(
-        step, (mask0, prior0), None, length=k)
+    if incremental:
+        carry0 = (mask0, prior0, _update.init_factor(n, k, dtype=d.dtype))
+    else:
+        carry0 = (mask0, prior0)
+    (mask, *_), (order, gains, cert, iters) = jax.lax.scan(
+        step, carry0, None, length=k)
     return GreedyMapResult(
         mask=mask, order=order, gains=gains, certified=cert,
         quad_iterations=jnp.sum(iters),
@@ -379,15 +496,23 @@ def log_likelihood(op, mask: Array, lam_min, lam_max, *,
 
 def sample_dpp(op, key, init_mask, num_steps, lam_min, lam_max, *,
                max_iters: int, exact: bool = False,
-               solver: _solver.BIFSolver | None = None) -> ChainState:
+               solver: _solver.BIFSolver | None = None,
+               incremental: bool = False,
+               capacity: int | None = None) -> ChainState:
+    factor = _update.from_mask(op, jnp.asarray(init_mask), capacity) \
+        if incremental else None
     return run_chain(dpp_step, op, key, init_mask, num_steps, lam_min,
                      lam_max, max_iters=max_iters, exact=exact,
-                     solver=solver)
+                     solver=solver, factor=factor)
 
 
 def sample_kdpp(op, key, init_mask, num_steps, lam_min, lam_max, *,
                 max_iters: int, exact: bool = False,
-                solver: _solver.BIFSolver | None = None) -> ChainState:
+                solver: _solver.BIFSolver | None = None,
+                incremental: bool = False,
+                capacity: int | None = None) -> ChainState:
+    factor = _update.from_mask(op, jnp.asarray(init_mask), capacity) \
+        if incremental else None
     return run_chain(kdpp_step, op, key, init_mask, num_steps, lam_min,
                      lam_max, max_iters=max_iters, exact=exact,
-                     solver=solver)
+                     solver=solver, factor=factor)

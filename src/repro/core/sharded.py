@@ -424,8 +424,9 @@ def judge_batch_sharded(solver: BIFSolver, op, u: Array, t: Array, *,
 
 def judge_argmax_sharded(solver: BIFSolver, op, u: Array, *, mesh,
                          axis: str = "lanes", shift=None, scale=None,
-                         valid=None, prior_upper=None, lam_min=None,
-                         lam_max=None, probe=None) -> ArgmaxResult:
+                         valid=None, prior_upper=None, prior_lower=None,
+                         lam_min=None, lam_max=None,
+                         probe=None) -> ArgmaxResult:
     """Certified argmax race over K sharded lanes.
 
     The race itself is the cross-device reduction of the tentpole: each
@@ -457,8 +458,10 @@ def judge_argmax_sharded(solver: BIFSolver, op, u: Array, *, mesh,
     valid_p = jnp.pad(valid_k, (0, kp - k)) if kp != k else valid_k
     prior_k = None if prior_upper is None else \
         jnp.broadcast_to(jnp.asarray(prior_upper, u.dtype), (k,))
+    prior_lo_k = None if prior_lower is None else \
+        jnp.broadcast_to(jnp.asarray(prior_lower, u.dtype), (k,))
 
-    if prior_k is None:
+    if prior_k is None and prior_lo_k is None:
         def decide(lo, hi, shift, scale, valid):
             dominated, winner = _argmax_race(
                 *_argmax_scores(lo, hi, shift, scale, valid))
@@ -466,18 +469,26 @@ def judge_argmax_sharded(solver: BIFSolver, op, u: Array, *, mesh,
 
         dargs = (shift_k, scale_k, valid_p)
     else:
-        def decide(lo, hi, shift, scale, valid, prior):
+        # either prior alone rides as a no-op sentinel (+/-inf clamps to
+        # the lane's own bracket); padding lanes are pinned by `valid`
+        # AFTER the prior clamps, so zero-padded prior args are harmless
+        pu_k = jnp.full((k,), jnp.inf, u.dtype) if prior_k is None \
+            else prior_k
+        pl_k = jnp.full((k,), -jnp.inf, u.dtype) if prior_lo_k is None \
+            else prior_lo_k
+
+        def decide(lo, hi, shift, scale, valid, pu, pl):
             dominated, winner = _argmax_race(
-                *_argmax_scores(lo, hi, shift, scale, valid, prior))
+                *_argmax_scores(lo, hi, shift, scale, valid, pu, pl))
             return dominated | winner
 
-        dargs = (shift_k, scale_k, valid_p, prior_k)
+        dargs = (shift_k, scale_k, valid_p, pu_k, pl_k)
 
     res = solve_batch_sharded(
         solver, op, u, decide, mesh=mesh, axis=axis, lam_min=lam_min,
         lam_max=lam_max, probe=probe, decide_args=dargs)
     slo, shi = _argmax_scores(res.lower, res.upper, shift_k, scale_k,
-                              valid_k, prior_k)
+                              valid_k, prior_k, prior_lo_k)
     _, winner = _argmax_race(slo, shi)
     certified = jnp.any(winner, axis=-1)
     mid = 0.5 * (slo + shi)

@@ -236,7 +236,7 @@ QUADSTATE_PREPARED = ("op", "lam_min", "lam_max")
 
 
 def _argmax_scores(lo: Array, hi: Array, shift, scale, valid,
-                   prior_upper=None):
+                   prior_upper=None, prior_lower=None):
     """Per-lane score brackets ``shift + scale * [lo, hi]`` for the argmax
     race, with invalid lanes pinned at a large negative sentinel. Shared
     by ``judge_argmax`` and the sharded driver (core/sharded.py) so the
@@ -247,13 +247,21 @@ def _argmax_scores(lo: Array, hi: Array, shift, scale, valid,
     valid by Schur-complement monotonicity (DESIGN.md Sec. 8.3). The
     effective upper bound is clamped to it (never below the lane's own
     lower bound, so a slightly-stale prior can only stop helping, never
-    corrupt the race)."""
+    corrupt the race).
+
+    ``prior_lower`` (optional, per-lane) is the dual: an externally-known
+    valid lower bound on the score — e.g. the exact Schur complement read
+    off a maintained factor (core/update.py, DESIGN.md Sec. 12). Clamped
+    to never exceed the effective upper bound. With both priors exact the
+    race resolves at its very first decide check."""
     big_neg = jnp.asarray(-1e30, lo.dtype)
     a = shift + scale * lo
     b = shift + scale * hi
     slo, shi = jnp.minimum(a, b), jnp.maximum(a, b)
     if prior_upper is not None:
         shi = jnp.maximum(jnp.minimum(shi, prior_upper), slo)
+    if prior_lower is not None:
+        slo = jnp.minimum(jnp.maximum(slo, prior_lower), shi)
     if valid is not None:
         slo = jnp.where(valid, slo, big_neg)
         shi = jnp.where(valid, shi, big_neg)
@@ -824,8 +832,8 @@ class BIFSolver:
                                     lam_max=lam_max, probe=probe)
 
     def judge_argmax(self, op, u: Array, *, shift=None, scale=None,
-                     valid=None, prior_upper=None, lam_min=None,
-                     lam_max=None, probe=None) -> ArgmaxResult:
+                     valid=None, prior_upper=None, prior_lower=None,
+                     lam_min=None, lam_max=None, probe=None) -> ArgmaxResult:
         """Certified argmax over K candidate scores
         ``shift_k + scale_k * u_k^T A_k^-1 u_k`` (greedy MAP's inner loop).
 
@@ -841,6 +849,12 @@ class BIFSolver:
         still valid by Schur-complement monotonicity — so lanes a stale
         bound already rules out freeze after their very first bracket
         (lazy greedy, DESIGN.md Sec. 8.3). The certificate stays exact.
+
+        ``prior_lower`` (per-lane) banks externally-known valid LOWER
+        bounds — e.g. exact scores read off a maintained selection
+        factor (core/update.py): with exact priors on both sides every
+        lane resolves at its first decide check, so the whole race costs
+        one iteration per lane (DESIGN.md Sec. 12).
         """
         u = jnp.asarray(u)
         if u.ndim < 2:
@@ -852,7 +866,8 @@ class BIFSolver:
             jnp.asarray(scale, u.dtype)
 
         def scores(lo, hi):
-            return _argmax_scores(lo, hi, shift, scale, valid, prior_upper)
+            return _argmax_scores(lo, hi, shift, scale, valid, prior_upper,
+                                  prior_lower)
 
         def resolved(lo, hi):
             dominated, winner = _argmax_race(*scores(lo, hi))
@@ -893,15 +908,16 @@ class BIFSolver:
 
     def judge_argmax_sharded(self, op, u: Array, *, mesh,
                              axis: str = "lanes", shift=None, scale=None,
-                             valid=None, prior_upper=None, lam_min=None,
-                             lam_max=None, probe=None) -> ArgmaxResult:
+                             valid=None, prior_upper=None, prior_lower=None,
+                             lam_min=None, lam_max=None,
+                             probe=None) -> ArgmaxResult:
         """``judge_argmax`` over a lane mesh: the race's cross-lane
         reductions become cross-device collectives (DESIGN.md Sec. 7)."""
         from . import sharded as _sharded
         return _sharded.judge_argmax_sharded(
             self, op, u, mesh=mesh, axis=axis, shift=shift, scale=scale,
-            valid=valid, prior_upper=prior_upper, lam_min=lam_min,
-            lam_max=lam_max, probe=probe)
+            valid=valid, prior_upper=prior_upper, prior_lower=prior_lower,
+            lam_min=lam_min, lam_max=lam_max, probe=probe)
 
     def judge_kdpp_swap_batch(self, op, u: Array, v: Array, t: Array,
                               p: Array, *, lam_min=None, lam_max=None,

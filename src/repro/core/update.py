@@ -1,0 +1,231 @@
+"""Incremental update/downdate of the selected set's Cholesky factor.
+
+The chain drivers (greedy MAP, DPP/k-DPP moves) repeatedly score Schur
+complements ``L_ii - L_{Y,i}^T L_Y^{-1} L_{Y,i}`` against a set Y that
+changes by ONE item per round. Re-running the quadrature from scratch
+pays a full Lanczos per candidate per round; this module instead
+maintains the small Cholesky factor of the selected principal submatrix
+``L_Y`` under single-item add/remove (the ITAL ``extend_inv`` pattern,
+SNIPPETS.md), so after an O(capacity^2) carry per round every exact BIF
+against Y is two triangular solves — amortized O(1) solves per round
+(DESIGN.md Sec. 12).
+
+Everything is fixed-shape and jit/scan-safe: the factor lives in a
+``capacity x capacity`` buffer, slots ``0..count-1`` are occupied (in
+insertion order), empty slots hold identity rows/columns (so triangular
+solves pass through them as exact no-ops) and the sentinel index ``n``
+(so ``jnp.take(..., fill_value=0)`` reads zeros for them).
+
+  * ``extend``  — add item y: one triangular solve against the current
+    factor plus a new pivot row (no re-factorization).
+  * ``downdate`` — remove item y: the trailing block after deleting
+    row/column j satisfies ``S'S'^T = S S^T + q q^T`` with
+    ``q = chol[j+1:, j]`` — a rank-1 Cholesky UPDATE (numerically
+    stable; no cancellation), then a fixed-shape compaction shift.
+  * ``bif`` / ``gains`` — exact bilinear forms / all-candidate marginal
+    gains off the factor (one multi-RHS triangular solve).
+
+The carry contract (what may legally survive a round and why decisions
+stay certified) is documented in DESIGN.md Sec. 12 and enforced by
+quadlint QL001 (see ``FACTOR_REPLACE_EXCLUDED`` below and
+analysis/contracts.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+Array = jax.Array
+
+# Threading-contract registry (quadlint QL001): ChainFactor fields the
+# writers (`extend` / `downdate`) deliberately never rewrite. `n` is the
+# ground-set size — static metadata fixed at init_factor time (it keys
+# the gather sentinel and must never change under a carry).
+FACTOR_REPLACE_EXCLUDED = ("n",)
+
+# Floor for squared pivots: a numerically singular extension (item
+# already in span) gets a tiny positive pivot instead of NaN-poisoning
+# the factor; the chain's certified race never selects such an item
+# (its gain is ~0) so the floor is load-bearing only for garbage input.
+_PIVOT_FLOOR = 1e-30
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainFactor:
+    """Fixed-capacity Cholesky factor of ``L[idx, idx]`` (see module doc).
+
+    ``idx``  (capacity,) int32 — slot -> item; empty slots hold ``n``.
+    ``chol`` (capacity, capacity) — lower Cholesky of the selected
+             principal submatrix in slot order; identity on empty slots.
+    ``count`` () int32 — number of occupied slots (always a prefix).
+    ``ok``   () bool — False once an ``extend`` overflowed capacity
+             (decisions made from an overflowed factor are uncertified;
+             the chains surface this through their ``uncertified`` stat).
+    ``n``    static ground-set size (gather sentinel).
+    """
+    idx: Array
+    chol: Array
+    count: Array
+    ok: Array
+    n: int
+
+    @property
+    def capacity(self) -> int:
+        return self.chol.shape[-1]
+
+
+# keyword field lists on purpose: quadlint QL001 reads them by AST to
+# prove every dataclass field is registered (analysis/contracts.py)
+jax.tree_util.register_dataclass(
+    ChainFactor,
+    data_fields=["idx", "chol", "count", "ok"],
+    meta_fields=["n"])
+
+
+def tree_select(pred, a: ChainFactor, b: ChainFactor) -> ChainFactor:
+    """Leafwise ``where`` over two same-capacity factors (scan-safe
+    branchless accept/reject: both move outcomes are computed, one is
+    kept)."""
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def init_factor(n: int, capacity: int, dtype=jnp.float32) -> ChainFactor:
+    """Empty factor over a ground set of ``n`` items."""
+    m = int(capacity)
+    return ChainFactor(idx=jnp.full((m,), n, jnp.int32),
+                       chol=jnp.eye(m, dtype=dtype),
+                       count=jnp.zeros((), jnp.int32),
+                       ok=jnp.ones((), bool),
+                       n=int(n))
+
+
+def extend(f: ChainFactor, col: Array, y) -> ChainFactor:
+    """Add item ``y`` to the factor: O(capacity^2), no re-factorization.
+
+    ``col`` is the FULL (unmasked) column ``L[:, y]`` of the base matrix
+    — only the entries at currently-selected items (and ``col[y]``
+    itself) are read. Overflow (``count == capacity``) returns the
+    factor unchanged with ``ok=False``.
+    """
+    m = f.capacity
+    dt = f.chol.dtype
+    col = col.astype(dt)
+    v = jnp.take(col, f.idx, fill_value=0.0)       # L[sel, y]
+    w = solve_triangular(f.chol, v, lower=True)
+    l_yy = jnp.take(col, jnp.asarray(y))
+    d2 = l_yy - jnp.sum(w * w)
+    piv = jnp.sqrt(jnp.maximum(d2, jnp.asarray(_PIVOT_FLOOR, dt)))
+    row = w.at[f.count].set(piv)           # w is 0 on empty slots
+    fits = f.count < m
+    new = ChainFactor(idx=f.idx.at[f.count].set(jnp.asarray(y, jnp.int32)),
+                      chol=f.chol.at[f.count].set(row),
+                      count=f.count + 1,
+                      ok=f.ok,
+                      n=f.n)
+    overflowed = dataclasses.replace(f, idx=f.idx, chol=f.chol,
+                                     count=f.count,
+                                     ok=jnp.zeros((), bool))
+    return tree_select(fits, new, overflowed)
+
+
+def downdate(f: ChainFactor, y) -> ChainFactor:
+    """Remove item ``y`` from the factor: O(capacity^2).
+
+    Removing an item that is not selected is the exact identity (the
+    chains rely on this: ``downdate(f, y)`` always represents
+    ``Y \\ {y}`` whether or not y is in Y, so the accept/reject select
+    stays branchless).
+    """
+    m = f.capacity
+    dt = f.chol.dtype
+    ar = jnp.arange(m)
+    match = (f.idx == jnp.asarray(y, jnp.int32)) & (ar < f.count)
+    found = jnp.any(match)
+    j = jnp.argmax(match).astype(jnp.int32)
+
+    # Deleting row/column j leaves the trailing block S = chol[j+1:, j+1:]
+    # needing S'S'^T = S S^T + q q^T with q = chol[j+1:, j]: a rank-1
+    # Cholesky UPDATE (stable — adds, never cancels). Empty slots
+    # self-neutralize (L_pp = 1, q_p = 0 -> rotation is the identity).
+    q0 = jnp.where(ar > j, f.chol[:, j], jnp.zeros((), dt))
+
+    def body(p, carry):
+        chol, q = carry
+        active = p > j
+        lpp = chol[p, p]
+        qp = q[p]
+        r = jnp.sqrt(lpp * lpp + qp * qp)
+        c = r / lpp
+        s = qp / lpp
+        below = ar > p
+        colp = jnp.where(below, (chol[:, p] + s * q) / c, chol[:, p])
+        colp = colp.at[p].set(r)
+        qn = jnp.where(below, c * q - s * colp, q)
+        chol = jnp.where(active, chol.at[:, p].set(colp), chol)
+        q = jnp.where(active, qn, q)
+        return chol, q
+
+    chol1, _ = jax.lax.fori_loop(0, m, body, (f.chol, q0))
+
+    # Fixed-shape compaction: drop row/column j, shift the tail up/left,
+    # restore identity rows/columns on the newly-empty slots.
+    src = jnp.minimum(jnp.where(ar >= j, ar + 1, ar), m - 1)
+    chol2 = chol1[src][:, src]
+    idx2 = f.idx[src]
+    cnew = f.count - 1
+    occ = ar < cnew
+    chol2 = jnp.where(occ[:, None] & occ[None, :], chol2,
+                      jnp.eye(m, dtype=dt))
+    idx2 = jnp.where(occ, idx2, jnp.asarray(f.n, jnp.int32))
+    out = dataclasses.replace(f, idx=idx2, chol=chol2, count=cnew, ok=f.ok)
+    return tree_select(found, out, f)
+
+
+def solve_w(f: ChainFactor, u: Array) -> Array:
+    """``chol^{-1} u_Y``: the half-solve whose squared norm is the BIF."""
+    v = jnp.take(u.astype(f.chol.dtype), f.idx, fill_value=0.0)
+    return solve_triangular(f.chol, v, lower=True)
+
+
+def bif(f: ChainFactor, u: Array) -> Array:
+    """Exact ``u^T L_Y^{-1} u`` for ``u`` supported on the selected set
+    (only the entries of ``u`` at selected items are read)."""
+    w = solve_w(f, u)
+    return jnp.sum(w * w)
+
+
+def gains(f: ChainFactor, diag: Array, cols: Array) -> Array:
+    """Exact marginal gains ``diag_i - L[Y,i]^T L_Y^{-1} L[Y,i]`` for
+    EVERY candidate i, from one (capacity, N) triangular solve.
+
+    ``cols`` is the (N, N) stack with row i = column i of the symmetric
+    base (greedy_map precomputes it once). Already-selected items get a
+    ~0 gain (their column is in the span); callers mask them out.
+    """
+    dt = f.chol.dtype
+    v = jnp.take(cols.astype(dt), f.idx, axis=0,
+                 fill_value=0.0)                        # (cap, N)
+    w = solve_triangular(f.chol, v, lower=True)
+    return diag.astype(dt) - jnp.sum(w * w, axis=0)
+
+
+def from_mask(op, mask: Array, capacity: int | None = None) -> ChainFactor:
+    """Build the factor of an existing selection (chain warm start).
+
+    ``capacity`` defaults to the ground-set size so add-heavy chains can
+    never overflow; pass the known selection ceiling (e.g. k for a
+    k-DPP) to shrink the carry.
+    """
+    n = op.n
+    dt = op.diag().dtype
+    f0 = init_factor(n, n if capacity is None else int(capacity), dtype=dt)
+    mask = jnp.asarray(mask)
+
+    def body(i, f):
+        col = op.matvec(jax.nn.one_hot(i, n, dtype=dt))
+        return tree_select(mask[i] > 0.5, extend(f, col, i), f)
+
+    return jax.lax.fori_loop(0, n, body, f0)

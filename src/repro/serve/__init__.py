@@ -1,3 +1,4 @@
 from .engine import BIFEngine, BIFRequest, Engine, Request, \
     flush_trace_count  # noqa: F401
-from .kv_select import rank_blocks, select_diverse_blocks  # noqa: F401
+from .kv_select import BlockRanker, apply_block_mask, pool_keys, \
+    rank_blocks, select_diverse_blocks  # noqa: F401

@@ -140,7 +140,9 @@ class BIFRequest:
     ``mask``: optional principal-submatrix mask (the A_Y of a chain).
     ``max_iters``: per-submission quadrature-iteration budget (on top of
     the solver's ``max_iters`` ceiling); ``deadline``: wall-clock cutoff
-    (a ``time.monotonic()`` instant, checked at chunk boundaries). A
+    (a ``time.monotonic()`` instant, checked at admission — an already-
+    expired request retires immediately with zero iterations — and at
+    chunk boundaries). A
     request whose budget/deadline expires before its decision resolves
     comes back PARTIAL: ``resolved=False``, the banked bracket in
     ``lower``/``upper``, and the lane's quadrature state in ``state`` —
@@ -427,6 +429,17 @@ class BIFEngine:
             except (TypeError, ValueError) as e:
                 raise ValueError(
                     f"BIFRequest.t must be a scalar, got {req.t!r}") from e
+        # Clear EVERY stale result field, not just the error: a request
+        # resubmitted for refinement must not let a failed flush leave
+        # the previous round's lower/upper/decision readable as if they
+        # were current. The banked state/query stay — they are what a
+        # resubmission resumes from (cumulative iteration counts live in
+        # state.it and are restored at retirement).
+        req.lower = req.upper = None
+        req.decision = None
+        req.certified = None
+        req.iterations = None
+        req.resolved = None
         req.error = None
         self._queue.append(req)
         return req
@@ -501,10 +514,29 @@ class BIFEngine:
                 fresh = np.zeros((p,), bool)
                 warm = []
                 dirty = state is None
+                now = time.monotonic()
                 for i in range(p):
-                    if slots[i] is not None or not pending:
+                    if slots[i] is not None:
                         continue
-                    r = pending.pop(0)
+                    r = None
+                    while pending:
+                        cand = pending.pop(0)
+                        if cand.deadline is not None \
+                                and now >= cand.deadline:
+                            # already expired at the door: retire with
+                            # ZERO pool rounds burned — no lane, no
+                            # banked state, results stay cleared; FIFO
+                            # order is preserved because the queue list
+                            # itself is returned in submission order
+                            cand.certified = False
+                            cand.resolved = False
+                            cand.iterations = 0
+                            cand.state = None
+                            continue
+                        r = cand
+                        break
+                    if r is None:
+                        continue
                     slots[i] = r
                     m = np.ones((n,), dt) if r.mask is None \
                         else np.asarray(r.mask, dt)
@@ -526,6 +558,11 @@ class BIFEngine:
                         fresh[i] = True
                         caps[i] = min(budget, max_iters)
                     dirty = True
+                if all(r is None for r in slots):
+                    # every queued request expired at admission — there
+                    # is nothing to step (a pool round here would burn
+                    # chunk_iters x pool work on dead lanes)
+                    break
                 if dirty:
                     if state is None or fresh.any():
                         # fresh lanes seed from a POOL-SHAPED init on

@@ -17,16 +17,37 @@ import numpy as np
 
 from ..core import double_greedy as dg
 from ..core import operators as core_ops
+from ..core import spectrum as core_spectrum
 from ..core.solver import BIFSolver, SolverConfig
 from .engine import BIFEngine, BIFRequest
 
 
 def pool_keys(keys: np.ndarray, block: int = 128) -> np.ndarray:
-    """(S, D) keys -> (S/block, D) block-mean summaries, L2-normalized."""
+    """(S, D) keys -> (ceil(S/block), D) block-mean summaries, L2-normalized.
+
+    The trailing partial block (``S % block`` keys) pools into a final
+    partial-block summary — the mean over the keys it actually holds —
+    instead of being silently dropped (it used to be truncated away, so
+    up to ``block - 1`` tail keys were never scored and
+    :func:`apply_block_mask` padded them as always-kept)."""
     s, d = keys.shape
-    n = s // block
-    pooled = keys[:n * block].reshape(n, block, d).mean(1)
+    n = -(-s // block)
+    pad = n * block - s
+    padded = np.concatenate([keys, np.zeros((pad, d), keys.dtype)]) \
+        if pad else keys
+    counts = np.minimum(block, s - np.arange(n) * block)
+    pooled = padded.reshape(n, block, d).sum(1) / counts[:, None]
     return pooled / (np.linalg.norm(pooled, axis=-1, keepdims=True) + 1e-8)
+
+
+def _rbf_kernel(pooled: np.ndarray, ridge: float,
+                bandwidth: float) -> np.ndarray:
+    """RBF similarity kernel over block summaries, ridge-regularized
+    (shared by the one-shot rankers and the streaming BlockRanker so
+    their systems are bit-identical)."""
+    n = len(pooled)
+    d2 = ((pooled[:, None, :] - pooled[None, :, :]) ** 2).sum(-1)
+    return np.exp(-d2 / (2 * bandwidth ** 2)) + ridge * np.eye(n)
 
 
 def select_diverse_blocks(keys: np.ndarray, *, block: int = 128,
@@ -43,8 +64,7 @@ def select_diverse_blocks(keys: np.ndarray, *, block: int = 128,
     """
     pooled = pool_keys(keys, block)
     n = len(pooled)
-    d2 = ((pooled[:, None, :] - pooled[None, :, :]) ** 2).sum(-1)
-    kmat = np.exp(-d2 / (2 * bandwidth ** 2)) + ridge * np.eye(n)
+    kmat = _rbf_kernel(pooled, ridge, bandwidth)
     op = core_ops.Dense(jnp.asarray(kmat, jnp.float32))
     if solver_config is None:
         solver_config = SolverConfig(max_iters=n + 2)
@@ -96,8 +116,7 @@ def rank_blocks(keys: np.ndarray, *, block: int = 128, ridge: float = 1e-3,
     pooled = pool_keys(keys, block)
     n = len(pooled)
     n_pad = -(-n // bucket) * bucket
-    d2 = ((pooled[:, None, :] - pooled[None, :, :]) ** 2).sum(-1)
-    kmat = np.exp(-d2 / (2 * bandwidth ** 2)) + ridge * np.eye(n)
+    kmat = _rbf_kernel(pooled, ridge, bandwidth)
     kfull = np.eye(n_pad, dtype=np.float32)
     kfull[:n, :n] = kmat
     op = core_ops.Dense(jnp.asarray(kfull))
@@ -149,13 +168,234 @@ def rank_blocks(keys: np.ndarray, *, block: int = 128, ridge: float = 1e-3,
         "flushes": flushes, "blocks": n}
 
 
+class BlockRanker:
+    """Streaming certified redundancy ranking of a GROWING KV cache.
+
+    :func:`rank_blocks` re-solves all N blocks from scratch on every
+    call; during decode the cache grows by one block at a time, so that
+    rebuilds the engine and re-pays N solves to re-rank a ground set
+    that changed by one item. ``BlockRanker`` instead maintains the
+    padded kernel operator and one :class:`BIFEngine` across cache
+    growth:
+
+      * ``extend(keys)`` appends raw keys; ``rank()`` re-pools, grows
+        the kernel, and — as long as the padded system size stays inside
+        the current ``bucket`` — swaps the new operator into the LIVE
+        engine in place (the engine's jitted flush drivers read
+        ``engine.op`` at call time, so the swap reuses the existing
+        compile; pinned via ``flush_trace_count``). Only a bucket
+        overflow rebuilds the engine.
+      * each ``rank()`` re-solves only the *changed* blocks (new blocks,
+        plus a trailing partial block whose summary absorbed new keys)
+        and the *rank-ambiguous* neighbors — previously-scored blocks
+        whose banked bracket overlaps a changed block's fresh bracket,
+        so their relative order is genuinely in doubt. Everything else
+        keeps its banked bracket: no resubmission, no iterations.
+      * within a ``rank()``, re-solves run the two-phase warm-started
+        schedule of :func:`rank_blocks` when ``coarse_iters`` is set:
+        coarse brackets first, then only still-ambiguous unresolved
+        blocks resubmit carrying their banked
+        :class:`~repro.core.solver.QuadState` (PR 4) and resume where
+        they stopped.
+
+    The streaming tradeoff, documented here because it is the point:
+    a kept (non-resubmitted) block's banked score was computed against
+    the SMALLER ground set. Leverage scores are non-DEcreasing as the
+    cache grows (more blocks explain you at least as well — the Schur-
+    complement monotonicity of DESIGN.md Sec. 12 read in reverse), so
+    banked brackets stay valid LOWER bounds but their uppers can go
+    stale. ``rank()`` treats bracket overlap against the freshly-solved
+    blocks as the re-solve trigger; well-separated stale blocks keep
+    their cheap answer. Callers who need every bracket current for the
+    full ground set should call :func:`rank_blocks`.
+
+    ``rank()`` returns ``(order, info)`` like :func:`rank_blocks`;
+    ``info`` additionally reports ``solved`` (fresh re-solves),
+    ``reused`` (banked brackets kept) and per-call ``iterations`` /
+    ``flushes``. ``self.stats`` accumulates across calls.
+    """
+
+    def __init__(self, *, block: int = 128, ridge: float = 1e-3,
+                 bandwidth: float = 0.5, max_batch: int = 32,
+                 bucket: int = 32, mesh=None,
+                 solver_config: SolverConfig | None = None,
+                 coarse_iters: int | None = None):
+        self.block = int(block)
+        self.ridge = float(ridge)
+        self.bandwidth = float(bandwidth)
+        self.max_batch = int(max_batch)
+        self.bucket = int(bucket)
+        self.mesh = mesh
+        self.solver_config = solver_config
+        self.coarse_iters = coarse_iters
+        self._keys: np.ndarray | None = None   # raw (S, D) key buffer
+        self._kmat: np.ndarray | None = None
+        self._engine: BIFEngine | None = None
+        self._n_pad = 0
+        # per-block banked results from the last rank(): parallel lists
+        self._reqs: list[BIFRequest] = []
+        self._sizes: np.ndarray = np.zeros(0, np.int64)  # keys per block
+        self.stats = {"iterations": 0, "flushes": 0, "solved": 0,
+                      "refined": 0, "reused": 0, "engine_builds": 0}
+
+    def extend(self, keys: np.ndarray) -> "BlockRanker":
+        """Append raw keys (the cache grew); returns self for chaining."""
+        keys = np.asarray(keys)
+        if keys.ndim != 2:
+            raise ValueError(f"keys must be (S, D), got {keys.shape}")
+        self._keys = keys if self._keys is None \
+            else np.concatenate([self._keys, keys])
+        return self
+
+    # -- internals ---------------------------------------------------------
+
+    def _sync_engine(self, n: int) -> None:
+        """Point the live engine at the grown kernel — in place when the
+        padded size stays inside the current bucket."""
+        n_pad = -(-n // self.bucket) * self.bucket
+        kfull = np.eye(n_pad, dtype=np.float32)
+        kfull[:n, :n] = self._kmat
+        op = core_ops.Dense(jnp.asarray(kfull))
+        if self._engine is not None and self._n_pad == n_pad:
+            # in-place operator swap: the flush drivers read engine.op /
+            # engine.lam_* at call time, so the existing compile is
+            # reused (no new trace for same-bucket growth). Refresh the
+            # spectrum interval with the SAME estimator the engine ctor
+            # uses, so streaming brackets stay bit-identical to a cold
+            # rank_blocks on the grown cache.
+            est = core_spectrum.gershgorin_bounds_spd(op)
+            self._engine.op = op
+            self._engine.lam_min = float(est.lam_min)
+            self._engine.lam_max = float(est.lam_max)
+            return
+        cfg = self.solver_config
+        if cfg is None:
+            cfg = SolverConfig(max_iters=min(n_pad + 2, 64), rtol=1e-3)
+        self._engine = BIFEngine(op, solver=BIFSolver(cfg),
+                                 max_batch=self.max_batch, mesh=self.mesh)
+        self._n_pad = n_pad
+        self.stats["engine_builds"] += 1
+
+    def _fresh_request(self, i: int, n: int,
+                       max_iters: int | None) -> BIFRequest:
+        """Block i's leverage query against the CURRENT ground set."""
+        mask = np.zeros(self._n_pad, dtype=np.float32)
+        mask[:n] = 1.0
+        mask[i] = 0.0
+        u = np.zeros(self._n_pad, dtype=np.float32)
+        u[:n] = self._kmat[:, i]
+        return BIFRequest(u=u, mask=mask, max_iters=max_iters)
+
+    # -- the streaming rank ------------------------------------------------
+
+    def rank(self):
+        """Re-rank the current cache; returns ``(order, info)``."""
+        if self._keys is None or len(self._keys) == 0:
+            raise ValueError("no keys: call extend() first")
+        pooled = pool_keys(self._keys, self.block)
+        n = len(pooled)
+        self._kmat = _rbf_kernel(pooled, self.ridge, self.bandwidth)
+        self._sync_engine(n)
+        eng = self._engine
+
+        # changed blocks must re-solve: brand-new ones, plus a partial
+        # tail block whose summary absorbed fresh keys (keys are append-
+        # only, so same key-count == same contents)
+        sizes = np.minimum(self.block,
+                           len(self._keys) - np.arange(n) * self.block)
+        n_old = len(self._sizes)
+        changed = [i for i in range(n)
+                   if i >= n_old or sizes[i] != self._sizes[i]]
+        self._sizes = sizes
+        self._reqs = self._reqs[:n] + [None] * (n - len(self._reqs))
+
+        # phase 1: fresh solves for the changed blocks (new ground set ->
+        # new (u, mask) -> banked states don't transfer; submit() clears
+        # the stale results)
+        for i in changed:
+            self._reqs[i] = eng.submit(
+                self._fresh_request(i, n, self.coarse_iters))
+        flushes = 0
+        if changed:
+            eng.flush()
+            flushes += 1
+
+        # phase 2: previously-scored blocks whose banked bracket overlaps
+        # a changed block's fresh bracket are rank-ambiguous — their
+        # order against the newcomers is in doubt — and re-solve against
+        # the grown ground set. Others keep their banked (valid-lower,
+        # possibly stale-upper) bracket: the streaming tradeoff.
+        chg = set(changed)
+        if chg and len(chg) < n:
+            clo = np.array([self._reqs[i].lower for i in changed])
+            chi = np.array([self._reqs[i].upper for i in changed])
+            ambiguous = [
+                i for i in range(n) if i not in chg
+                and np.any((clo < self._reqs[i].upper)
+                           & (self._reqs[i].lower < chi))]
+            for i in ambiguous:
+                self._reqs[i] = eng.submit(
+                    self._fresh_request(i, n, self.coarse_iters))
+            if ambiguous:
+                eng.flush()
+                flushes += 1
+            solved = changed + ambiguous
+        else:
+            solved = changed
+
+        # phase 3: two-phase refinement inside this call — unresolved
+        # coarse solves that still overlap each other resume their
+        # banked QuadState under the full budget (rank_blocks' schedule)
+        refined = 0
+        if self.coarse_iters is not None and solved:
+            los = np.array([r.lower for r in self._reqs])
+            his = np.array([r.upper for r in self._reqs])
+            for i in solved:
+                r = self._reqs[i]
+                if r.resolved:
+                    continue
+                others = np.arange(n) != i
+                if np.any((los[others] < his[i]) & (los[i] < his[others])):
+                    r.max_iters = None  # full budget; resumes banked state
+                    eng.submit(r)
+                    refined += 1
+            if refined:
+                eng.flush()
+                flushes += 1
+
+        mids = np.array([0.5 * (r.lower + r.upper) for r in self._reqs])
+        order = np.argsort(-mids)
+        info = {
+            "blocks": n,
+            "solved": len(solved),
+            "refined": refined,
+            "reused": n - len(solved),
+            "flushes": flushes,
+            # every re-solved block started from scratch THIS call and
+            # in-call refinement accumulates through its banked state,
+            # so the final counters of the solved set are the call cost;
+            # reused blocks cost zero
+            "iterations": int(sum(int(self._reqs[i].iterations or 0)
+                                  for i in solved)),
+            "brackets": [(r.lower, r.upper) for r in self._reqs],
+        }
+        for k in ("iterations", "flushes", "solved", "refined", "reused"):
+            self.stats[k] += info[k]
+        return order, info
+
+
 def apply_block_mask(cache_k: jax.Array, cache_v: jax.Array,
                      mask: np.ndarray, block: int = 128):
     """Zero out evicted blocks (a real engine would compact; zeroing keeps
     shapes static and attention ignores evicted keys via -inf scores when
     combined with the validity mask)."""
     s = cache_k.shape[1]
+    # ceil-block masks (pool_keys) cover the tail: the last (partial)
+    # block's decision applies to its actual keys, so slice the repeat
+    # down to the cache length. A short mask (legacy truncating pooling)
+    # still pads its uncovered tail as kept.
     full = np.repeat(mask, block)
-    full = np.pad(full, (0, s - len(full)), constant_values=True)
-    m = jnp.asarray(full, cache_k.dtype)[None, :, None, None]
+    if len(full) < s:
+        full = np.pad(full, (0, s - len(full)), constant_values=True)
+    m = jnp.asarray(full[:s], cache_k.dtype)[None, :, None, None]
     return cache_k * m, cache_v * m

@@ -433,6 +433,35 @@ def test_ql001_excluded_field_registry_is_live(monkeypatch):
                for f in findings)
 
 
+def test_ql001_chainfactor_mutations_are_caught(monkeypatch):
+    import dataclasses
+
+    import repro.core.update as update_mod
+
+    # dropping the writer-exclusion registry: `n` becomes an unhandled
+    # field of `downdate` (which rewrites via dataclasses.replace and
+    # deliberately never touches n; `extend` constructs a full
+    # ChainFactor so it writes every field either way)
+    monkeypatch.setattr(update_mod, "FACTOR_REPLACE_EXCLUDED", ())
+    findings = _ql001()
+    assert any("downdate" in f.message and "'n'" in f.message
+               for f in findings)
+
+    # a new ChainFactor field (say a rank-update cache) missing from the
+    # pytree registration AND from the carry writers
+    mutant = dataclasses.make_dataclass(
+        "ChainFactor", [f.name for f in
+                        dataclasses.fields(update_mod.ChainFactor)]
+        + ["rank_cache"])
+    monkeypatch.setattr(update_mod, "ChainFactor", mutant)
+    findings = _ql001()
+    msgs = [f.message for f in findings]
+    assert any("rank_cache" in m and "register_dataclass" in m
+               for m in msgs)
+    assert any("rank_cache" in m and "extend" in m for m in msgs)
+    assert any("rank_cache" in m and "downdate" in m for m in msgs)
+
+
 def test_ql001_round_body_delegation_credit():
     """PR 7 moved the per-substep freeze into ``_round_body``; a handler
     inherits that freeze coverage ONLY if it actually references the

@@ -15,6 +15,8 @@
    driver.
 5. BIFEngine flushes mixed judge/bracket traffic in max_batch lanes.
 """
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -457,12 +459,99 @@ def test_bif_engine_deadline_retires_partial():
                     max_batch=2, chunk_iters=1,
                     lam_min=float(w[0] * 0.99), lam_max=float(w[-1] * 1.01))
     rng = np.random.default_rng(12)
-    # an already-expired deadline retires after the first chunk round,
-    # as a PARTIAL result with the banked state for resubmission
-    req = eng.submit(BIFRequest(u=rng.standard_normal(n), deadline=0.0))
+    # a deadline that expires mid-solve retires at the next chunk
+    # boundary as a PARTIAL result with the banked state for
+    # resubmission (the deadline lands after admission, so the request
+    # gets at least its first chunk round)
+    steps = 0
+    orig_step = eng._step
+
+    def counting_step(*args, **kwargs):
+        nonlocal steps
+        steps += 1
+        return orig_step(*args, **kwargs)
+
+    eng._step = counting_step
+    req = eng.submit(BIFRequest(u=rng.standard_normal(n),
+                                deadline=time.monotonic() + 0.2))
     eng.flush()
-    assert req.iterations <= 2 and req.lower is not None
-    assert req.resolved is False and req.state is not None
+    assert steps >= 1
+    assert req.iterations >= 1 and req.lower is not None
+    assert req.state is not None or req.resolved
+
+
+def test_bif_engine_expired_deadline_retires_at_admission():
+    """an ALREADY-expired deadline must not burn a chunk_iters x pool
+    decision round: the request retires at the door with zero
+    iterations and no banked state, in submission order."""
+    n = 24
+    a = make_spd(n, kappa=200.0, seed=11)
+    w = np.linalg.eigvalsh(a)
+    eng = BIFEngine(Dense(jnp.asarray(a)),
+                    solver=BIFSolver.create(max_iters=n + 2, rtol=1e-12),
+                    max_batch=2, chunk_iters=1,
+                    lam_min=float(w[0] * 0.99), lam_max=float(w[-1] * 1.01))
+    rng = np.random.default_rng(12)
+    steps = 0
+    orig_step = eng._step
+
+    def counting_step(*args, **kwargs):
+        nonlocal steps
+        steps += 1
+        return orig_step(*args, **kwargs)
+
+    eng._step = counting_step
+
+    # all-expired queue: zero pool rounds, zero iterations, no state
+    dead = [eng.submit(BIFRequest(u=rng.standard_normal(n), deadline=0.0))
+            for _ in range(3)]
+    out = eng.flush()
+    assert steps == 0
+    assert out == dead  # submission order preserved
+    for r in dead:
+        assert r.iterations == 0 and r.resolved is False
+        assert r.state is None and r.lower is None and r.upper is None
+        assert r.certified is False
+
+    # mixed queue: the expired request is skipped at admission while the
+    # live one still solves in the same flush, order preserved
+    live = BIFRequest(u=rng.standard_normal(n))
+    expired = BIFRequest(u=rng.standard_normal(n), deadline=0.0)
+    r1 = eng.submit(expired)
+    r2 = eng.submit(live)
+    out = eng.flush()
+    assert out == [r1, r2]
+    assert r1.iterations == 0 and r1.state is None
+    assert steps >= 1 and r2.iterations >= 1  # the live one really ran
+
+
+def test_bif_engine_submit_clears_stale_results():
+    """resubmission must clear the previous round's results at the door:
+    if the refining flush errors, callers must NOT read the coarse
+    round's lower/upper/decision as if they were current."""
+    n = 32
+    a = make_spd(n, kappa=300.0, seed=21)
+    w = np.linalg.eigvalsh(a)
+    eng = BIFEngine(Dense(jnp.asarray(a)),
+                    solver=BIFSolver.create(max_iters=n + 2, rtol=1e-6),
+                    max_batch=2, chunk_iters=2,
+                    lam_min=float(w[0] * 0.99), lam_max=float(w[-1] * 1.01))
+    rng = np.random.default_rng(22)
+    r = eng.submit(BIFRequest(u=rng.standard_normal(n), max_iters=2))
+    eng.flush()
+    assert r.resolved is False and r.lower is not None
+    it_coarse = r.iterations
+    r.max_iters = None
+    eng.submit(r)
+    assert r.lower is None and r.upper is None
+    assert r.decision is None and r.certified is None
+    assert r.iterations is None and r.resolved is None
+    assert r.state is not None  # the banked resume state survives
+    eng.flush()
+    assert r.resolved and r.lower is not None
+    # iteration counts stay cumulative across the resubmission (they are
+    # restored from the banked lane counter, not the cleared field)
+    assert r.iterations > it_coarse
 
 
 def test_bif_engine_legacy_configs_fall_back_to_lockstep():

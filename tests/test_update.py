@@ -1,0 +1,316 @@
+"""Incremental update/downdate contract (core/update.py, DESIGN.md
+Sec. 12) and the streaming serving path built on it.
+
+The hard invariant everywhere: carrying the selected set's Cholesky
+factor across rounds changes ITERATION COUNTS, never decisions —
+selections are pinned bit-identical against warm_start-only and
+from-scratch runs across the operator grid, the chain steps, and the
+streaming BlockRanker, while the iteration totals are pinned strictly
+smaller.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Dense, Masked, bell_from_dense, dpp, greedy_map, \
+    sparse_from_dense, update
+from repro.core.solver import SolverConfig
+from repro.serve import BlockRanker, apply_block_mask, pool_keys, \
+    rank_blocks
+from repro.serve.engine import flush_trace_count
+from conftest import make_spd
+
+
+# ---------------------------------------------------------------------------
+# the factor itself vs dense oracles
+
+
+def _dense_chol(a, sel):
+    return np.linalg.cholesky(a[np.ix_(sel, sel)])
+
+
+def test_chain_factor_matches_dense_cholesky():
+    n = 12
+    a = make_spd(n, kappa=80.0, seed=0)
+    f = update.init_factor(n, 8, dtype=jnp.float64)
+    sel = []
+    for y in (3, 7, 1, 9, 5):
+        f = update.extend(f, jnp.asarray(a[:, y]), y)
+        sel.append(y)
+        c = np.asarray(f.chol)[:len(sel), :len(sel)]
+        np.testing.assert_allclose(c, _dense_chol(a, sel), atol=1e-10)
+        assert int(f.count) == len(sel) and bool(f.ok)
+        assert list(np.asarray(f.idx)[:len(sel)]) == sel
+
+    # exact BIF and all-candidate gains off the factor
+    rng = np.random.default_rng(1)
+    u = rng.standard_normal(n)
+    w = np.linalg.solve(a[np.ix_(sel, sel)], u[sel])
+    np.testing.assert_allclose(float(update.bif(f, jnp.asarray(u))),
+                               float(u[sel] @ w), atol=1e-10)
+    cols = jnp.asarray(a)  # row i of the symmetric base = column i
+    g = np.asarray(update.gains(f, jnp.asarray(np.diag(a)), cols))
+    for i in range(n):
+        wi = np.linalg.solve(a[np.ix_(sel, sel)], a[sel, i])
+        np.testing.assert_allclose(g[i], a[i, i] - a[sel, i] @ wi,
+                                   atol=1e-9)
+
+    # downdate of a middle item == from-scratch factor of the rest
+    f2 = update.downdate(f, 1)
+    rest = [y for y in sel if y != 1]
+    np.testing.assert_allclose(
+        np.asarray(f2.chol)[:len(rest), :len(rest)],
+        _dense_chol(a, rest), atol=1e-9)
+    assert list(np.asarray(f2.idx)[:len(rest)]) == rest
+
+    # downdate of an ABSENT item is the exact identity (the chains'
+    # branchless accept/reject relies on this)
+    f3 = update.downdate(f, 4)
+    assert jax.tree.all(jax.tree.map(
+        lambda x, y: bool(jnp.array_equal(x, y)), f3, f))
+
+    # overflow: extending past capacity flips ok and leaves the rest
+    fo = f
+    for y in (0, 2, 4, 6):
+        fo = update.extend(fo, jnp.asarray(a[:, y]), y)
+    assert int(fo.count) == 8 and not bool(fo.ok)
+
+
+def test_from_mask_matches_incremental_build():
+    n = 10
+    a = make_spd(n, kappa=50.0, seed=2)
+    mask = np.zeros(n)
+    mask[[1, 4, 8]] = 1.0
+    f = update.from_mask(Dense(jnp.asarray(a)), jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(f.chol)[:3, :3],
+                               _dense_chol(a, [1, 4, 8]), atol=1e-10)
+    assert int(f.count) == 3 and f.capacity == n
+
+
+# ---------------------------------------------------------------------------
+# greedy MAP: bit-identical selections, strictly fewer iterations
+
+
+def _greedy_case(kind):
+    n = 40
+    a = make_spd(n, kappa=200.0, seed=5)
+    if kind == "dense":
+        op, ref = Dense(jnp.asarray(a)), a
+    elif kind == "sparse_coo":
+        op, ref = sparse_from_dense(a), a
+    elif kind == "sparse_bell":
+        op, ref = bell_from_dense(a, bs=8), a
+    else:  # masked
+        rng = np.random.default_rng(6)
+        m = (rng.random(n) < 0.8).astype(np.float64)
+        ref = np.diag(m) @ a @ np.diag(m) + np.eye(n) - np.diag(m)
+        op = Masked(Dense(jnp.asarray(a)), jnp.asarray(m))
+    w = np.linalg.eigvalsh(ref)
+    return op, float(w[0] * 0.99), float(w[-1] * 1.01)
+
+
+@pytest.mark.parametrize("kind",
+                         ["dense", "sparse_coo", "sparse_bell", "masked"])
+def test_greedy_map_incremental_bit_identical_fewer_iters(kind):
+    op, lo, hi = _greedy_case(kind)
+    t = 16
+    kw = dict(max_iters=60)
+    cold = greedy_map(op, t, lo, hi, **kw)
+    warm = greedy_map(op, t, lo, hi, warm_start=True, **kw)
+    inc = greedy_map(op, t, lo, hi, incremental=True, **kw)
+    # certified-identical selections, in order
+    assert np.array_equal(np.asarray(cold.order), np.asarray(warm.order))
+    assert np.array_equal(np.asarray(cold.order), np.asarray(inc.order))
+    assert np.array_equal(np.asarray(cold.mask), np.asarray(inc.mask))
+    assert int(inc.uncertified) == 0 and int(warm.uncertified) == 0
+    # the exact factor seeds both bracket sides, so every lane resolves
+    # at its first decide check: N iterations per round, strictly below
+    # warm_start alone (which only banks uppers)
+    assert int(inc.quad_iterations) == t * op.n
+    assert int(inc.quad_iterations) < int(warm.quad_iterations)
+    assert int(warm.quad_iterations) <= int(cold.quad_iterations)
+
+
+def test_greedy_map_incremental_matches_exact_gains():
+    op, lo, hi = _greedy_case("dense")
+    inc = greedy_map(op, 8, lo, hi, max_iters=60, incremental=True)
+    ex = greedy_map(op, 8, lo, hi, max_iters=60, exact=True)
+    assert np.array_equal(np.asarray(inc.order), np.asarray(ex.order))
+    np.testing.assert_allclose(np.asarray(inc.gains), np.asarray(ex.gains),
+                               rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# chain steps: downdate-after-remove round trips, decisions pinned
+
+
+def test_dpp_step_incremental_roundtrip_parity():
+    n = 24
+    a = make_spd(n, kappa=100.0, seed=7)
+    op = Dense(jnp.asarray(a))
+    w = np.linalg.eigvalsh(a)
+    lo, hi = float(w[0] * 0.99), float(w[-1] * 1.01)
+    mask0 = jnp.zeros(n, jnp.float32).at[:6].set(1.0)
+    key = jax.random.key(3)
+
+    s_inc = dpp.init_chain(key, mask0,
+                           factor=update.from_mask(op, mask0))
+    s_ex = dpp.init_chain(key, mask0)
+    s_q = dpp.init_chain(key, mask0)
+    for _ in range(30):
+        s_inc = dpp.dpp_step(op, s_inc, lo, hi, max_iters=n + 2)
+        s_ex = dpp.dpp_step(op, s_ex, lo, hi, max_iters=n + 2, exact=True)
+        s_q = dpp.dpp_step(op, s_q, lo, hi, max_iters=n + 2)
+        assert np.array_equal(np.asarray(s_inc.mask), np.asarray(s_ex.mask))
+        assert np.array_equal(np.asarray(s_inc.mask), np.asarray(s_q.mask))
+    assert int(s_inc.stats.quad_iterations) == 0
+    assert int(s_inc.stats.uncertified) == 0
+    assert int(s_q.stats.quad_iterations) > 0
+
+    # the carried factor round-trips: after 30 add/remove moves it still
+    # IS the Cholesky factor of the selected principal submatrix
+    f = s_inc.factor
+    sel = list(np.asarray(f.idx)[:int(f.count)])
+    assert sorted(sel) == list(np.flatnonzero(np.asarray(s_inc.mask) > 0.5))
+    np.testing.assert_allclose(
+        np.asarray(f.chol)[:len(sel), :len(sel)],
+        _dense_chol(a, sel), atol=1e-8)
+
+
+def test_kdpp_step_incremental_parity_under_scan():
+    n = 20
+    a = make_spd(n, kappa=60.0, seed=8)
+    op = Dense(jnp.asarray(a))
+    w = np.linalg.eigvalsh(a)
+    lo, hi = float(w[0] * 0.99), float(w[-1] * 1.01)
+    mask0 = jnp.zeros(n, jnp.float32).at[:5].set(1.0)
+    key = jax.random.key(11)
+    base = dpp.run_chain(dpp.kdpp_step, op, key, mask0, 25, lo, hi,
+                         max_iters=n + 2, exact=True)
+    inc = dpp.run_chain(dpp.kdpp_step, op, key, mask0, 25, lo, hi,
+                        max_iters=n + 2,
+                        factor=update.from_mask(op, mask0, capacity=5))
+    assert np.array_equal(np.asarray(base.mask), np.asarray(inc.mask))
+    assert int(inc.stats.quad_iterations) == 0
+    assert int(inc.stats.uncertified) == 0
+    assert int(np.asarray(inc.mask).sum()) == 5  # k preserved
+
+
+# ---------------------------------------------------------------------------
+# streaming BlockRanker
+
+
+_BLOCK, _DIM = 8, 6
+
+
+def _cluster(scale, seed, nb=1, jitter=0.02):
+    r = np.random.default_rng(seed)
+    c = scale * r.standard_normal((1, _DIM))
+    return (c + jitter * r.standard_normal((nb * _BLOCK, _DIM))) \
+        .astype(np.float32)
+
+
+def _cfg():
+    return SolverConfig(max_iters=34, rtol=1e-3)
+
+
+@pytest.mark.parametrize("coarse", [None, 2])
+def test_block_ranker_first_call_matches_rank_blocks(coarse):
+    keys = np.concatenate([_cluster(3.0, s) for s in range(6)])
+    br = BlockRanker(block=_BLOCK, bucket=8, solver_config=_cfg(),
+                     coarse_iters=coarse)
+    order, info = br.extend(keys).rank()
+    cold_order, cold = rank_blocks(keys, block=_BLOCK, bucket=8,
+                                   solver_config=_cfg(),
+                                   coarse_iters=coarse)
+    assert np.array_equal(order, cold_order)
+    # every block freshly solved on the same engine/solver: brackets are
+    # bit-identical to the one-shot ranker
+    assert np.array_equal(np.array(info["brackets"]),
+                          np.array(cold["brackets"]))
+    assert info["solved"] == info["blocks"] and info["reused"] == 0
+
+
+def test_block_ranker_grown_cache_resolves_only_new_blocks():
+    keys0 = np.concatenate([_cluster(3.0, s) for s in range(5)])
+    grown = _cluster(6.0, 99)    # far from every existing cluster
+    br = BlockRanker(block=_BLOCK, bucket=8, solver_config=_cfg())
+    br.extend(keys0).rank()
+    traces_before = flush_trace_count()
+    order, info = br.extend(grown).rank()
+    # in-place operator swap: same bucket -> the live engine's compiled
+    # flush drivers are reused, no rebuild, no fresh trace
+    assert br.stats["engine_builds"] == 1
+    assert flush_trace_count() == traces_before
+    # only the new block re-solved; everyone else kept banked brackets
+    assert info["blocks"] == 6
+    assert info["solved"] == 1 and info["reused"] == 5
+    assert info["flushes"] == 1
+    # ... and the streamed ranking still matches a cold re-rank of the
+    # full grown cache (the kept blocks were rank-separated, so their
+    # stale-but-valid brackets cannot flip the order)
+    cold_order, cold = rank_blocks(np.concatenate([keys0, grown]),
+                                   block=_BLOCK, bucket=8,
+                                   solver_config=_cfg())
+    assert np.array_equal(order, cold_order)
+    assert 0 < info["iterations"] < cold["iterations"]
+
+
+def test_block_ranker_bucket_overflow_rebuilds_engine():
+    br = BlockRanker(block=_BLOCK, bucket=4, solver_config=_cfg())
+    br.extend(np.concatenate([_cluster(3.0, s) for s in range(4)])).rank()
+    assert br.stats["engine_builds"] == 1
+    br.extend(_cluster(4.0, 41)).rank()   # 5 blocks > bucket of 4
+    assert br.stats["engine_builds"] == 2
+
+
+def test_block_ranker_partial_tail_block_is_rescored():
+    # 2 full blocks + a half block; growing the tail must re-pool and
+    # re-solve the tail block (its summary changed), not just append
+    keys0 = np.concatenate([_cluster(3.0, s) for s in range(2)]
+                           + [_cluster(5.0, 9)[:_BLOCK // 2]])
+    br = BlockRanker(block=_BLOCK, bucket=8, solver_config=_cfg())
+    _, info0 = br.extend(keys0).rank()
+    assert info0["blocks"] == 3
+    _, info1 = br.extend(_cluster(5.0, 9)[_BLOCK // 2:]).rank()
+    assert info1["blocks"] == 3          # tail filled up, no new block
+    assert info1["solved"] >= 1          # the tail re-solved
+
+
+# ---------------------------------------------------------------------------
+# pool_keys / apply_block_mask tail-block regressions
+
+
+def test_pool_keys_pools_partial_tail():
+    rng = np.random.default_rng(0)
+    keys = rng.standard_normal((10, 4)).astype(np.float32)
+    p = pool_keys(keys, block=4)
+    assert p.shape == (3, 4)             # ceil(10/4), not floor
+    tail = keys[8:].mean(0)
+    tail = tail / (np.linalg.norm(tail) + 1e-8)
+    np.testing.assert_allclose(p[2], tail, atol=1e-6)
+    # full blocks unchanged vs the exact-multiple case
+    np.testing.assert_allclose(p[:2], pool_keys(keys[:8], block=4),
+                               atol=1e-6)
+
+
+def test_apply_block_mask_tail_follows_its_block():
+    ck = jnp.ones((1, 10, 2, 3))
+    cv = jnp.ones((1, 10, 2, 3))
+    # ceil-blocks mask: the tail keys follow their block's decision
+    k2, v2 = apply_block_mask(ck, cv, np.array([True, False, True]),
+                              block=4)
+    expect = np.array([1, 1, 1, 1, 0, 0, 0, 0, 1, 1], float)
+    np.testing.assert_array_equal(np.asarray(k2[0, :, 0, 0]), expect)
+    np.testing.assert_array_equal(np.asarray(v2[0, :, 0, 0]), expect)
+    # evicting the tail block really evicts the tail keys now
+    k3, _ = apply_block_mask(ck, cv, np.array([True, False, False]),
+                             block=4)
+    np.testing.assert_array_equal(
+        np.asarray(k3[0, :, 0, 0]),
+        np.array([1, 1, 1, 1, 0, 0, 0, 0, 0, 0], float))
+    # a legacy short mask still pads its uncovered tail as kept
+    k4, _ = apply_block_mask(ck, cv, np.array([True, False]), block=4)
+    np.testing.assert_array_equal(np.asarray(k4[0, :, 0, 0]), expect)
