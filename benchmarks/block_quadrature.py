@@ -1,0 +1,151 @@
+"""Block-Krylov vs scalar quadrature at EQUAL matvec budget (Sec. 13).
+
+The workload: ``tr f(A)`` (f = log for logdet, f = inv for the trace of
+the inverse) on a spiked-spectrum SPD matrix — a bulk uniform on [1, 4]
+plus a handful of tiny eigenvalues log-spaced in [1e-3, 1e-2] under a
+seeded random orthogonal similarity. The spikes are exactly the regime
+where scalar Lanczos stalls: each probe's Krylov space must rediscover
+the tiny eigenvalues alone, while a width-b block lane shares one
+deflated basis across its b probes.
+
+Budget accounting: a width-b lane performs b matvecs per block-Lanczos
+iteration (one ``matvec_mrhs`` gemm), and P probes occupy P/b lanes, so
+``total matvecs = P * iters`` for EVERY b — equal ``(num_probes,
+max_iters)`` is an equal matvec/FLOP budget. Per-iteration FLOPs are
+also equal in wall-clock terms on the scalar side: the scalar driver
+already gemm-batches its P probe lanes, so the block win reported here
+is deflation-driven earlier bracket resolution, not dense-algebra
+throughput (DESIGN.md Sec. 13 spells this out).
+
+Two probe regimes per (N, f):
+
+  * exact unit-probe mode (``num_probes=None``, the headline): se = 0,
+    so the CI the decision rules consume IS the certified deterministic
+    bracket — the block narrowing is pure quadrature convergence;
+  * Hutchinson mode at fixed P: the variance-reduced block estimator.
+    Sampling noise dominates the CI at practical P, so the honest
+    block win there is the per-probe bracket width and the resolved
+    count, with the se reduction reported as-is.
+
+Reported per b: wall clock, CI width, deterministic bracket width, mean
+iterations to the final width, resolved probes (lanes certified before
+the iteration cap), and the headline ratios vs the b = 1 column —
+CI width per GFLOP and wall clock per resolved probe.
+
+Tables land in ``BENCH_block_quadrature.json`` at the repo root via
+``benchmarks/run.py``; ``BENCH_TINY=1`` shrinks to a smoke size that
+does NOT clobber the tracked json (the PR-4 convention).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import row
+from repro.core import Dense, trace_quad
+
+_N_SPIKES = 6
+
+
+def _problem(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    bulk = rng.uniform(1.0, 4.0, n - _N_SPIKES)
+    spikes = np.logspace(-3.0, -2.0, _N_SPIKES)
+    w = np.concatenate([spikes, bulk])
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    a = (q * w) @ q.T
+    a = (a + a.T) / 2
+    return a, float(w.min() * 0.999), float(w.max() * 1.001), w
+
+
+def _time(fn, repeats=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _bench_one(n: int, fn: str, probes, max_iters: int,
+               block_sizes: tuple):
+    a, lam_min, lam_max, w = _problem(n)
+    truth = float(np.sum(np.log(w) if fn == "log" else 1.0 / w))
+    op = Dense(jnp.asarray(a))
+    key = jax.random.key(0)
+    out = {"truth": round(truth, 4),
+           "num_probes": "exact" if probes is None else probes,
+           "max_iters": max_iters}
+    for b in block_sizes:
+        def go():
+            return trace_quad(op, fn, probes, lam_min=lam_min,
+                              lam_max=lam_max, max_iters=max_iters,
+                              rtol=1e-5, atol=1e-5, key=key,
+                              block_size=b)
+        r = go()  # cold call doubles as the jit warmup
+        # exact mode at N=1024 runs tens of seconds per solve and is
+        # deterministic, so a single warm timing is representative
+        wall = _time(go, repeats=1, warmup=0) if probes is None \
+            else _time(go)
+        its = np.asarray(r.state.iterations)
+        resolved = min(int((its < max_iters).sum()) * b, r.num_probes)
+        matvecs = r.num_probes * float(its.mean())
+        gflops = 2.0 * n * n * matvecs / 1e9
+        ci = float(r.stat_upper - r.stat_lower)
+        out[f"b{b}"] = {
+            "wall_s": round(wall, 5),
+            "ci_width": round(ci, 6),
+            "det_bracket_width": round(float(r.upper - r.lower), 6),
+            "std_error": round(float(r.std_error), 5),
+            "iters_mean": round(float(its.mean()), 1),
+            "resolved_probes": resolved,
+            "matvecs": int(matvecs),
+            "ci_width_per_gflop": round(ci / gflops, 6),
+            "wall_per_resolved_probe_ms": round(
+                wall / max(resolved, 1) * 1e3, 3),
+            "stat_contains_truth": bool(r.stat_lower <= truth
+                                        <= r.stat_upper),
+        }
+    b1 = out[f"b{block_sizes[0]}"]
+    for b in block_sizes[1:]:
+        bb = out[f"b{b}"]
+        bb["ci_narrowing_vs_scalar"] = round(
+            b1["ci_width"] / max(bb["ci_width"], 1e-300), 2)
+        bb["wall_per_probe_speedup_vs_scalar"] = round(
+            b1["wall_per_resolved_probe_ms"]
+            / max(bb["wall_per_resolved_probe_ms"], 1e-300), 2)
+    return out
+
+
+def run(quick: bool = True):
+    if os.environ.get("BENCH_TINY"):
+        configs = [(64, "log", None, 12, (1, 4))]
+    else:
+        configs = [(256, "log", None, 24, (1, 4, 8)),
+                   (256, "inv", None, 24, (1, 4, 8)),
+                   (1024, "log", None, 24, (1, 4, 8)),
+                   (1024, "inv", None, 24, (1, 4, 8)),
+                   # P = 64 keeps >= 8 lane means in the block CI --
+                   # fewer lanes make the ddof=1 normal interval itself
+                   # too noisy to report
+                   (256, "log", 64, 24, (1, 4, 8)),
+                   (1024, "log", 64, 24, (1, 4, 8))]
+    rows, tables = [], {}
+    for n, fn, probes, max_iters, bs in configs:
+        r = _bench_one(n, fn, probes, max_iters, bs)
+        tag = "exact" if probes is None else f"p{probes}"
+        tables[f"n{n}_{fn}_{tag}"] = r
+        top = r[f"b{bs[-1]}"]
+        rows.append(row(
+            f"block_quadrature_n{n}_{fn}_{tag}_b{bs[-1]}",
+            top["wall_s"] * 1e6,
+            f"ci_narrow_{top.get('ci_narrowing_vs_scalar', 1.0)}x_"
+            f"wallprobe_{top.get('wall_per_probe_speedup_vs_scalar', 1.0)}x"))
+    return rows, tables

@@ -46,6 +46,39 @@ def run(quick: bool = True):
                     f"valid={ok};stored_blocks={nb};dense_blocks={dense_nb};"
                     f"flop_saving={dense_nb/max(nb,1):.1f}x"))
 
+    # blocked matvec: ONE gemm over a row-stacked probe block vs b
+    # stacked gemvs (the block-Krylov workhorse, DESIGN.md Sec. 13).
+    # Dense goes through operators.matvec_mrhs; BELL through the mrhs
+    # pallas kernel (column-stacked X rides one pass over the blocks).
+    from repro.core import operators as _op
+    import jax as _jx
+    bw = 8
+    ad = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+    dop = _op.Dense((ad + ad.T) / 2)
+    xb = jnp.asarray(rng.standard_normal((bw, 512)), jnp.float32)
+    gemm_fn = _jx.jit(lambda x_: _op.matvec_mrhs(dop, x_))
+    gemv_fn = _jx.jit(lambda x_: jnp.stack(
+        [dop.matvec(x_[i]) for i in range(bw)]))
+    ok = np.allclose(gemm_fn(xb), gemv_fn(xb), rtol=1e-5, atol=1e-4)
+    t_gemm, t_gemv = time_fn(gemm_fn, xb), time_fn(gemv_fn, xb)
+    a_bytes = 4 * 512 * 512
+    rows.append(row("dense_matvec_mrhs_b8_N512", t_gemm * 1e6,
+                    f"valid={ok};stacked_gemv_us={t_gemv * 1e6:.2f};"
+                    f"a_bytes_gemm={a_bytes};a_bytes_gemv={bw * a_bytes};"
+                    "one (b,N)@(N,N) gemm reads A once per block-Lanczos "
+                    "iter vs b passes (CPU walls are not accel perf)"))
+    xc = jnp.asarray(rng.standard_normal((data.shape[0] * 64, bw)),
+                     jnp.float32)
+    ym = ops.bell_matvec_mrhs(data, cols, xc, interpret=True)
+    ys = jnp.stack([ops.bell_matvec(data, cols, xc[:, i], interpret=True)
+                    for i in range(bw)], axis=-1)
+    ok = np.allclose(ym, ys, atol=1e-4)
+    blk_fl = 2 * nb * 64 * 64 * bw
+    rows.append(row("pallas_bell_mrhs_b8_N1024", 0.0,
+                    f"valid={ok};flops={blk_fl};"
+                    "each stored (bs,bs) block does one (bs,bs)@(bs,b) "
+                    "MXU gemm -- b columns ride one block walk"))
+
     # realizable GQL states from a short real run (not random garbage)
     from repro.core import Dense, gql, lanczos
     from .conftest_shim import make_spd

@@ -33,12 +33,13 @@ MODULES = [
     "engine_throughput",      # lockstep vs continuous batching (Sec. 8)
     "trace_logdet",           # bracketed logdet vs dense slogdet (Sec. 9)
     "incremental_greedy",     # factor carry vs warm vs scratch (Sec. 12)
+    "block_quadrature",       # block-Krylov vs scalar probes (Sec. 13)
 ]
 
 # Suites whose tables are ALSO written to BENCH_<name>.json at the repo
 # root, so the perf trajectory is tracked in-tree across PRs.
 ROOT_TRACKED = {"batched_judges", "sharded_judges", "engine_throughput",
-                "trace_logdet", "incremental_greedy"}
+                "trace_logdet", "incremental_greedy", "block_quadrature"}
 
 
 def main() -> None:

@@ -47,6 +47,7 @@ _ROLE_SUFFIX = {
     "sharded": ("src", "repro", "core", "sharded.py"),
     "engine": ("src", "repro", "serve", "engine.py"),
     "update": ("src", "repro", "core", "update.py"),
+    "block": ("src", "repro", "core", "block.py"),
 }
 _ROLE_MODULE = {
     "solver": "repro.core.solver",
@@ -55,6 +56,7 @@ _ROLE_MODULE = {
     "sharded": "repro.core.sharded",
     "engine": "repro.serve.engine",
     "update": "repro.core.update",
+    "block": "repro.core.block",
 }
 
 
@@ -435,6 +437,77 @@ def check_contracts(contexts: Iterable[FileContext]) -> list:
                     matfun_rel, upd.lineno, RULE,
                     f"update_coeffs neither writes CoeffHistory field "
                     f"'{f}' nor lists it in COEFF_REPLACE_EXCLUDED"))
+
+    # ---- BlockState: pytree registration + step writer ----------------
+    # The block-Krylov recurrence state (core/block.py, DESIGN.md
+    # Sec. 13) rides QuadState.st through the same freeze/shard/resume
+    # handlers as GQLState; its per-step writer is `block_step`'s
+    # dataclasses.replace. A field added to the dataclass but not
+    # registered would silently fall out of the pytree; one the writer
+    # neither rewrites nor excludes would go stale across steps.
+    try:
+        block_mod = _import_role(roles, "block")
+    except Exception as e:  # pragma: no cover - import environment broken
+        rel, _ = _parse(roles, "block")
+        findings.append(Finding(rel, 1, RULE,
+                                f"cannot import repro.core.block to read "
+                                f"the live BlockState fields: {e!r}"))
+        return findings
+    block_rel, block_tree = _parse(roles, "block")
+    bfields = tuple(f.name for f in
+                    dataclasses.fields(block_mod.BlockState))
+    bline = _class_line(block_tree, "BlockState")
+    reg = None
+    for node in ast.walk(block_tree):
+        if isinstance(node, ast.Call) \
+                and _call_name(node) == "register_dataclass":
+            reg = node
+            break
+    if reg is None:
+        findings.append(Finding(
+            block_rel, bline, RULE,
+            "BlockState is not register_dataclass-ed (it would stop "
+            "being a pytree and fall out of freeze/shard/resume)"))
+    else:
+        declared = set()
+        for kw in reg.keywords:
+            if kw.arg in ("data_fields", "meta_fields") \
+                    and isinstance(kw.value, (ast.List, ast.Tuple)):
+                declared.update(e.value for e in kw.value.elts
+                                if isinstance(e, ast.Constant))
+        for f in bfields:
+            if f not in declared:
+                findings.append(Finding(
+                    block_rel, reg.lineno, RULE,
+                    f"BlockState field '{f}' missing from its "
+                    f"register_dataclass field lists — the pytree would "
+                    f"silently drop it"))
+    block_excluded = _tuple_literal(block_mod,
+                                    "BLOCK_REPLACE_EXCLUDED") or ()
+    if _tuple_literal(block_mod, "BLOCK_REPLACE_EXCLUDED") is None:
+        findings.append(Finding(
+            block_rel, bline, RULE,
+            "`BLOCK_REPLACE_EXCLUDED` registry missing from "
+            "core/block.py (fields the per-step writer deliberately "
+            "never rewrites)"))
+    bstep = _find_def(block_tree, "block_step")
+    if bstep is None:
+        findings.append(Finding(
+            block_rel, bline, RULE,
+            "block_step not found (the block recurrence writer)"))
+    else:
+        written = set()
+        for node in ast.walk(bstep):
+            if isinstance(node, ast.Call) \
+                    and _call_name(node) in ("replace", "BlockState"):
+                written.update(kw.arg for kw in node.keywords if kw.arg)
+        for f in bfields:
+            if f not in written and f not in block_excluded:
+                findings.append(Finding(
+                    block_rel, bstep.lineno, RULE,
+                    f"block_step neither writes BlockState field '{f}' "
+                    f"nor lists it in BLOCK_REPLACE_EXCLUDED — the "
+                    f"recurrence would silently carry a stale value"))
 
     # ---- ChainFactor: pytree registration + carry writers -------------
     # The incremental-chain factor (core/update.py, DESIGN.md Sec. 12)

@@ -54,11 +54,23 @@ probes as lanes for bracketed ``tr f(A)`` — ``logdet_quad`` /
     res = s.solve(op, u, lam_min=lmn, lam_max=lmx)  # brackets u^T log(A) u
     ld = trace_quad(op, 'log', None, lam_min=lmn, lam_max=lmx)  # logdet
 
+Block-Krylov mode (DESIGN.md Sec. 13): ``SolverConfig(block_size=b)``
+runs each lane as a b-wide probe BLOCK through the block three-term
+recurrence (core/block.py) and brackets ``tr B^T f(A) B`` with
+matrix-valued Gauss/Radau rules — one gemm per iteration instead of b
+gemvs, near-parallel probes deflate. ``trace_quad(block_size=b)``
+groups its Hutchinson probes into blocks on the same stream::
+
+    s = BIFSolver.create(max_iters=32, fn='log', block_size=8)
+    res = s.solve_batch(op, zs, lam_min=lmn, lam_max=lmx)  # zs: (K, 8, N)
+    tr = trace_quad(op, 'log', 64, block_size=8, lam_min=lmn, lam_max=lmx)
+
 Public API:
 
   solver.{BIFSolver, SolverConfig, SolveResult, JudgeResult,
           ArgmaxResult, QuadratureTrace}            -- THE entry point
   matfun.{REGISTRY, SpectralFn, CoeffHistory}       -- u^T f(A) u brackets
+  block.{BlockState, block_init, block_step}        -- tr B^T f(A) B blocks
   trace.{trace_quad, logdet_quad, TraceQuadResult}  -- stochastic traces
   dpp.log_likelihood                                -- bracketed log P(Y)
   sharded.{ShardedBIFSolver, solve_batch_sharded, judge_batch_sharded,
@@ -79,12 +91,13 @@ The PR-2 deprecation shims (``bif_bounds``, ``bif_refine_until``,
 schedule — use the ``BIFSolver.create(...)`` equivalents; quadlint
 QL005 (``python -m repro.analysis``) keeps them from coming back.
 """
-from . import bounds, double_greedy, dpp, gql, lanczos, \
+from . import block, bounds, double_greedy, dpp, gql, lanczos, \
     loop_utils, matfun, operators, sharded, solver, spectrum, \
     trace, update  # noqa: F401
 
 from .solver import ArgmaxResult, BIFSolver, JudgeResult, PairState, \
     QuadratureTrace, QuadState, SolveResult, SolverConfig  # noqa: F401
+from .block import BlockState  # noqa: F401
 from .sharded import ShardedBIFSolver  # noqa: F401
 from .loop_utils import tree_freeze  # noqa: F401
 from .matfun import CoeffHistory, SpectralFn  # noqa: F401

@@ -1,0 +1,396 @@
+"""Block-Krylov quadrature: matrix-valued brackets on ``B^T f(A) B``.
+
+The scalar machinery (gql.py / matfun.py) brackets ``u^T f(A) u`` one
+vector at a time; every hot path that wants K coupled systems therefore
+runs K gemv recurrences where a single gemm would do. Zimmerling,
+Druskin & Simoncini (arxiv 2407.21505) extend the whole bracket story to
+block Lanczos: for a starting block ``B = [u_1 .. u_b]`` the block
+three-term recurrence builds a block-tridiagonal ``J_k``, and the
+matrix-valued Gauss and Gauss-Radau rules
+
+    G_k      =        R_0^T [f(J_k)]_{11}      R_0          (Gauss)
+    G_k^lr   =        R_0^T [f(J_k^lr)]_{11}   R_0          (Radau @ lam_min)
+    G_k^rr   =        R_0^T [f(J_k^rr)]_{11}   R_0          (Radau @ lam_max)
+
+are Loewner-ordered PSD approximants of ``B^T f(A) B`` with the same
+containment/monotonicity guarantees as the scalar rules (the
+derivative-sign table of matfun.py decides which side each rule bounds,
+exactly as for b = 1). Their TRACES feed the existing scalar decision
+rules unchanged — ``tr B^T f(A) B`` is what the block Hutchinson
+estimator wants anyway (one certificate per block of b probes).
+
+Execution model mirrors gql.py:
+
+  * row-convention storage: blocks live as (..., b, N) row stacks so one
+    ``operators.matvec_mrhs`` call advances all b columns per iteration
+    — ONE gemm instead of b gemvs on Dense/BELL backends;
+  * QR-based ``B_j`` normalization by modified Gram-Schmidt with
+    FIXED-SHAPE deflation: a residual column whose norm falls under the
+    breakdown tolerance gets a zero basis row and a zero R diagonal
+    (its projection coefficients are kept, so ``Z = Q B`` stays exact
+    up to the tolerance). Dead slots self-propagate — their matvecs,
+    recurrence rows and couplings are exact zeros — and contribute
+    decoupled zero-eigenvalue / zero-weight pairs to ``J_k``, so the
+    quadrature never sees them (clamped ``f`` keeps them finite). A
+    fully deflated block is Krylov exhaustion: Gauss is exact and the
+    bracket collapses onto it, the block twin of gql.py's Lemma-15 rule;
+  * the Radau extensions use the block pivot recurrences
+    ``D_1 = A_1 - lam I``, ``D_{j+1} = A_{j+1} - lam I - B_j D_j^-1
+    B_j^T`` (the block twin of gql.py's running ``delta_lr/delta_rr``
+    scalars) with eigenvalue-clamped inverses mirroring gql.py's
+    ``max(d, eps)`` guards — at b = 1 the two reduce to the same
+    formulas;
+  * everything is lockstep-batched over leading lane dims with masked
+    freezing; :class:`BlockState` rides ``QuadState.st`` exactly like
+    the scalar ``GQLState`` (DESIGN.md Sec. 13).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import matfun as _matfun
+from . import operators as _ops
+from .lanczos import BREAKDOWN_TOL
+
+Array = jax.Array
+
+_EPS = 1e-30
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockState:
+    """Per-lane block-Lanczos recurrence state (DESIGN.md Sec. 13).
+
+    Row convention: ``q``/``q_prev`` store Q_j^T — shape (..., b, N),
+    slot i is the i-th block column. After iteration j the state holds
+    Q_{j+1} in ``q`` (the next basis block, like ``LanczosState.v``),
+    ``b_cur = B_j`` (the subdiagonal factor that produced it), the
+    histories ``a_hist[..., i, :, :] = A_{i+1}`` / ``b_hist[..., i, :,
+    :] = B_{i+1}`` for i < it, and the running Radau pivot blocks of
+    ``J_j - lam_min I`` / ``J_j - lam_max I``. ``r0`` is the initial QR
+    factor (U = Q_1 R_0) that scales the bracket matrices; ``fnidx``
+    names each lane's spectral function by matfun registry index.
+    ``live`` flags non-deflated slots of ``q``; ``done`` is full-block
+    deflation (Krylov exhaustion), ``it`` the completed block
+    iterations (each advancing b Krylov columns).
+    """
+    q_prev: Array     # (..., b, N)
+    q: Array          # (..., b, N)
+    b_cur: Array      # (..., b, b) B_it — couples block it to it+1
+    a_hist: Array     # (..., M, b, b)
+    b_hist: Array     # (..., M, b, b)
+    delta_lr: Array   # (..., b, b) last block pivot of J_it - lam_min I
+    delta_rr: Array   # (..., b, b) last block pivot of J_it - lam_max I
+    r0: Array         # (..., b, b) initial QR factor of the probe block
+    fnidx: Array      # (...,) int32 — matfun registry index
+    live: Array       # (..., b) bool — non-deflated slots of q
+    done: Array       # (...,) bool — fully deflated (exhausted)
+    it: Array         # (...,) int32 — block iterations completed
+
+
+jax.tree_util.register_dataclass(
+    BlockState,
+    data_fields=["q_prev", "q", "b_cur", "a_hist", "b_hist", "delta_lr",
+                 "delta_rr", "r0", "fnidx", "live", "done", "it"],
+    meta_fields=[])
+
+# BlockState threading contract (quadlint QL001): fields the per-step
+# writer deliberately never rewrites. `r0` is the initial QR factor and
+# `fnidx` the lane's spectral function — both set at init, constant
+# across steps; block_step only advances the recurrence fields.
+BLOCK_REPLACE_EXCLUDED = ("r0", "fnidx")
+
+
+def _gram(q: Array, w: Array) -> Array:
+    """(..., b, N) x (..., b, N) -> (..., b, b): out[l, m] = q_l . w_m.
+    Multiply-then-reduce (not dot_general) so the b = 1 slot reproduces
+    the scalar recurrence's ``sum(v * w)`` bit-for-bit."""
+    return jnp.sum(q[..., :, None, :] * w[..., None, :, :], axis=-1)
+
+
+def _rowmat(a: Array, q: Array) -> Array:
+    """(..., b, b) @ (..., b, N) row stacks: out[i] = sum_k a[i,k] q_k.
+    Multiply-then-reduce for the same b = 1 bit-parity reason."""
+    return jnp.sum(a[..., :, :, None] * q[..., None, :, :], axis=-2)
+
+
+def block_qr(z: Array, live_in: Array, tol: Array):
+    """Modified Gram-Schmidt QR of a (..., b, N) row stack with
+    fixed-shape deflation: ``Z = R^T @ Q`` in row form (column form
+    ``Z^T = Q^T R`` with R upper triangular).
+
+    Slot i deflates when its orthogonalized residual norm is <= ``tol``
+    (or ``live_in[i]`` is already False): its basis row and R diagonal
+    are exact zeros, while the projection coefficients R[l, i] (l < i)
+    are KEPT so the factorization stays exact up to the dropped-norm
+    tolerance. Dead input rows (exact zeros) project to zero against
+    everything and deflate for free.
+
+    Returns ``(q, r, live)``: orthonormal live rows / zero dead rows,
+    the (..., b, b) upper-triangular factor, and the per-slot liveness.
+    """
+    b = z.shape[-2]
+    r = jnp.zeros(z.shape[:-2] + (b, b), z.dtype)
+    qs, lives = [], []
+    for i in range(b):
+        zi = z[..., i, :]
+        for l in range(i):  # noqa: E741 — textbook MGS index
+            proj = jnp.sum(qs[l] * zi, axis=-1)
+            r = r.at[..., l, i].set(proj)
+            zi = zi - proj[..., None] * qs[l]
+        nrm = jnp.linalg.norm(zi, axis=-1)
+        alive = live_in[..., i] & (nrm > tol)
+        qi = jnp.where(alive[..., None],
+                       zi / jnp.maximum(nrm, _EPS)[..., None], 0.0)
+        r = r.at[..., i, i].set(jnp.where(alive, nrm, 0.0))
+        qs.append(qi)
+        lives.append(alive)
+    return (jnp.stack(qs, axis=-2), r, jnp.stack(lives, axis=-1))
+
+
+def _clamped_inv(m: Array, lower: bool) -> Array:
+    """Inverse of a (nearly) definite pivot block via eigenvalue
+    clamping — the block twin of gql.py's ``max(d_lr, eps)`` /
+    ``min(d_rr, -eps)`` sign guards. ``lower=True`` clamps eigenvalues
+    up to +eps (pivots of J - lam_min I, PD on the live subspace);
+    ``lower=False`` clamps down to -eps. Dead slots contribute exact
+    decoupled eigenpairs whose coupling columns are exact zeros, so
+    their clamped reciprocals never reach the recurrence."""
+    ms = 0.5 * (m + jnp.swapaxes(m, -1, -2))
+    w, v = jnp.linalg.eigh(ms)
+    w = jnp.maximum(w, _EPS) if lower else jnp.minimum(w, -_EPS)
+    return jnp.einsum("...as,...s,...cs->...ac", v, 1.0 / w, v)
+
+
+def _sandwich(b: Array, m: Array) -> Array:
+    """B @ M @ B^T for (..., b, b) blocks."""
+    return jnp.einsum("...ab,...bc,...dc->...ad", b, m, b)
+
+
+def _lam_block(lam, b: int, dtype) -> Array:
+    """lam * I_b with lam scalar or per-lane (...,)."""
+    lam = jnp.asarray(lam, dtype)
+    return lam[..., None, None] * jnp.eye(b, dtype=dtype)
+
+
+def block_init(op, u: Array, lam_min, lam_max, fn: str | Array,
+               rows: int) -> BlockState:
+    """QR of the starting block + block iteration 1.
+
+    ``u`` is the (..., b, N) row-stacked probe block; ``rows`` sizes the
+    A/B history (capacity in block iterations — the solver freezes lanes
+    at the cap exactly like an iteration budget). Rank-deficient
+    starting blocks (duplicate / zero probe columns) deflate at the
+    initial QR; a fully zero block is done at iteration one, the same
+    dummy-lane rule the scalar driver uses.
+    """
+    u = jnp.asarray(u)
+    b = u.shape[-2]
+    dtype = u.dtype
+    # relative deflation tolerance: duplicate columns deflate, tiny but
+    # independent ones survive (scaled by the largest probe norm)
+    norms = jnp.linalg.norm(u, axis=-1)
+    tol0 = BREAKDOWN_TOL * jnp.maximum(jnp.max(norms, axis=-1), _EPS)
+    live0 = jnp.ones(u.shape[:-1], bool)
+    q1, r0, live1 = block_qr(u, live0, tol0)
+
+    w = _ops.matvec_mrhs(op, q1)
+    a_raw = _gram(q1, w)
+    a1 = 0.5 * (a_raw + jnp.swapaxes(a_raw, -1, -2))
+    scale = jnp.max(jnp.abs(a1), axis=(-2, -1))
+    z = w - _rowmat(a1, q1)
+    q2, b1, live2 = block_qr(z, live1,
+                             BREAKDOWN_TOL * jnp.maximum(scale, 1.0))
+
+    lane_shape = u.shape[:-2]
+    if isinstance(fn, str):
+        fnidx = jnp.full(lane_shape, _matfun.fn_index(fn), jnp.int32)
+    else:
+        fnidx = jnp.broadcast_to(jnp.asarray(fn, jnp.int32), lane_shape)
+
+    hist_shape = lane_shape + (rows, b, b)
+    a_hist = jnp.zeros(hist_shape, dtype).at[..., 0, :, :].set(a1)
+    b_hist = jnp.zeros(hist_shape, dtype).at[..., 0, :, :].set(b1)
+    return BlockState(
+        q_prev=q1, q=q2, b_cur=b1, a_hist=a_hist, b_hist=b_hist,
+        delta_lr=a1 - _lam_block(lam_min, b, dtype),
+        delta_rr=a1 - _lam_block(lam_max, b, dtype),
+        r0=r0, fnidx=fnidx, live=live2,
+        done=~jnp.any(live2, axis=-1),
+        it=jnp.ones(lane_shape, jnp.int32))
+
+
+def block_step(op, st: BlockState, lam_min, lam_max) -> BlockState:
+    """One block three-term-recurrence iteration; done lanes pass
+    through unchanged (the solver's ``tree_freeze`` applies its own
+    decision-rule freezing on top, exactly like the scalar path)."""
+    b = st.q.shape[-2]
+    dtype = st.q.dtype
+    w = _ops.matvec_mrhs(op, st.q)
+    a_raw = _gram(st.q, w)
+    a_new = 0.5 * (a_raw + jnp.swapaxes(a_raw, -1, -2))
+    scale = jnp.max(jnp.abs(a_new), axis=(-2, -1))
+    z = w - _rowmat(a_new, st.q) - _rowmat(st.b_cur, st.q_prev)
+    q_next, b_new, live_new = block_qr(
+        z, st.live, BREAKDOWN_TOL * jnp.maximum(scale, 1.0))
+
+    # block pivot recurrences D_{j+1} = A_{j+1} - lam I - B_j D_j^-1 B_j^T
+    # (at b = 1: alpha_n - lam - beta_p^2 / delta, gql.recurrence_update)
+    d_lr = a_new - _lam_block(lam_min, b, dtype) \
+        - _sandwich(st.b_cur, _clamped_inv(st.delta_lr, lower=True))
+    d_rr = a_new - _lam_block(lam_max, b, dtype) \
+        - _sandwich(st.b_cur, _clamped_inv(st.delta_rr, lower=False))
+
+    # history cursor write at the lane's own pre-step `it` (the
+    # update_coeffs pattern: budget-frozen lanes resume gaplessly)
+    m = st.a_hist.shape[-3]
+    hit = ((jnp.arange(m, dtype=st.it.dtype) == st.it[..., None])
+           & (~st.done)[..., None])[..., None, None]
+    a_hist = jnp.where(hit, a_new[..., None, :, :], st.a_hist)
+    b_hist = jnp.where(hit, b_new[..., None, :, :], st.b_hist)
+
+    upd = ~st.done
+    u1 = upd[..., None]
+    u2 = upd[..., None, None]
+
+    live = jnp.where(u1, live_new, st.live)
+    return dataclasses.replace(
+        st,
+        q_prev=jnp.where(u2, st.q, st.q_prev),
+        q=jnp.where(u2, q_next, st.q),
+        b_cur=jnp.where(u2, b_new, st.b_cur),
+        a_hist=a_hist, b_hist=b_hist,
+        delta_lr=jnp.where(u2, d_lr, st.delta_lr),
+        delta_rr=jnp.where(u2, d_rr, st.delta_rr),
+        live=live,
+        done=st.done | ~jnp.any(live, axis=-1),
+        it=st.it + upd.astype(jnp.int32))
+
+
+def _assemble(st: BlockState, lam_min, lam_max):
+    """Stacked (..., 3, S, S) block-tridiagonal matrices — J_it (Gauss)
+    plus its two one-BLOCK-row Radau extensions — in ONE fixed-size
+    buffer of S = (M+1)*b, with a decoupled identity tail past the
+    active blocks (zero off-diagonals => the tail's eigenvectors carry
+    zero first-block components and drop out of the weights). Variant
+    order on the stacked axis: (gauss, radau_left, radau_right)."""
+    dtype = st.a_hist.dtype
+    b = st.a_hist.shape[-1]
+    m = st.a_hist.shape[-3]
+    m1 = m + 1
+    it = st.it
+    eye_b = jnp.eye(b, dtype=dtype)
+
+    j1 = jnp.arange(m1, dtype=it.dtype)
+    jm = jnp.arange(m, dtype=it.dtype)
+    in_j1 = (j1 < it[..., None])[..., None, None]
+    at_ext = (j1 == it[..., None])[..., None, None]
+    in_gauss = (jm < (it - 1)[..., None])[..., None, None]
+    in_ext = (jm < it[..., None])[..., None, None]
+
+    # Park dead-slot diagonals at 1.0, like the identity tail. A dead
+    # slot's row/col of A_j is an exact zero, so leaving its eigenvalue
+    # at 0 would sit exactly where the clamped f blows up (safe_inv(0)
+    # ~ 1e30): the slot's weight is ~0, but eigh's ~eps eigenvector
+    # contamination times 1e30 is O(1) garbage. At 1.0 every registered
+    # f is tame, so the contamination stays ~eps. (Live diagonals of an
+    # SPD Rayleigh block are strictly positive — exact zero <=> dead.)
+    dead_fix = (jnp.diagonal(st.a_hist, axis1=-2, axis2=-1) == 0.0)
+    a_fixed = st.a_hist + dead_fix.astype(dtype)[..., None] * eye_b
+    hist_pad = jnp.concatenate(
+        [a_fixed, jnp.broadcast_to(eye_b, st.a_hist.shape[:-3] + (1, b, b))],
+        axis=-3)
+    diag_base = jnp.where(in_j1, hist_pad, eye_b)
+
+    # Radau extension blocks  A_hat = lam I + B_it D_it^-1 B_it^T
+    # (at b = 1: gql.extension_coefficients' alpha_lr / alpha_rr)
+    a_lr = _lam_block(lam_min, b, dtype) \
+        + _sandwich(st.b_cur, _clamped_inv(st.delta_lr, lower=True))
+    a_rr = _lam_block(lam_max, b, dtype) \
+        + _sandwich(st.b_cur, _clamped_inv(st.delta_rr, lower=False))
+    diag_lr = jnp.where(at_ext, a_lr[..., None, :, :], diag_base)
+    diag_rr = jnp.where(at_ext, a_rr[..., None, :, :], diag_base)
+
+    off_gauss = jnp.where(in_gauss, st.b_hist, 0.0)
+    off_ext = jnp.where(in_ext, st.b_hist, 0.0)
+
+    diags = jnp.stack([diag_base, diag_lr, diag_rr], axis=-4)
+    offs = jnp.stack([off_gauss, off_ext, off_ext], axis=-4)
+
+    # scatter the blocks into (..., 3, S, S): block-diagonal +
+    # superdiagonal B^T placements + the transposed subdiagonal
+    eye_m = jnp.eye(m1, dtype=dtype)
+    up_m = jnp.eye(m1, k=1, dtype=dtype)
+    offs = jnp.concatenate(
+        [offs, jnp.zeros(offs.shape[:-3] + (1, b, b), dtype)], axis=-3)
+    off_t = jnp.swapaxes(offs, -1, -2)     # B_{j+1}^T above the diagonal
+    t = (jnp.einsum("...jac,jk->...jakc", diags, eye_m)
+         + jnp.einsum("...jac,jk->...jakc", off_t, up_m))
+    s = m1 * b
+    t = t.reshape(t.shape[:-4] + (s, s))
+    sup = jnp.einsum("...jac,jk->...jakc", off_t, up_m)
+    sup = sup.reshape(sup.shape[:-4] + (s, s))
+    return t + jnp.swapaxes(sup, -1, -2)
+
+
+def _eig_weights(st: BlockState, lam_min, lam_max):
+    """(theta, g) of the stacked variants: Ritz values (..., 3, S) and
+    first-block weight vectors g[..., v, :, s] = R_0^T (v1)_s with v1
+    the first b components of eigenvector s — the bracket matrix is
+    ``sum_s f(theta_s) g_s g_s^T``."""
+    b = st.a_hist.shape[-1]
+    t = _assemble(st, lam_min, lam_max)
+    theta, vecs = jnp.linalg.eigh(t)
+    v1 = vecs[..., :b, :]                                  # (..., 3, b, S)
+    g = jnp.einsum("...la,...vls->...vas", st.r0, v1)      # (..., 3, b, S)
+    return theta, g
+
+
+def estimates(st: BlockState, lam_min, lam_max) -> Array:
+    """Traces of the three matrix-valued quadrature rules at the
+    current iteration, stacked (..., 3) in the order (gauss,
+    radau_left, radau_right). Exhausted lanes (full deflation — the
+    block measure is fully resolved) collapse onto the exact Gauss
+    value, the block twin of gql.py's Lemma-15 rule."""
+    theta, g = _eig_weights(st, lam_min, lam_max)
+    w = jnp.sum(g * g, axis=-2)                            # (..., 3, S)
+    est = jnp.sum(w * _matfun._FNS[0].apply(theta), axis=-1)
+    for f in _matfun._FNS[1:]:
+        est = jnp.where((st.fnidx == f.index)[..., None],
+                        jnp.sum(w * f.apply(theta), axis=-1), est)
+    return jnp.where(st.done[..., None], est[..., :1], est)
+
+
+def bracket_matrices(st: BlockState, lam_min, lam_max) -> Array:
+    """The three (..., 3, b, b) matrix-valued rules themselves —
+    Loewner-ordered PSD approximants of ``B^T f(A) B`` (oracle-checked
+    in tests/test_block.py; the runtime decisions consume only their
+    traces via :func:`bracket`)."""
+    theta, g = _eig_weights(st, lam_min, lam_max)
+    fv = _matfun._FNS[0].apply(theta)
+    for f in _matfun._FNS[1:]:
+        fv = jnp.where((st.fnidx == f.index)[..., None],
+                       f.apply(theta), fv)
+    mats = jnp.einsum("...vs,...vas,...vcs->...vac", fv, g, g)
+    return jnp.where(st.done[..., None, None, None],
+                     mats[..., :1, :, :], mats)
+
+
+def bracket(st: BlockState, lam_min, lam_max):
+    """Sign-aware oriented trace views: ``(lower, upper, loose_lower,
+    loose_upper)`` on ``tr B^T f(A) B``, oriented per the matfun
+    registry's derivative-sign table exactly like the scalar bracket.
+    There is no block Lobatto rule here, so the loose side that Lobatto
+    would supply duplicates the tight Radau bound on that side (the
+    loose bracket is still valid, just not looser)."""
+    est = estimates(st, lam_min, lam_max)
+    g, rl, rr = est[..., 0], est[..., 1], est[..., 2]
+    gauss_lower = jnp.asarray(_matfun._GAUSS_IS_LOWER)[st.fnidx]
+    lower = jnp.where(gauss_lower, rr, rl)
+    upper = jnp.where(gauss_lower, rl, rr)
+    loose_lower = jnp.where(gauss_lower, g, lower)
+    loose_upper = jnp.where(gauss_lower, upper, g)
+    return lower, upper, loose_lower, loose_upper

@@ -331,6 +331,94 @@ _register(MatvecFn, ["diag_vals"], ["fn", "n_static"])
 
 
 # ---------------------------------------------------------------------------
+# Multi-vector right-hand sides (block-Krylov mode, DESIGN.md Sec. 13)
+
+
+def matvec_mrhs(op, x: Array) -> Array:
+    """y = A @ X for a row-stacked block X of shape (..., b, N) — the
+    block-Lanczos workhorse. Row i of the output is ``op.matvec`` of row
+    i of ``x``, but shaped so Dense and BELL backends see ONE gemm per
+    operator application instead of b gemvs. Leading dims of ``x``
+    before the block axis are lanes and pair with lane-stacked operator
+    leaves exactly as in :meth:`matvec`; the block axis is always local
+    to each lane.
+
+    Semantics (not bit-level equality with b gemvs — a gemm may reduce
+    in a different order) match ``matvec`` row by row; the b = 1 slot of
+    every backend used by the solver reduces identically.
+    """
+    if isinstance(op, Dense):
+        # lanes broadcast against op.a's batch dims; b rides the gemm
+        return jnp.einsum("...ij,...bj->...bi", op.a, x)
+    if isinstance(op, SparseCOO):
+        if op.rows.ndim == 1:
+            return op.matvec(x)  # shared pattern broadcasts over (..., b)
+        # lane-stacked pattern: give the index arrays a length-1 block
+        # axis so the lockstep scatter broadcasts over the block slots
+        return dataclasses.replace(
+            op, rows=op.rows[..., None, :], cols=op.cols[..., None, :],
+            vals=op.vals[..., None, :],
+            diag_vals=op.diag_vals[..., None, :]).matvec(x)
+    if isinstance(op, SparseBELL):
+        return _bell_mrhs(op, x)
+    if isinstance(op, Masked):
+        m = op.mask.astype(x.dtype)
+        mb = m[..., None, :] if m.ndim > 1 else m
+        return mb * matvec_mrhs(op.base, mb * x) + (1.0 - mb) * x
+    if isinstance(op, Shifted):
+        s = jnp.asarray(op.sigma)
+        sb = s[..., None, None] if s.ndim else s
+        return matvec_mrhs(op.base, x) + sb * x
+    if isinstance(op, Jacobi):
+        c = op.inv_sqrt_diag
+        cb = c[..., None, :] if c.ndim > 1 else c
+        return cb * matvec_mrhs(op.base, cb * x)
+    # MatvecFn and anything else: closures take (..., N) batches, so the
+    # block axis is just another batch dim (no gemm shaping available)
+    return op.matvec(x)
+
+
+def _bell_mrhs(op: SparseBELL, x: Array) -> Array:
+    from ..kernels import spmv_bell as _sb  # deferred: pulls in pallas
+
+    r, _, bs, _ = op.data.shape[-4:]
+    pad = r * bs - x.shape[-1]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+    if op.mode == "reference":
+        if op.cols.ndim == 2:
+            y = _sb.bell_matvec_ref(op.data, op.cols, xp)
+        else:
+            # lane-stacked tables: length-1 block axis so the per-lane
+            # gather broadcasts over the (..., b, N) block rows
+            y = _sb.bell_matvec_ref(op.data[..., None, :, :, :, :],
+                                    op.cols[..., None, :, :], xp)
+    else:
+        from ..kernels import ops as _kops
+        lanes = jnp.broadcast_shapes(op.data.shape[:-4], xp.shape[:-2])
+        xb = jnp.broadcast_to(xp, lanes + xp.shape[-2:])
+        # kernel layout is column-stacked (N, b): one gemm per stored
+        # block across all b columns of the lane's block
+        xt = jnp.swapaxes(xb, -1, -2).astype(jnp.float32)
+        kern = lambda d, c, v: _kops.bell_matvec_mrhs(  # noqa: E731
+            d, c, v, interpret=op.interpret)
+        if not lanes:
+            y = kern(op.data, op.cols, xt)
+        elif op.data.ndim == 4:
+            flat = xt.reshape((-1,) + xt.shape[-2:])
+            y = jax.vmap(lambda v: kern(op.data, op.cols, v))(flat)
+        else:
+            db = jnp.broadcast_to(op.data, lanes + op.data.shape[-4:])
+            cb = jnp.broadcast_to(op.cols, lanes + op.cols.shape[-2:])
+            y = jax.vmap(kern)(
+                db.reshape((-1,) + db.shape[-4:]),
+                cb.reshape((-1,) + cb.shape[-2:]),
+                xt.reshape((-1,) + xt.shape[-2:]))
+        y = jnp.swapaxes(y, -1, -2)
+        y = y.reshape(lanes + y.shape[-2:]).astype(x.dtype)
+    return y[..., :op.n_static] if pad else y
+
+
+# ---------------------------------------------------------------------------
 # Batched-system helpers (DESIGN.md Sec. 6)
 
 

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from . import block as _block
 from . import gql as _gql
 from . import matfun as _matfun
 from . import operators as _ops
@@ -147,6 +148,12 @@ def init_state_sharded(solver: BIFSolver, op, u: Array, *, mesh,
     the drive's steps. K that does not divide the device count pads with
     zero-query done-at-init lanes (Sec. 7.3); the returned state is the
     PADDED (K',) state — ``finalize_sharded(..., nlanes=K)`` slices back.
+
+    With ``config.block_size = b > 1`` the queries are (K, b, N)
+    row-stacked probe blocks and each lane carries a
+    :class:`block.BlockState` (DESIGN.md Sec. 13) — same padding rule
+    (zero blocks deflate fully at the init QR, so padding lanes are done
+    at iteration one), same per-leaf lane sharding.
     """
     cfg = solver.config
     if cfg.reorth:
@@ -154,34 +161,55 @@ def init_state_sharded(solver: BIFSolver, op, u: Array, *, mesh,
             "reorth is not implemented for the sharded driver; "
             "init_state_sharded requires reorth=False")
     u = jnp.asarray(u)
-    if u.ndim != 2:
+    if cfg.block_size > 1:
+        if u.ndim != 3 or u.shape[-2] != cfg.block_size:
+            raise ValueError(
+                f"init_state_sharded with block_size={cfg.block_size} "
+                f"wants (K, b, N) stacked probe blocks with "
+                f"b={cfg.block_size}, got shape {u.shape}")
+    elif u.ndim != 2:
         raise ValueError(
             f"init_state_sharded wants (K, N) stacked queries, got shape "
             f"{u.shape}")
     op, u, lam_min, lam_max = solver.prepare(op, u, lam_min, lam_max, probe)
+    lam_min = jnp.asarray(lam_min)
+    lam_max = jnp.asarray(lam_max)
+    if cfg.block_size > 1:
+        # estimating spectrum modes return per-probe bounds: union over
+        # the lane's block slots (same rule as the single-device init)
+        if lam_min.ndim > 1:
+            lam_min = jnp.min(lam_min, axis=-1)
+        if lam_max.ndim > 1:
+            lam_max = jnp.max(lam_max, axis=-1)
     k = u.shape[0]
     ndev = mesh.shape[axis]
     kp = -(-k // ndev) * ndev
     if kp != k:
-        u = jnp.pad(u, ((0, kp - k), (0, 0)))
+        u = jnp.pad(u, [(0, kp - k)] + [(0, 0)] * (u.ndim - 1))
         op = _pad_lane_op(op, k, kp, axis)
         lam_min = _pad_lane_lam(lam_min, k, kp)
         lam_max = _pad_lane_lam(lam_max, k, kp)
-    lam_min = jnp.asarray(lam_min)
-    lam_max = jnp.asarray(lam_max)
+
+    if cfg.block_size > 1:
+        def init_loc(op_loc, u_loc, lmn, lmx):
+            return _block.block_init(op_loc, u_loc, lmn, lmx, cfg.fn,
+                                     cfg.max_iters)
+    else:
+        def init_loc(op_loc, u_loc, lmn, lmx):
+            return _gql.gql_init(op_loc, u_loc, lmn, lmx)
 
     fn = shard_map(
-        lambda op_loc, u_loc, lmn, lmx: _gql.gql_init(op_loc, u_loc, lmn,
-                                                      lmx),
+        init_loc,
         mesh=mesh,
         in_specs=(_ops.lane_specs(op, axis), P(axis))
         + _lam_specs(lam_min, lam_max, axis),
         out_specs=P(axis), check_rep=False)
     st = fn(op, u, lam_min, lam_max)
     # the coefficient history is elementwise over lanes; allocated
-    # globally (like spectrum resolution) and sharded by the next drive
+    # globally (like spectrum resolution) and sharded by the next drive.
+    # Block states carry fn in the state itself (fnidx) — no coeffs.
     coeffs = _matfun.init_coeffs(st, cfg.fn, cfg.max_iters) \
-        if cfg.fn != "inv" else None
+        if cfg.fn != "inv" and cfg.block_size == 1 else None
     return QuadState(op=op, st=st, lam_min=lam_min, lam_max=lam_max,
                      basis=None, step=jnp.zeros((), jnp.int32),
                      coeffs=coeffs)
@@ -383,7 +411,13 @@ def solve_batch_sharded(solver: BIFSolver, op, u: Array, decide=None, *,
     devices).
     """
     u = jnp.asarray(u)
-    if u.ndim != 2:
+    b = solver.config.block_size
+    if b > 1:
+        if u.ndim != 3 or u.shape[-2] != b:
+            raise ValueError(
+                f"solve_batch_sharded with block_size={b} wants (K, b, N) "
+                f"stacked probe blocks with b={b}, got shape {u.shape}")
+    elif u.ndim != 2:
         raise ValueError(
             f"solve_batch_sharded wants (K, N) stacked queries, got shape "
             f"{u.shape}")
@@ -403,13 +437,22 @@ def solve_batch_sharded(solver: BIFSolver, op, u: Array, decide=None, *,
 def judge_batch_sharded(solver: BIFSolver, op, u: Array, t: Array, *,
                         mesh, axis: str = "lanes", lam_min=None,
                         lam_max=None, probe=None) -> JudgeResult:
-    """K threshold judges (Alg. 4) sharded over the lane mesh."""
+    """K threshold judges (Alg. 4) sharded over the lane mesh. With
+    ``block_size = b > 1`` the lanes are (K, b, N) probe blocks and the
+    thresholds apply to the per-lane ``tr B^T f(A) B`` brackets."""
     u = jnp.asarray(u)
-    if u.ndim != 2:
+    b = solver.config.block_size
+    if b > 1:
+        if u.ndim != 3 or u.shape[-2] != b:
+            raise ValueError(
+                f"judge_batch_sharded with block_size={b} wants (K, b, N) "
+                f"stacked probe blocks with b={b}, got shape {u.shape}")
+    elif u.ndim != 2:
         raise ValueError(
             f"judge_batch_sharded wants (K, N) stacked queries, got shape "
             f"{u.shape}")
-    ts = jnp.broadcast_to(jnp.asarray(t), u.shape[:-1])
+    lane_shape = u.shape[:-2] if b > 1 else u.shape[:-1]
+    ts = jnp.broadcast_to(jnp.asarray(t), lane_shape)
 
     def decide(lo, hi, ts):
         return (ts < lo) | (ts >= hi)
@@ -439,7 +482,14 @@ def judge_argmax_sharded(solver: BIFSolver, op, u: Array, *, mesh,
     loop alive.
     """
     u = jnp.asarray(u)
-    if u.ndim != 2:
+    bsz = solver.config.block_size
+    if bsz > 1:
+        if u.ndim != 3 or u.shape[-2] != bsz:
+            raise ValueError(
+                f"judge_argmax_sharded with block_size={bsz} wants "
+                f"(K, b, N) stacked probe blocks with b={bsz}, got shape "
+                f"{u.shape}")
+    elif u.ndim != 2:
         raise ValueError(f"judge_argmax_sharded wants (K, N) stacked "
                          f"queries, got shape {u.shape}")
     k = u.shape[0]
@@ -506,6 +556,11 @@ def judge_kdpp_swap_batch_sharded(solver: BIFSolver, op, u: Array,
     devices carry padding lanes; with D > 2 devices this trades idle
     devices for API uniformity — worth it only inside a larger sharded
     pipeline such as a mesh-resident k-DPP chain)."""
+    if solver.config.block_size > 1:
+        raise NotImplementedError(
+            "judge_kdpp_swap_batch_sharded stacks two scalar query "
+            "systems; block_size > 1 brackets tr B^T f(A) B and has no "
+            "swap-judge semantics — use block_size=1")
     uv = jnp.stack([jnp.asarray(u), jnp.asarray(v)], axis=0)
     t = jnp.asarray(t)
     p = jnp.asarray(p)

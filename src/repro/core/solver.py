@@ -57,6 +57,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import block as _block
 from . import gql as _gql
 from . import matfun as _matfun
 from . import operators as _ops
@@ -93,6 +94,13 @@ class SolverConfig:
     #                                  bit-exact; others bracket u^T f(A) u
     #                                  via the Jacobi-matrix eigensolve
     #                                  (DESIGN.md Sec. 9)
+    block_size: int = 1              # block-Krylov width b (DESIGN.md
+    #                                  Sec. 13): b > 1 runs the block
+    #                                  three-term recurrence on (..., b, N)
+    #                                  probe blocks, bracketing
+    #                                  tr B^T f(A) B per lane; b = 1 IS
+    #                                  the scalar driver (same code path,
+    #                                  bit-exact)
 
     def __post_init__(self):
         if self.spectrum not in _SPECTRA:
@@ -115,6 +123,20 @@ class SolverConfig:
                 "precondition='jacobi' is an identity for u^T A^-1 u only "
                 "(u^T f(A) u has no similarity-transform counterpart); "
                 "fn != 'inv' requires precondition='none'")
+        if self.block_size < 1:
+            raise ValueError(
+                f"block_size must be >= 1, got {self.block_size}")
+        if self.block_size > 1:
+            if self.reorth:
+                raise NotImplementedError(
+                    "reorthogonalization is not implemented for the block "
+                    "recurrence; block_size > 1 requires reorth=False")
+            if self.precondition != "none":
+                raise NotImplementedError(
+                    "preconditioning transforms each probe column "
+                    "separately and would break the block bracket's "
+                    "tr B^T f(A) B semantics; block_size > 1 requires "
+                    "precondition='none'")
 
 
 class SolveResult(NamedTuple):
@@ -190,10 +212,14 @@ class QuadState(NamedTuple):
     # Convenience views (the banked bracket a consumer can act on any
     # time; `it`/`done` for budget accounting).
     def bracket(self) -> tuple[Array, Array]:
-        """(lower, upper) in ONE pass — on matfun states the two sides
-        share a single Jacobi-matrix eigensolve, so prefer this over
-        reading ``.lower`` and ``.upper`` separately (each property
-        alone re-runs it)."""
+        """(lower, upper) in ONE pass — on matfun and block states the
+        two sides share a single Jacobi-matrix eigensolve, so prefer
+        this over reading ``.lower`` and ``.upper`` separately (each
+        property alone re-runs it)."""
+        if isinstance(self.st, _block.BlockState):
+            lo, hi, _, _ = _block.bracket(self.st, self.lam_min,
+                                          self.lam_max)
+            return lo, hi
         if self.coeffs is None:
             return _gql.lower_bound(self.st), _gql.upper_bound(self.st)
         lo, hi, _, _ = _matfun.bracket(self.coeffs, self.st, self.lam_min,
@@ -311,7 +337,19 @@ class BIFSolver:
         ``stepfn(op, st, lam_min, lam_max, basis)``. 'fused' routes the
         whole iteration (matvec + Lanczos + reorth + recurrence) through
         the ``kernels/lanczos_step.py`` megakernel; 'reference'/'pallas'
-        compose ``gql.gql_step`` with the configured recurrence."""
+        compose ``gql.gql_step`` with the configured recurrence.
+
+        With ``block_size > 1`` every backend steps the block recurrence
+        (``block.block_step``): the per-iteration work is already
+        gemm-shaped through ``operators.matvec_mrhs`` (the BELL pallas
+        path uses the multi-RHS kernel), so there is no separate fused
+        megakernel — the backend knob still picks the operator's matvec
+        execution mode via ``configure_backend``."""
+        if self.config.block_size > 1:
+            def block_step(op, st, lam_min, lam_max, basis=None):
+                return _block.block_step(op, st, lam_min, lam_max)
+
+            return block_step
         if self.config.backend == "fused":
             from ..kernels import ops as _kops  # deferred: pulls in pallas
             interpret = self.config.pallas_interpret
@@ -408,8 +446,12 @@ class BIFSolver:
     def _bracket2(self, st, coeffs, lam_min, lam_max):
         """The (lower, upper) bracket the stopping rules act on:
         the legacy GQL Radau views for fn='inv' (coeffs is None,
-        bit-exact with the pre-matfun solver), else the sign-aware
-        matfun bracket (DESIGN.md Sec. 9)."""
+        bit-exact with the pre-matfun solver), the block-quadrature
+        trace bracket on block states (DESIGN.md Sec. 13), else the
+        sign-aware matfun bracket (DESIGN.md Sec. 9)."""
+        if isinstance(st, _block.BlockState):
+            lo, hi, _, _ = _block.bracket(st, lam_min, lam_max)
+            return lo, hi
         if coeffs is None:
             return _gql.lower_bound(st), _gql.upper_bound(st)
         lo, hi, _, _ = _matfun.bracket(coeffs, st, lam_min, lam_max)
@@ -418,6 +460,8 @@ class BIFSolver:
     def _bracket4(self, st, coeffs, lam_min, lam_max):
         """(lower, upper, loose_lower, loose_upper): the tight Radau
         bracket plus the loose Gauss/Lobatto pair, oriented per fn."""
+        if isinstance(st, _block.BlockState):
+            return _block.bracket(st, lam_min, lam_max)
         if coeffs is None:
             return (_gql.lower_bound(st), _gql.upper_bound(st),
                     _gql.lower_bound_gauss(st), _gql.upper_bound_lobatto(st))
@@ -466,6 +510,9 @@ class BIFSolver:
                 # like an iteration budget (bracket stops tightening but
                 # stays sound) instead of silently corrupting estimates
                 ok = ok & (st.it < coeffs.alphas.shape[-1])
+            elif isinstance(st, _block.BlockState):
+                # same rule for the block A/B history buffer
+                ok = ok & (st.it < st.a_hist.shape[-3])
             if it_cap is not None:
                 ok = ok & (st.it < it_cap)
             return ok
@@ -499,8 +546,37 @@ class BIFSolver:
         ``config.reorth`` (default ``max_iters + 1``); ``coeff_rows``
         the alpha/beta history when ``config.fn != 'inv'`` (default
         ``max_iters``).
+
+        With ``config.block_size = b > 1`` the query is a row-stacked
+        probe BLOCK ``u`` of shape (..., b, N) and the state brackets
+        ``tr B^T f(A) B`` per lane via the block recurrence
+        (``coeff_rows`` then sizes the block A/B history, in block
+        iterations). b = 1 takes the scalar path below unchanged.
         """
         cfg = self.config
+        if cfg.block_size > 1:
+            u = jnp.asarray(u)
+            if u.ndim < 2 or u.shape[-2] != cfg.block_size:
+                raise ValueError(
+                    f"block_size={cfg.block_size} wants (..., b, N) "
+                    f"row-stacked probe blocks with b={cfg.block_size}, "
+                    f"got shape {u.shape}")
+            op, u, lam_min, lam_max = self.prepare(op, u, lam_min, lam_max,
+                                                   probe)
+            # estimating spectrum modes return per-probe bounds: take the
+            # union interval over the lane's block slots
+            lam_min = jnp.asarray(lam_min)
+            lam_max = jnp.asarray(lam_max)
+            if lam_min.ndim > u.ndim - 2:
+                lam_min = jnp.min(lam_min, axis=-1)
+            if lam_max.ndim > u.ndim - 2:
+                lam_max = jnp.max(lam_max, axis=-1)
+            st0 = _block.block_init(
+                op, u, lam_min, lam_max, cfg.fn,
+                cfg.max_iters if coeff_rows is None else coeff_rows)
+            return QuadState(op=op, st=st0, lam_min=lam_min,
+                             lam_max=lam_max, basis=None,
+                             step=jnp.zeros((), jnp.int32), coeffs=None)
         op, u, lam_min, lam_max = self.prepare(op, u, lam_min, lam_max,
                                                probe)
         st0 = _gql.gql_init(op, u, lam_min, lam_max)
@@ -747,14 +823,10 @@ class BIFSolver:
                                 probe=probe, basis_rows=num_iters + 1,
                                 coeff_rows=num_iters)
         stepfn = self._stepper()
-        scale = state.st.u_norm_sq
 
         def estimates(st, coeffs):
-            if coeffs is None:
-                return (st.g * scale, st.g_rr * scale, st.g_lr * scale,
-                        st.g_lo * scale)
-            lo, hi, loose_lo, loose_hi = _matfun.bracket(
-                coeffs, st, state.lam_min, state.lam_max)
+            lo, hi, loose_lo, loose_hi = self._bracket4(
+                st, coeffs, state.lam_min, state.lam_max)
             return (loose_lo, lo, hi, loose_hi)
 
         first = estimates(state.st, state.coeffs)
@@ -811,7 +883,13 @@ class BIFSolver:
         are identical to running ``solve`` on each lane alone.
         """
         u = jnp.asarray(u)
-        if u.ndim < 2:
+        min_ndim = 3 if self.config.block_size > 1 else 2
+        if u.ndim < min_ndim:
+            if self.config.block_size > 1:
+                raise ValueError(
+                    f"solve_batch with block_size={self.config.block_size} "
+                    f"wants (..., K, b, N) stacked probe blocks, got shape "
+                    f"{u.shape}; use solve() for a single block")
             raise ValueError(
                 f"solve_batch wants (..., K, N) stacked queries, got shape "
                 f"{u.shape}; use solve() for a single system")
@@ -936,6 +1014,11 @@ class BIFSolver:
         carries the unresolved systems' banked :class:`QuadState` forward
         instead of re-solving — bit-exact with the monolithic drive.
         """
+        if self.config.block_size > 1:
+            raise NotImplementedError(
+                "judge_kdpp_swap_batch stacks two scalar query systems; "
+                "block_size > 1 brackets tr B^T f(A) B and has no swap-"
+                "judge semantics — use block_size=1")
         uv = jnp.stack([jnp.asarray(u), jnp.asarray(v)], axis=-2)
 
         def bounds(lo, hi):
@@ -971,6 +1054,11 @@ class BIFSolver:
         ``operators.stack_masks(base, [x_mask, y_mask])``), ``uv`` the
         (..., 2, N) stacked queries. Same decision formulas as
         ``judge_double_greedy``; one stacked matvec per loop step."""
+        if self.config.block_size > 1:
+            raise NotImplementedError(
+                "judge_double_greedy_batch stacks two scalar query "
+                "systems; block_size > 1 brackets tr B^T f(A) B and has "
+                "no gain-judge semantics — use block_size=1")
 
         def gain_bounds(lo, hi):
             lo_p, hi_p = _log_gain_bounds(t, lo[..., 0], hi[..., 0])
@@ -1004,6 +1092,11 @@ class BIFSolver:
     # -- the pair driver (gap-weighted two-system refinement) ----------------
 
     def _prepare_pair(self, op_a, u, op_b, v, lam_min, lam_max):
+        if self.config.block_size > 1:
+            raise NotImplementedError(
+                "the gap-weighted pair driver refines two scalar systems; "
+                "block_size > 1 has no pair-judge semantics — use "
+                "block_size=1")
         if self.config.fn != "inv":
             raise NotImplementedError(
                 "the gap-weighted pair driver scores u^T A^-1 u only; "

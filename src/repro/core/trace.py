@@ -56,11 +56,16 @@ class TraceQuadState(NamedTuple):
     fn: str
     count: int                 # probes consumed so far
     exact: bool                # unit-vector mode (num_probes=None)
-    probe_lower: np.ndarray    # (count,) per-probe bracket lowers
-    probe_upper: np.ndarray    # (count,)
-    iterations: np.ndarray     # (count,) quadrature iterations per probe
+    probe_lower: np.ndarray    # (lanes,) per-lane bracket lowers; a lane
+    #                            is one probe (block_size=1) or one
+    #                            b-probe block (block_size=b)
+    probe_upper: np.ndarray    # (lanes,)
+    iterations: np.ndarray     # (lanes,) quadrature iterations per lane
     key_fp: tuple = ()         # PRNG-key fingerprint (empty in exact mode)
     interval: tuple = ()       # (lam_min, lam_max) the brackets used
+    block_size: int = 1        # probes per lane (DESIGN.md Sec. 13);
+    #                            resumes must match — banked lane
+    #                            brackets are tr over b-probe blocks
 
 
 class TraceQuadResult(NamedTuple):
@@ -85,7 +90,10 @@ def _rademacher_probe(key: Array, index: int, n: int, dtype) -> Array:
 def _probes(key, start: int, stop: int, n: int, dtype, exact: bool):
     if exact:
         # only the chunk's rows of I_N — never the full (N, N) identity,
-        # which would defeat probe_chunk's memory bounding at large N
+        # which would defeat probe_chunk's memory bounding at large N.
+        # Indices >= n (block-mode padding of the last block) produce
+        # exact-zero rows, which the block init QR deflates: dead slots
+        # contribute exactly 0 to the block trace.
         return jax.nn.one_hot(jnp.arange(start, stop), n, dtype=dtype)
     # one vmapped draw over the index range: bit-identical to per-index
     # _rademacher_probe calls (fold_in per index), one dispatch per chunk
@@ -98,7 +106,7 @@ def trace_quad(op, fn: str = "log", num_probes: Optional[int] = None, *,
                max_iters: int = 64, rtol: float = 1e-4, atol: float = 1e-8,
                key: Array | None = None, probe_chunk: int | None = None,
                confidence: float = 0.95, mesh=None,
-               lane_axis: str = "lanes",
+               lane_axis: str = "lanes", block_size: int = 1,
                state: TraceQuadState | None = None) -> TraceQuadResult:
     """Bracketed stochastic (or exact-probe) estimate of ``tr f(A)``.
 
@@ -113,23 +121,48 @@ def trace_quad(op, fn: str = "log", num_probes: Optional[int] = None, *,
     (the probe stream is keyed by index). ``fn``/mode must match the
     banked state.
 
+    ``block_size = b > 1`` groups consecutive probes into b-wide blocks
+    and runs each block as ONE lane of the block-Krylov driver
+    (DESIGN.md Sec. 13): a lane brackets ``tr Z^T f(A) Z`` over its b
+    probes — one gemm-shaped stacked matvec per iteration instead of b
+    gemvs — and near-parallel probe directions deflate instead of
+    burning separate Krylov chains. ``num_probes`` must be a multiple
+    of b (whole blocks); the probe STREAM is unchanged (probe i is
+    still ``fold_in(key, i)``), so extending a banked state adds whole
+    blocks bit-identically. The CI is over the per-block means
+    (block bracket midpoint / b), each an unbiased ``tr f(A)``
+    estimate. In exact mode the last block zero-pads past N; zero
+    columns deflate at the init QR and contribute exactly 0.
+
     ``lam_min``/``lam_max`` must bound the operator's spectrum (the
     Radau bounds need true outer estimates — the usual contract). Note
     the trace is of the operator AS GIVEN: for a ``Masked`` operator
     the identity block contributes ``(N - |Y|) * f(1)`` — zero for
     f=log, which is exactly why masked logdets need no correction.
     """
+    b = int(block_size)
+    if b < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
     if solver is None:
         solver = _solver.BIFSolver.create(max_iters=max_iters, rtol=rtol,
-                                          atol=atol, fn=fn)
-    elif solver.config.fn != fn:
-        solver = solver.replace(fn=fn)  # SolverConfig validates the tag
+                                          atol=atol, fn=fn,
+                                          block_size=b)
+    else:
+        if solver.config.fn != fn:
+            solver = solver.replace(fn=fn)  # SolverConfig validates the tag
+        if solver.config.block_size != b:
+            solver = solver.replace(block_size=b)
 
     n = op.n
     exact = num_probes is None
     total = n if exact else int(num_probes)
     if total < 1:
         raise ValueError(f"num_probes must be >= 1, got {num_probes}")
+    if b > 1 and not exact and total % b:
+        raise ValueError(
+            f"num_probes={total} is not a multiple of block_size={b}; "
+            f"block mode consumes whole probe blocks (the banked probe "
+            f"stream stays extendable only on block boundaries)")
     if key is None:
         key = jax.random.key(0)
     key_fp = () if exact else \
@@ -153,6 +186,12 @@ def trace_quad(op, fn: str = "log", num_probes: Optional[int] = None, *,
                 f"resume state banks brackets for the spectral interval "
                 f"{state.interval}, got {interval} — mixed intervals "
                 f"would mix incomparable brackets (pass state=None)")
+        if state.block_size != b:
+            raise ValueError(
+                f"resume state banks block_size={state.block_size} lane "
+                f"brackets; got block_size={b} — block traces are "
+                f"tr over b-probe blocks and cannot be re-bucketed "
+                f"(pass state=None)")
         if total < state.count:
             raise ValueError(
                 f"num_probes={total} < {state.count} probes already banked; "
@@ -166,11 +205,19 @@ def trace_quad(op, fn: str = "log", num_probes: Optional[int] = None, *,
         start = 0
 
     dtype = np.asarray(op.diag()).dtype
-    chunk = total - start if probe_chunk is None else max(int(probe_chunk), 1)
-    pos = start
-    while pos < total:
-        stop = min(pos + chunk, total)
+    # block mode walks padded probe indices (whole blocks; exact mode's
+    # final block zero-pads past N) and rounds the chunk up to blocks
+    walk_total = -(-total // b) * b
+    chunk = walk_total - start if probe_chunk is None \
+        else max(int(probe_chunk), 1)
+    if b > 1:
+        chunk = -(-chunk // b) * b
+    pos = -(-start // b) * b   # banked lanes end on a block boundary
+    while pos < walk_total:
+        stop = min(pos + chunk, walk_total)
         us = _probes(key, pos, stop, n, dtype, exact)
+        if b > 1:
+            us = us.reshape((stop - pos) // b, b, n)
         if mesh is None:
             res = solver.solve_batch(op, us, lam_min=lam_min,
                                      lam_max=lam_max)
@@ -190,18 +237,23 @@ def trace_quad(op, fn: str = "log", num_probes: Optional[int] = None, *,
         else np.zeros((0,), np.int32)
 
     # deterministic bracket: in exact mode the SUM over the N unit
-    # probes is tr f(A) (a true certificate); in Hutchinson mode the
-    # MEAN over the P probes is the sample estimate of it
+    # probes is tr f(A) (a true certificate; block lanes sum their b
+    # slots already, padding slots contribute exactly 0); in Hutchinson
+    # mode the MEAN over the lanes, divided by the probes-per-lane b,
+    # is the sample estimate of it. The CI is over the per-lane means
+    # mid/b — each an unbiased tr f(A) estimate (the variance-reduced
+    # block estimator: a lane averages b probes).
     mid = 0.5 * (lo + hi)
     if exact:
         mean_lo, mean_hi = float(lo.sum()), float(hi.sum())
         estimate = float(mid.sum())
         se = 0.0
     else:
-        mean_lo, mean_hi = float(lo.mean()), float(hi.mean())
-        estimate = float(mid.mean())
-        se = float(np.std(mid, ddof=1) / np.sqrt(len(mid))) \
-            if len(mid) > 1 else 0.0
+        lane_mid = mid / b
+        mean_lo, mean_hi = float(lo.mean() / b), float(hi.mean() / b)
+        estimate = float(lane_mid.mean())
+        se = float(np.std(lane_mid, ddof=1) / np.sqrt(len(lane_mid))) \
+            if len(lane_mid) > 1 else 0.0
     from jax.scipy.special import ndtri
     z = float(ndtri(0.5 + 0.5 * confidence)) if se > 0.0 else 0.0
     half = z * se
@@ -209,7 +261,7 @@ def trace_quad(op, fn: str = "log", num_probes: Optional[int] = None, *,
     new_state = TraceQuadState(fn=fn, count=total, exact=exact,
                                probe_lower=lo, probe_upper=hi,
                                iterations=it, key_fp=key_fp,
-                               interval=interval)
+                               interval=interval, block_size=b)
     return TraceQuadResult(
         lower=mean_lo, upper=mean_hi, estimate=estimate,
         stat_lower=mean_lo - half, stat_upper=mean_hi + half,

@@ -41,6 +41,12 @@ def bell_matvec(data, cols, x, *, interpret: bool | None = None):
     return _sb.bell_matvec(data, cols, x, interpret=itp)
 
 
+def bell_matvec_mrhs(data, cols, x, *, interpret: bool | None = None):
+    """Blocked-ELL SpMM: x is (N, m) column-stacked right-hand sides."""
+    itp = _default_interpret() if interpret is None else interpret
+    return _sb.bell_matvec_mrhs(data, cols, x, interpret=itp)
+
+
 def gql_update(alpha_n, beta_n, beta_p, g, c, delta, d_lr, d_rr,
                lam_min, lam_max, *, interpret: bool | None = None):
     """Fused batched GQL recurrence update."""

@@ -69,6 +69,38 @@ def bell_matvec(data: jax.Array, cols: jax.Array, x: jax.Array, *,
     )(cols, data, x)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bell_matvec_mrhs(data: jax.Array, cols: jax.Array, x: jax.Array, *,
+                     interpret: bool = True) -> jax.Array:
+    """Y = A @ X for blocked-ELL A; X: (N, m) column-stacked right-hand
+    sides, N = R * bs. Same scalar-prefetch walk as :func:`bell_matvec`
+    but each (r, k) step is a (bs, bs) @ (bs, m) MXU gemm — the m block
+    columns ride one pass over the stored blocks instead of m passes
+    (``_kernel`` is shape-agnostic over the trailing dims of x)."""
+    r, k, bs, _ = data.shape
+    m = x.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, bs), lambda r, k, cols: (r, k, 0, 0)),
+            pl.BlockSpec((bs, m), lambda r, k, cols: (cols[r, k], 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, m), lambda r, k, cols: (r, 0)),
+    )
+    extra = {}
+    if _CompilerParams is not None:
+        extra["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r * bs, m), jnp.float32),
+        interpret=interpret,
+        **extra,
+    )(cols, data, x)
+
+
 def bell_matvec_ref(data: jax.Array, cols: jax.Array, x: jax.Array
                     ) -> jax.Array:
     """Reference blocked-ELL SpMV in pure jnp, batched over leading dims.

@@ -333,6 +333,12 @@ class BIFEngine:
         self.op = op
         self.solver = solver if solver is not None \
             else BIFSolver.create(max_iters=64, rtol=1e-3)
+        if self.solver.config.block_size > 1:
+            raise NotImplementedError(
+                "the serving engine batches scalar (u, mask) queries; "
+                "block_size > 1 brackets tr B^T f(A) B probe blocks and "
+                "has no per-request semantics — use a block_size=1 "
+                "solver (block traces go through trace_quad)")
         self.mesh = mesh
         self.lane_axis = lane_axis
         # step_n quantises to whole decide_every rounds — align the

@@ -408,6 +408,44 @@ def check_matfun_and_trace_probes(mesh):
     assert exact.lower <= ldtruth <= exact.upper
 
 
+def check_block_quadrature(mesh):
+    """Block-Krylov lanes over the mesh (DESIGN.md Sec. 13): sharded
+    block brackets are decision-identical to the single-device block
+    driver at every ``decide_every`` cadence (bit-exact on COO — only
+    scalar trace summaries cross devices, under the PR 7 round gather),
+    non-divisible K and block trace probes included."""
+    a, _, _, lmn, lmx = _problem(seed=17)
+    op = sparse_from_dense(a)
+    n = a.shape[0]
+    b, k = 4, 11
+    us = jnp.asarray(
+        np.random.default_rng(18).standard_normal((k, b, n)))
+    wv, vv = np.linalg.eigh(a)
+    g = np.asarray(us) @ vv
+    truth = np.sum(g * g / wv, axis=(-2, -1))
+    for r in (1, 2, 4):
+        s = BIFSolver.create(max_iters=24, rtol=1e-6, block_size=b,
+                             decide_every=r)
+        single = s.solve_batch(op, us, lam_min=lmn, lam_max=lmx)
+        got = s.solve_batch_sharded(op, us, mesh=mesh, lam_min=lmn,
+                                    lam_max=lmx)
+        _assert_solve_parity(single, got, True, f"block-R{r}")
+        assert np.all(np.asarray(got.lower) <= truth * (1 + 1e-9))
+        assert np.all(np.asarray(got.upper) >= truth * (1 - 1e-9))
+
+    # block trace probes over the mesh match the single-device estimator
+    key = jax.random.key(13)
+    single = trace_quad(op, "log", 16, lam_min=lmn, lam_max=lmx, key=key,
+                        block_size=b)
+    sharded = trace_quad(op, "log", 16, lam_min=lmn, lam_max=lmx, key=key,
+                         block_size=b, mesh=mesh)
+    assert (sharded.lower, sharded.upper) == (single.lower, single.upper)
+    assert sharded.std_error == single.std_error
+    assert sharded.iterations == single.iterations
+    np.testing.assert_array_equal(sharded.state.probe_lower,
+                                  single.state.probe_lower)
+
+
 def check_sharded_solver_wrapper(mesh):
     """ShardedBIFSolver is static: closure-capture under jit works and
     matches the unbound calls."""
@@ -442,6 +480,7 @@ def main():
                   check_engine_flush,
                   check_applications,
                   check_matfun_and_trace_probes,
+                  check_block_quadrature,
                   check_sharded_solver_wrapper):
         check(mesh)
         # progress marker per check: an 8-virtual-device run compiles

@@ -462,6 +462,37 @@ def test_ql001_chainfactor_mutations_are_caught(monkeypatch):
     assert any("rank_cache" in m and "downdate" in m for m in msgs)
 
 
+def test_ql001_blockstate_mutations_are_caught(monkeypatch):
+    import dataclasses
+
+    import repro.core.block as block_mod
+
+    # a new BlockState field (say a reorth buffer) missing from the
+    # pytree registration AND from the step writer
+    mutant = dataclasses.make_dataclass(
+        "BlockState", [f.name for f in
+                       dataclasses.fields(block_mod.BlockState)]
+        + ["reorth_buf"])
+    monkeypatch.setattr(block_mod, "BlockState", mutant)
+    findings = _ql001()
+    msgs = [f.message for f in findings]
+    assert any("reorth_buf" in m and "register_dataclass" in m
+               for m in msgs)
+    assert any("reorth_buf" in m and "block_step" in m for m in msgs)
+
+
+def test_ql001_blockstate_dropped_registry_entry_is_caught(monkeypatch):
+    import repro.core.block as block_mod
+
+    # dropping the writer-exclusion registry: r0/fnidx (init-constant
+    # fields block_step deliberately never rewrites) become unhandled
+    monkeypatch.setattr(block_mod, "BLOCK_REPLACE_EXCLUDED", ())
+    findings = _ql001()
+    msgs = [f.message for f in findings]
+    assert any("block_step" in m and "'r0'" in m for m in msgs)
+    assert any("block_step" in m and "'fnidx'" in m for m in msgs)
+
+
 def test_ql001_round_body_delegation_credit():
     """PR 7 moved the per-substep freeze into ``_round_body``; a handler
     inherits that freeze coverage ONLY if it actually references the

@@ -1,0 +1,292 @@
+"""Block-Krylov quadrature (core/block.py, DESIGN.md Sec. 13).
+
+Oracles are dense eigendecompositions computed independently in numpy:
+the matrix-valued Gauss/Radau rules must be Loewner-ordered PSD
+approximants of ``B^T f(A) B`` whose oriented traces bracket
+``tr B^T f(A) B``, on every operator kind the quadrature core accepts.
+The b = 1 slot of the block recurrence must reproduce the scalar
+Lanczos coefficients bit-for-bit (same multiply-then-reduce shapes),
+and rank-deficient starting blocks must deflate instead of NaN-ing.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BIFSolver, SolverConfig, Dense, Jacobi, Masked, \
+    Shifted, bell_from_dense, sparse_from_dense
+from repro.core import block as blk
+from repro.core import gql as gql_mod
+from repro.core import matfun as matfun_mod
+from conftest import make_spd
+
+OP_KINDS = ["dense", "sparse_coo", "sparse_bell", "masked", "shifted",
+            "jacobi"]
+
+FNS = {"inv": lambda w: 1.0 / w, "log": np.log}
+
+
+def _reference(kind, a, rng):
+    """(operator, dense reference matrix) — the reference is numpy-only,
+    independent of the operator's own code paths (the conformance-grid
+    construction of tests/test_operators_conformance.py)."""
+    n = a.shape[0]
+    if kind == "dense":
+        return Dense(jnp.asarray(a)), a
+    if kind == "sparse_coo":
+        return sparse_from_dense(a), a
+    if kind == "sparse_bell":
+        return bell_from_dense(a, bs=8), a
+    if kind == "masked":
+        m = (rng.random(n) < 0.6).astype(np.float64)
+        ref = np.diag(m) @ a @ np.diag(m) + np.eye(n) - np.diag(m)
+        return Masked(Dense(jnp.asarray(a)), jnp.asarray(m)), ref
+    if kind == "shifted":
+        sigma = 0.75
+        return Shifted(Dense(jnp.asarray(a)), jnp.asarray(sigma)), \
+            a + sigma * np.eye(n)
+    if kind == "jacobi":
+        c = 1.0 / np.sqrt(np.diag(a))
+        return Jacobi.create(Dense(jnp.asarray(a))), a * np.outer(c, c)
+    raise AssertionError(kind)
+
+
+def _oracle(ref, u, fn):
+    """B^T f(A) B by dense eigendecomposition (numpy)."""
+    w, v = np.linalg.eigh(ref)
+    g = np.asarray(u) @ v                    # (b, N) @ (N, N)
+    return (g * FNS[fn](w)) @ g.T, float(w[0]), float(w[-1])
+
+
+def _chain(op, u, lam_min, lam_max, fn, iters):
+    """Run the block recurrence, yielding the state after each
+    iteration (block_init counts as iteration 1)."""
+    st = blk.block_init(op, u, lam_min, lam_max, fn, iters)
+    yield st
+    for _ in range(iters - 1):
+        st = blk.block_step(op, st, lam_min, lam_max)
+        yield st
+
+
+def _oriented_matrices(st, lam_min, lam_max):
+    """(lower_m, upper_m, gauss_m, gauss_is_lower) with the same
+    derivative-sign orientation bracket() applies to the traces."""
+    mats = np.asarray(blk.bracket_matrices(st, lam_min, lam_max))
+    gl = bool(np.asarray(matfun_mod._GAUSS_IS_LOWER)[int(st.fnidx)])
+    g_m, rl_m, rr_m = mats[0], mats[1], mats[2]
+    return (rr_m, rl_m, g_m, gl) if gl else (rl_m, rr_m, g_m, gl)
+
+
+# ---------------------------------------------------------------------------
+# containment + Loewner ordering vs dense-eigh oracles (conformance grid)
+
+
+@pytest.mark.parametrize("fn", ["inv", "log"])
+@pytest.mark.parametrize("kind", OP_KINDS)
+def test_containment_and_loewner_order_vs_eigh(kind, fn):
+    rng = np.random.default_rng(5)
+    n, b, iters = 33, 3, 6
+    a = make_spd(n, kappa=50.0, seed=5, density=0.4)
+    op, ref = _reference(kind, a, rng)
+    u = jnp.asarray(rng.standard_normal((b, n)))
+    oracle, lmn, lmx = _oracle(ref, u, fn)
+    lmn, lmx = lmn * 0.99, lmx * 1.01
+    tr_true = float(np.trace(oracle))
+    scale = max(abs(tr_true), 1.0)
+
+    prev_lo = -np.inf
+    for st in _chain(op, u, lmn, lmx, fn, iters):
+        lo, hi, loose_lo, loose_hi = (
+            float(np.asarray(x)) for x in blk.bracket(st, lmn, lmx))
+        # trace containment, tight and loose views
+        assert loose_lo - 1e-7 * scale <= lo <= tr_true + 1e-7 * scale
+        assert tr_true - 1e-7 * scale <= hi <= loose_hi + 1e-7 * scale
+        # the tight lower bound tightens monotonically
+        assert lo >= prev_lo - 1e-9 * scale
+        prev_lo = lo
+        # Loewner PSD ordering of the matrix-valued rules themselves
+        lower_m, upper_m, gauss_m, gl = _oriented_matrices(st, lmn, lmx)
+        assert np.linalg.eigvalsh(oracle - lower_m).min() >= -1e-6 * scale
+        assert np.linalg.eigvalsh(upper_m - oracle).min() >= -1e-6 * scale
+        # the Gauss rule sits on its derivative-sign side of the oracle
+        gap = (oracle - gauss_m) if gl else (gauss_m - oracle)
+        assert np.linalg.eigvalsh(gap).min() >= -1e-6 * scale
+    # at the full budget the bracket has actually resolved something
+    assert hi - lo <= 0.3 * scale
+
+
+# ---------------------------------------------------------------------------
+# b = 1: bit-exact with the scalar recurrence
+
+
+def test_b1_coefficients_bit_exact_with_scalar_recurrence():
+    n, iters = 24, 10
+    a = make_spd(n, kappa=80.0, seed=3)
+    op = sparse_from_dense(a)        # COO matvec is bit-exact across shapes
+    w = np.linalg.eigvalsh(a)
+    lmn, lmx = float(w[0] * 0.99), float(w[-1] * 1.01)
+    rng = np.random.default_rng(3)
+    u = rng.standard_normal(n)
+
+    sst = gql_mod.gql_init(op, jnp.asarray(u), lmn, lmx)
+    s_alpha, s_beta = [sst.lz.alpha], [sst.lz.beta]
+    for _ in range(iters - 1):
+        sst = gql_mod.gql_step(op, sst, lmn, lmx)
+        s_alpha.append(sst.lz.alpha)
+        s_beta.append(sst.lz.beta)
+
+    bst = None
+    for bst in _chain(op, jnp.asarray(u)[None, :], lmn, lmx, "inv", iters):
+        pass
+    a_hist = np.asarray(bst.a_hist)[:iters, 0, 0]
+    b_hist = np.asarray(bst.b_hist)[:iters, 0, 0]
+    # the multiply-then-reduce block contractions reproduce the scalar
+    # Lanczos coefficient stream bit-for-bit at b = 1
+    np.testing.assert_array_equal(a_hist, np.asarray(s_alpha))
+    np.testing.assert_array_equal(b_hist, np.asarray(s_beta))
+
+
+@pytest.mark.parametrize("fn", ["inv", "log"])
+def test_b1_bracket_matches_scalar_driver(fn):
+    """The b = 1 block bracket agrees with the scalar driver's bracket
+    at every iteration count (the derived pivot/eigensolve routes differ
+    in rounding, so allclose rather than bit-equal)."""
+    n = 24
+    a = make_spd(n, kappa=80.0, seed=4)
+    op = sparse_from_dense(a)
+    w = np.linalg.eigvalsh(a)
+    lmn, lmx = float(w[0] * 0.99), float(w[-1] * 1.01)
+    u = np.random.default_rng(4).standard_normal(n)
+    solver = BIFSolver(SolverConfig(max_iters=8, fn=fn, rtol=0.0,
+                                    atol=0.0, spectrum="explicit"))
+    state = solver.init_state(op, jnp.asarray(u), lam_min=lmn, lam_max=lmx)
+    for bst in _chain(op, jnp.asarray(u)[None, :], lmn, lmx, fn, 8):
+        lo_b, hi_b, _, _ = blk.bracket(bst, lmn, lmx)
+        lo_s, hi_s = state.bracket()
+        np.testing.assert_allclose(float(lo_b), float(lo_s),
+                                   rtol=1e-10, atol=1e-12)
+        np.testing.assert_allclose(float(hi_b), float(hi_s),
+                                   rtol=1e-10, atol=1e-12)
+        state = solver.step_n(state, 1)
+
+
+def test_block_size_one_config_routes_to_scalar_path():
+    """SolverConfig(block_size=1) IS the scalar driver — same state
+    type, bit-identical results (no block machinery on the b=1 path)."""
+    n = 24
+    a = make_spd(n, kappa=50.0, seed=6)
+    op = Dense(jnp.asarray(a))
+    w = np.linalg.eigvalsh(a)
+    u = np.random.default_rng(6).standard_normal((3, n))
+    kw = dict(lam_min=float(w[0]), lam_max=float(w[-1]))
+    r1 = BIFSolver(SolverConfig(max_iters=12)).solve_batch(
+        op, jnp.asarray(u), **kw)
+    r2 = BIFSolver(SolverConfig(max_iters=12, block_size=1)).solve_batch(
+        op, jnp.asarray(u), **kw)
+    assert isinstance(r2.state.st, gql_mod.GQLState)
+    np.testing.assert_array_equal(np.asarray(r1.lower), np.asarray(r2.lower))
+    np.testing.assert_array_equal(np.asarray(r1.upper), np.asarray(r2.upper))
+
+
+# ---------------------------------------------------------------------------
+# deflation: rank-deficient starting blocks
+
+
+@pytest.mark.parametrize("fn", ["inv", "log"])
+def test_rank_deficient_start_block_deflates_not_nans(fn):
+    """Duplicate and zero probe columns deflate at the initial QR; the
+    surviving chain matches the scalar recurrence on the unique probe
+    and the bracket contains the (duplicated) truth — no NaNs ever."""
+    n, iters = 24, 8
+    a = make_spd(n, kappa=50.0, seed=7)
+    op = Dense(jnp.asarray(a))
+    w, v = np.linalg.eigh(a)
+    lmn, lmx = float(w[0] * 0.99), float(w[-1] * 1.01)
+    z = np.random.default_rng(7).standard_normal(n)
+    u = jnp.asarray(np.stack([z, z, np.zeros(n)]))   # rank 1 of b = 3
+    c = z @ v
+    truth = float(np.sum(c * c * FNS[fn](w)))
+
+    st = blk.block_init(op, u, lmn, lmx, fn, iters)
+    assert np.asarray(st.live).sum() <= 1    # slots 1, 2 deflated at init
+    for _ in range(iters - 1):
+        st = blk.block_step(op, st, lmn, lmx)
+        est = np.asarray(blk.estimates(st, lmn, lmx))
+        assert np.all(np.isfinite(est)), est
+    lo, hi, _, _ = (float(np.asarray(x)) for x in blk.bracket(st, lmn, lmx))
+    # tr B^T f(A) B = 2 * z^T f(A) z (the duplicate column counts twice,
+    # through r0 — the zero column contributes exactly 0)
+    scale = max(abs(truth), 1.0)
+    assert lo - 1e-6 * scale <= 2 * truth <= hi + 1e-6 * scale
+    assert hi - lo <= 5e-2 * scale
+
+
+def test_all_zero_block_is_done_at_init():
+    n = 16
+    a = make_spd(n, kappa=10.0, seed=8)
+    op = Dense(jnp.asarray(a))
+    st = blk.block_init(op, jnp.zeros((2, 4, n)), 0.1, 2.0, "inv", 4)
+    assert np.all(np.asarray(st.done))
+    assert not np.any(np.asarray(st.live))
+    # exhausted lanes report a collapsed (zero-width, zero-value) bracket
+    lo, hi, _, _ = blk.bracket(st, 0.1, 2.0)
+    np.testing.assert_array_equal(np.asarray(lo), 0.0)
+    np.testing.assert_array_equal(np.asarray(hi), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# solver integration: the stepping API threads BlockState
+
+
+def test_solver_block_resume_invariant_bit_exact():
+    """resume(step_n(s, k)) == resume(s) on every BlockState leaf — the
+    freeze/thread contract holds for block lanes exactly as for scalar
+    ones (COO matvec makes the comparison bit-exact)."""
+    n, k, b = 32, 3, 4
+    a = make_spd(n, kappa=50.0, seed=9)
+    op = sparse_from_dense(a)
+    w = np.linalg.eigvalsh(a)
+    u = jnp.asarray(
+        np.random.default_rng(9).standard_normal((k, b, n)))
+    solver = BIFSolver(SolverConfig(max_iters=10, block_size=b))
+    kw = dict(lam_min=float(w[0]), lam_max=float(w[-1]))
+    s0 = solver.init_state(op, u, **kw)
+    full = solver.resume(solver.init_state(op, u, **kw))
+    paused = solver.resume(solver.step_n(s0, 3))
+    for name in (f.name for f in dataclasses.fields(blk.BlockState)):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(full.st, name)),
+            np.asarray(getattr(paused.st, name)), err_msg=name)
+
+
+def test_solver_block_containment_and_certification():
+    n, k, b = 32, 3, 4
+    a = make_spd(n, kappa=50.0, seed=10)
+    op = Dense(jnp.asarray(a))
+    w, v = np.linalg.eigh(a)
+    us = np.random.default_rng(10).standard_normal((k, b, n))
+    truth = np.array([np.trace((us[i] @ v * (1.0 / w)) @ (us[i] @ v).T)
+                      for i in range(k)])
+    solver = BIFSolver(SolverConfig(max_iters=16, block_size=b))
+    res = solver.solve_batch(op, jnp.asarray(us), lam_min=float(w[0]),
+                             lam_max=float(w[-1]))
+    lo, hi = np.asarray(res.lower), np.asarray(res.upper)
+    scale = np.maximum(np.abs(truth), 1.0)
+    assert np.all(lo <= truth + 1e-7 * scale)
+    assert np.all(hi >= truth - 1e-7 * scale)
+    assert np.all(np.asarray(res.certified))
+
+
+def test_block_config_guards():
+    with pytest.raises(ValueError):
+        SolverConfig(block_size=0)
+    with pytest.raises(NotImplementedError):
+        SolverConfig(block_size=2, reorth=True)
+    with pytest.raises(NotImplementedError):
+        SolverConfig(block_size=2, precondition="jacobi")
+    solver = BIFSolver(SolverConfig(max_iters=4, block_size=4))
+    op = Dense(jnp.asarray(make_spd(16, seed=0)))
+    with pytest.raises(ValueError):      # wrong block width
+        solver.init_state(op, jnp.ones((2, 16)), lam_min=0.1, lam_max=2.0)

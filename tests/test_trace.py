@@ -104,6 +104,67 @@ def test_probe_by_probe_resume_matches_direct():
                    key=key, state=r8.state)
 
 
+def test_block_probe_extend_matches_direct_bit_exact():
+    """The block-mode twin of the scalar extend pin: resuming with a
+    larger ``num_probes`` under ``block_size > 1`` adds WHOLE blocks and
+    keeps the banked probe stream bit-identical (probe i is still
+    ``fold_in(key, i)``; blocks are consecutive index groups)."""
+    a, w, _, lmn, lmx = _problem(seed=5)
+    op = sparse_from_dense(a)
+    key = jax.random.key(11)
+    kw = dict(lam_min=lmn, lam_max=lmx, key=key, block_size=4)
+    r8 = trace_quad(op, "log", 8, **kw)
+    assert len(r8.state.probe_lower) == 2          # 2 banked block lanes
+    r16 = trace_quad(op, "log", 16, state=r8.state, **kw)
+    direct = trace_quad(op, "log", 16, **kw)
+    # SparseCOO lanes are bit-exact across batch shapes, so resumed ==
+    # direct exactly (blocks 0..1 reuse the banked lane brackets)
+    assert (r16.lower, r16.upper) == (direct.lower, direct.upper)
+    assert (r16.estimate, r16.std_error) == (direct.estimate,
+                                             direct.std_error)
+    assert r16.iterations == direct.iterations
+    np.testing.assert_array_equal(r16.state.probe_lower,
+                                  direct.state.probe_lower)
+    np.testing.assert_array_equal(r16.state.probe_upper,
+                                  direct.state.probe_upper)
+    np.testing.assert_array_equal(r16.state.iterations,
+                                  direct.state.iterations)
+    # chunked walks round up to whole blocks and bank identically
+    chunked = trace_quad(op, "log", 16, probe_chunk=6, **kw)
+    np.testing.assert_array_equal(chunked.state.probe_lower,
+                                  direct.state.probe_lower)
+    # the statistical interval still covers the truth on this problem
+    true = float(np.sum(np.log(w)))
+    assert direct.stat_lower <= true <= direct.stat_upper
+    # guardrails: whole blocks only, and no re-bucketing a banked state
+    with pytest.raises(ValueError, match="multiple of block_size"):
+        trace_quad(op, "log", 10, lam_min=lmn, lam_max=lmx, key=key,
+                   block_size=4)
+    with pytest.raises(ValueError, match="banks block_size"):
+        trace_quad(op, "log", 16, lam_min=lmn, lam_max=lmx, key=key,
+                   block_size=2, state=r8.state)
+    with pytest.raises(ValueError, match="banks block_size"):
+        trace_quad(op, "log", 16, lam_min=lmn, lam_max=lmx, key=key,
+                   state=r8.state)
+
+
+def test_block_exact_mode_brackets_true_trace_with_padding():
+    """Exact unit-probe mode with a block width that does NOT divide N:
+    the final block zero-pads, the pad slots deflate, and the summed
+    bracket still certifies the true trace."""
+    a, w, _, lmn, lmx = _problem(seed=2)      # N = 24, b = 7 pads to 28
+    op = Dense(jnp.asarray(a))
+    true = float(np.sum(np.log(w)))
+    r = trace_quad(op, "log", None, lam_min=lmn, lam_max=lmx,
+                   block_size=7)
+    scale = max(abs(true), 1.0)
+    assert r.lower <= true + 1e-8 * scale
+    assert r.upper >= true - 1e-8 * scale
+    assert r.std_error == 0.0
+    assert r.num_probes == a.shape[0]
+    assert len(r.state.probe_lower) == 4      # ceil(24 / 7) block lanes
+
+
 def test_log_likelihood_brackets_slogdet_truth():
     a, w, _, lmn, lmx = _problem(seed=9, kappa=30.0)
     n = a.shape[0]
