@@ -14,6 +14,9 @@ Reported per (N, pool) config:
 
   * steady-state requests/sec for both modes (+ the speedup),
   * p50/p95 iterations-to-decision over the served requests,
+  * p50/p99 admission-to-retire request latency per mode, read off the
+    engine's own ``request.latency_s`` histogram (repro.obs.metrics —
+    exact nearest-rank percentiles, DESIGN.md Sec. 14),
   * total pool rounds the scheduler ran.
 
 Tables land in ``BENCH_engine_throughput.json`` at the repo root via
@@ -93,8 +96,13 @@ def _bench_one(n: int, pool: int, q_count: int):
 
     walls = {}
     for mode, engine in engines.items():
+        engine.reset_stats()  # drop the correctness-guard serve from stats
         walls[mode] = time_fn(lambda m=mode, e=engine: _serve(e, us, ts, m),
                               repeats=3, warmup=1)
+    lat = {
+        mode: engine.stats()["histograms"]["request.latency_s"]
+        for mode, engine in engines.items()
+    }
     return {
         "requests": q_count,
         "req_s_lockstep": round(q_count / walls["lockstep"], 2),
@@ -106,6 +114,10 @@ def _bench_one(n: int, pool: int, q_count: int):
         "iters_p95": int(np.percentile(iters, 95)),
         "iters_mean": round(float(iters.mean()), 1),
         "iters_max": int(iters.max()),
+        "lat_p50_ms_lockstep": round(lat["lockstep"]["p50"] * 1e3, 3),
+        "lat_p99_ms_lockstep": round(lat["lockstep"]["p99"] * 1e3, 3),
+        "lat_p50_ms_continuous": round(lat["continuous"]["p50"] * 1e3, 3),
+        "lat_p99_ms_continuous": round(lat["continuous"]["p99"] * 1e3, 3),
     }
 
 

@@ -75,17 +75,21 @@ def _worker_main(mode: str, sizes, cadences) -> None:
         ts = true * np.where(rng.random(k) < 0.5, 0.97, 1.03)
         return a, jnp.asarray(us), jnp.asarray(ts)
 
+    from repro.obs.metrics import Histogram
+
     def time_fn(fn, repeats=5, warmup=2):
+        """Median + exact p50/p99 over the repeats, via the obs
+        histogram helper (DESIGN.md Sec. 14)."""
         import time
         for _ in range(warmup):
             jax.block_until_ready(fn())
-        times = []
+        hist = Histogram("wall_s")
         for _ in range(repeats):
             t0 = time.perf_counter()
             jax.block_until_ready(fn())
-            times.append(time.perf_counter() - t0)
-        times.sort()
-        return times[len(times) // 2]
+            hist.observe(time.perf_counter() - t0)
+        return (hist.percentile(50.0), hist.percentile(50.0),
+                hist.percentile(99.0))
 
     if mode in ("sharded", "floor"):
         from jax.experimental.shard_map import shard_map
@@ -126,8 +130,11 @@ def _worker_main(mode: str, sizes, cadences) -> None:
                     solver.judge_batch(op, us_, ts_, lam_min=lmn,
                                        lam_max=lmx))
             res = jax.block_until_ready(fn(us, ts))
+            wall, p50, p99 = time_fn(lambda: fn(us, ts))
             entry = {
-                "wall_s": round(time_fn(lambda: fn(us, ts)), 5),
+                "wall_s": round(wall, 5),
+                "wall_s_p50": round(p50, 5),
+                "wall_s_p99": round(p99, 5),
                 "iters_max": int(np.asarray(res.iterations).max()),
                 "decisions_true": int(np.asarray(res.decision).sum()),
             }
@@ -192,6 +199,8 @@ def run(quick: bool = True):
             vs1 = round(s8["wall_s"] / max(s1["wall_s"], 1e-9), 2)
             entry["cadence"][f"R{r}"] = {
                 "wall_s_8vdev": s8["wall_s"],
+                "wall_s_p50_8vdev": s8["wall_s_p50"],
+                "wall_s_p99_8vdev": s8["wall_s_p99"],
                 "wall_s_floor_8vdev": sf["wall_s"],
                 "collective_tax": tax,
                 "vdev_overhead_vs_1dev": vs1,

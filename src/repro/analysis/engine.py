@@ -155,6 +155,7 @@ def _file_rules() -> list[Callable[[FileContext], Iterable[Finding]]]:
         rules_ast.check_jit_discipline,    # QL003
         rules_ast.check_shim_imports,      # QL005
         rules_ast.check_randomness,        # QL006
+        rules_ast.check_host_telemetry,    # QL008
         collectives.check_collective_pairing,  # QL004
         collectives.check_collective_cadence,  # QL007
     ]

@@ -1,5 +1,6 @@
 """Per-file AST rules: tracer leaks, jit discipline, shim imports,
-unkeyed randomness (QL002 / QL003 / QL005 / QL006).
+unkeyed randomness, host-side-only telemetry (QL002 / QL003 / QL005 /
+QL006 / QL008).
 
 Every rule here works on one parsed file at a time and knows nothing
 about the runtime beyond naming conventions (the cross-file pytree
@@ -271,8 +272,10 @@ def check_tracer_leaks(ctx: FileContext) -> Iterable[Finding]:
 
 
 def _has_trace_counter(fn) -> bool:
-    """A ``_*_TRACES[0] += 1`` bump anywhere in the function body (the
-    flush_trace_count convention of serve/engine.py)."""
+    """A trace counter anywhere in the function body: either the
+    central-registry idiom ``<...>registry.count("name")`` (obs.registry,
+    the serve/engine.py convention since the obs migration) or the
+    legacy ``_*_TRACES[0] += 1`` bump."""
     for node in ast.walk(fn):
         if isinstance(node, ast.AugAssign) and \
                 isinstance(node.op, ast.Add) and \
@@ -280,6 +283,11 @@ def _has_trace_counter(fn) -> bool:
                 isinstance(node.target.value, ast.Name) and \
                 node.target.value.id.endswith("TRACES"):
             return True
+        if isinstance(node, ast.Call):
+            parts = (dotted(node.func) or "").split(".")
+            if len(parts) >= 2 and parts[-1] == "count" \
+                    and parts[-2].endswith("registry"):
+                return True
     return False
 
 
@@ -309,8 +317,9 @@ def check_jit_discipline(ctx: FileContext) -> Iterable[Finding]:
                     findings.append(Finding(
                         ctx.rel, node.lineno, "QL003",
                         f"module-level jit `{node.name}` has no paired "
-                        f"trace counter (bump a `*_TRACES[0] += 1` like "
-                        f"flush_trace_count)"))
+                        f"trace counter (call `obs.registry.count(name)` "
+                        f"in the body, or bump a legacy "
+                        f"`*_TRACES[0] += 1`)"))
 
     stack: list = []
 
@@ -437,4 +446,120 @@ def check_randomness(ctx: FileContext) -> Iterable[Finding]:
                 ctx.rel, node.lineno, "QL006",
                 "stdlib `random` is process-global and unseeded here; "
                 "use np.random.default_rng(seed) or jax.random"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# QL008: host-side-only telemetry (obs.metrics / obs.spans / print)
+
+
+def _obs_banned_refs(tree: ast.Module) -> tuple:
+    """Resolve this file's import aliases for the BANNED obs modules.
+
+    Returns (prefixes, names): ``prefixes`` are dotted call prefixes that
+    denote obs.metrics / obs.spans modules (calls on their attributes are
+    banned in traced scopes), ``names`` are directly-imported callables
+    from them. ``obs.registry`` is deliberately absent — its trace-time
+    ``count()`` is the sanctioned compile probe QL003 requires.
+    """
+    prefixes: set = set()
+    names: set = set()
+
+    def classify(full_parts: list, bound: str, is_from: bool) -> None:
+        if "obs" not in full_parts:
+            return
+        tail = full_parts[full_parts.index("obs") + 1:]
+        if not tail:
+            # the obs package itself: `from repro import obs [as o]` /
+            # `import repro.obs` — ban the metric/span submodule paths
+            prefixes.add(f"{bound}.metrics")
+            prefixes.add(f"{bound}.spans")
+        elif tail[0] in ("metrics", "spans"):
+            if len(tail) == 1:
+                prefixes.add(bound)     # module alias (obs_metrics.foo())
+            elif is_from:
+                names.add(bound)        # from ..obs.spans import span
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = (node.module or "").split(".") if node.module else []
+            for alias in node.names:
+                bound = alias.asname or alias.name
+                classify(mod + alias.name.split("."), bound, True)
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                parts = alias.name.split(".")
+                if alias.asname is not None:
+                    classify(parts, alias.asname, False)
+                else:
+                    # `import repro.obs.metrics` binds the full path
+                    classify(parts, alias.name, False)
+                    if parts == ["repro", "obs"]:
+                        classify(parts, alias.name, False)
+    return prefixes, names
+
+
+def check_host_telemetry(ctx: FileContext) -> Iterable[Finding]:
+    """QL008 (library code only): obs.metrics / obs.spans calls and
+    ``print()`` must not be reachable inside a traced scope (jit /
+    while_loop / scan / cond / fori_loop / shard_map / vmap bodies, or
+    helpers they call).
+
+    Python side effects under a trace run at TRACE time, once per
+    compile: a counter there counts compiles, a span times tracing, a
+    print shows abstract tracers — all three silently lie. Telemetry is
+    host-side by contract (DESIGN.md Sec. 14); the one sanctioned
+    trace-time probe is ``obs.registry.count`` (that lying-per-compile
+    behavior is exactly what a retrace counter wants)."""
+    if not ctx.in_src:
+        return []
+    prefixes, names = _obs_banned_refs(ctx.tree)
+    scopes = _Scopes()
+    scopes.visit(ctx.tree)
+    roots = _traced_roots(ctx.tree, scopes)
+    if not roots:
+        return []
+
+    # transitive closure over same-module helpers: a call from a traced
+    # scope to a module function runs under the same trace (the QL007
+    # reachability argument, scoped to one file)
+    traced_fns: set = set()
+    queue = list(roots)
+    while queue:
+        fn = queue.pop()
+        if fn in traced_fns:
+            continue
+        traced_fns.add(fn)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for node in _walk_pruned(body):
+            if isinstance(node, _FunctionNode):
+                queue.append(node)  # nested def: traced when invoked
+                continue
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name):
+                queue.extend(scopes.by_name.get(node.func.id, ()))
+
+    findings: list = []
+    for fn in traced_fns:
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for node in _walk_pruned(body):
+            if isinstance(node, _FunctionNode) or \
+                    not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d is None:
+                continue
+            if d == "print":
+                findings.append(Finding(
+                    ctx.rel, node.lineno, "QL008",
+                    "print() inside a traced scope runs at trace time "
+                    "(use jax.debug.print, or log host-side)"))
+            elif d in names or any(d == p or d.startswith(p + ".")
+                                   for p in prefixes):
+                findings.append(Finding(
+                    ctx.rel, node.lineno, "QL008",
+                    f"`{d}(...)` inside a traced scope: obs.metrics/"
+                    f"obs.spans are host-side-only (they would record "
+                    f"trace-time, once per compile; only "
+                    f"obs.registry.count is trace-sanctioned)"))
     return findings

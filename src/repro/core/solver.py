@@ -624,7 +624,7 @@ class BIFSolver:
         return lambda carry: jax.lax.fori_loop(0, r, substep, carry)
 
     def step_n(self, state: QuadState, n: int, decide=None, *,
-               it_cap=None) -> QuadState:
+               it_cap=None, convergence_log=None) -> QuadState:
         """Advance ``state`` by at most ``n`` quadrature iterations.
 
         Lanes that already resolved ``decide`` (None = the tolerance
@@ -638,6 +638,13 @@ class BIFSolver:
         every R steps and states stay *round-aligned*: ``step_n``
         advances at most ``floor(n / R) * R`` steps (``n < R`` is a
         no-op), keeping the resume invariant exact at every cadence.
+
+        ``convergence_log`` (an :class:`repro.obs.health.ConvergenceLog`)
+        records the returned state's bracket + iteration counts — a
+        HOST-side read of the already-computed result, so the compiled
+        loop above is untouched and logging is bit-invariant. Only legal
+        outside a trace (under jit the views are tracers); the engine
+        and other jitted callers simply never pass it.
         """
         if n < 0:
             raise ValueError(f"n must be >= 0, got {n}")
@@ -671,7 +678,10 @@ class BIFSolver:
             ((state.st, state.basis, state.coeffs, state.step,
               needs_more(state.st, state.coeffs)),
              jnp.zeros((), jnp.int32)))
-        return state._replace(st=st, basis=basis, coeffs=coeffs, step=step)
+        out = state._replace(st=st, basis=basis, coeffs=coeffs, step=step)
+        if convergence_log is not None:
+            convergence_log.record_state(out)
+        return out
 
     def resume(self, state: QuadState, decide=None, *,
                it_cap=None) -> QuadState:
@@ -806,7 +816,8 @@ class BIFSolver:
         return self.finalize(state, decide)
 
     def trace(self, op, u: Array, num_iters: int, *, lam_min=None,
-              lam_max=None, probe=None) -> QuadratureTrace:
+              lam_max=None, probe=None,
+              convergence_log=None) -> QuadratureTrace:
         """Run exactly ``num_iters`` iterations, recording all four estimate
         sequences (paper Fig. 1).  Honors spectrum/precondition/backend and
         ``reorth`` from the config.
@@ -815,7 +826,12 @@ class BIFSolver:
         matfun sign table: ``radau_lower``/``radau_upper`` are the tight
         oriented Radau bracket and ``gauss``/``lobatto`` the loose
         lower/upper (for log-like f those are the Lobatto/Gauss rules
-        respectively — DESIGN.md Sec. 9)."""
+        respectively — DESIGN.md Sec. 9).
+
+        ``convergence_log`` (an :class:`repro.obs.health.ConvergenceLog`)
+        records the returned Radau bracket per iteration — read off the
+        finished trace HOST-side, bit-identical to the returned fields.
+        Only legal outside a trace (see ``step_n``)."""
         if num_iters < 1:
             raise ValueError(f"num_iters must be >= 1, got {num_iters}")
         # Rows 0..num_iters of the reorth basis hold v_0..v_{num_iters}.
@@ -833,7 +849,10 @@ class BIFSolver:
         if num_iters == 1:
             # No scan: a zero-length jnp.arange trips older jax versions and
             # buys nothing.
-            return QuadratureTrace(*(f[None] for f in first))
+            tr = QuadratureTrace(*(f[None] for f in first))
+            if convergence_log is not None:
+                convergence_log.record_trace(tr)
+            return tr
 
         def body(carry, _):
             st, basis, coeffs, step = carry
@@ -847,7 +866,10 @@ class BIFSolver:
                                None, length=num_iters - 1)
         seqs = [jnp.concatenate([f[None], r], axis=0)
                 for f, r in zip(first, rest)]
-        return QuadratureTrace(*seqs)
+        tr = QuadratureTrace(*seqs)
+        if convergence_log is not None:
+            convergence_log.record_trace(tr)
+        return tr
 
     # -- single-system judges -----------------------------------------------
 

@@ -37,6 +37,9 @@ from ..core import spectrum as core_spectrum
 from ..core.loop_utils import tree_freeze
 from ..core.solver import BIFSolver, QuadState
 from ..models import model as M
+from ..obs import metrics as obs_metrics
+from ..obs import registry as _obs_registry
+from ..obs import spans as obs_spans
 
 
 @dataclasses.dataclass
@@ -47,29 +50,31 @@ class Request:
     out_tokens: Optional[np.ndarray] = None
 
 
-# Trace-time counter for the shared generation drivers (prefill +
-# decode), same convention as _FLUSH_TRACES below: increments once per
+# Trace-time counters for the shared generation drivers (prefill +
+# decode), reported through the central obs.registry (one
+# ``retrace_counts()`` snapshot covers every serve/ jit): each
+# ``count()`` call runs at trace time only, so it increments once per
 # fresh compile. The jit cache keys on (cfg, shapes), so two Engines
 # around the same reduced arch reuse one compile — instance-level jits
 # here used to rebuild the cache per Engine.
-_GEN_TRACES = [0]
+_GEN_TRACE_KEYS = ("serve.engine.prefill", "serve.engine.decode")
 
 
 def generate_trace_count() -> int:
     """How many times the shared prefill/decode drivers have been traced
     (== compiled) in this process."""
-    return _GEN_TRACES[0]
+    return sum(_obs_registry.value(k) for k in _GEN_TRACE_KEYS)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
 def _prefill_run(cfg, params, batch, caches):
-    _GEN_TRACES[0] += 1
+    _obs_registry.count("serve.engine.prefill")
     return M.prefill(cfg, params, batch, caches)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
 def _decode_run(cfg, params, caches, batch):
-    _GEN_TRACES[0] += 1
+    _obs_registry.count("serve.engine.decode")
     return M.decode_step(cfg, params, caches, batch)
 
 
@@ -169,11 +174,14 @@ class BIFRequest:
     error: Optional[Exception] = None
 
 
-# Trace-time counter for the shared flush drivers (lockstep _flush_run +
-# continuous-batching _pool_admit_run/_pool_step_run): increments once
+# Trace-time counters for the shared flush drivers (lockstep _flush_run
+# + continuous-batching _pool_admit_run/_pool_scatter_run/
+# _pool_step_run), one obs.registry key per driver: each increments once
 # per fresh compile (jit cache miss), never on cache hits. Tests pin the
-# bucketed-padding contract of serve.kv_select.rank_blocks with it.
-_FLUSH_TRACES = [0]
+# bucketed-padding contract of serve.kv_select.rank_blocks with the
+# aggregate (flush_trace_count below).
+_FLUSH_TRACE_KEYS = ("serve.engine.pool_admit", "serve.engine.pool_scatter",
+                     "serve.engine.pool_step", "serve.engine.flush")
 
 # QuadState threading contract (quadlint QL001): per-lane fields the
 # continuous-batching pool does NOT merge/bank. `basis` (reorth storage)
@@ -186,7 +194,7 @@ ENGINE_ADMIT_EXCLUDED = ("basis",)
 def flush_trace_count() -> int:
     """How many times the shared BIFEngine flush drivers have been traced
     (== compiled) in this process."""
-    return _FLUSH_TRACES[0]
+    return sum(_obs_registry.value(k) for k in _FLUSH_TRACE_KEYS)
 
 
 def _mixed_decide(solver, lo, hi, ts, has_t):
@@ -208,7 +216,7 @@ def _pool_admit_run(solver, op, st, coeffs, us, masks, fresh, fnidx,
     ``coeffs`` the prior pool coefficient history, frozen the same way.
     Module-level jit shared across engines, keyed on (solver config, op
     treedef, pool shapes)."""
-    _FLUSH_TRACES[0] += 1
+    _obs_registry.count("serve.engine.pool_admit")
     state = solver.init_state(core_ops.Masked(op, masks), us,
                               lam_min=lam_min, lam_max=lam_max)
     if st is not None:
@@ -227,7 +235,7 @@ def _pool_scatter_run(st, lane_st, idx):
     """Insert one banked lane state (GQLState, and the lane's coeff
     history on matfun pools) at pool slot ``idx`` (warm admission of a
     resubmitted partial request)."""
-    _FLUSH_TRACES[0] += 1
+    _obs_registry.count("serve.engine.pool_scatter")
     return jax.tree.map(lambda pool, lane: pool.at[idx].set(lane),
                         st, lane_st)
 
@@ -241,7 +249,7 @@ def _pool_step_run(solver, state, ts, has_t, it_cap, *, n, mesh=None,
     moment they resolve or exhaust their per-request ``it_cap`` budget.
     Returns the stepped state plus everything the host scheduler needs
     to retire lanes."""
-    _FLUSH_TRACES[0] += 1
+    _obs_registry.count("serve.engine.pool_step")
     if mesh is None:
         state = solver.step_n(
             state, n, lambda lo, hi: _mixed_decide(solver, lo, hi, ts,
@@ -272,7 +280,7 @@ def _flush_run(solver, op, us, masks, ts, has_t, lam_min, lam_max, *,
     fresh per-engine closure each time. ``lam_min``/``lam_max`` ride
     along as runtime scalars for the same reason.
     """
-    _FLUSH_TRACES[0] += 1
+    _obs_registry.count("serve.engine.flush")
     mop = core_ops.Masked(op, masks)
 
     def decide(lo, hi, ts, has_t):
@@ -329,7 +337,8 @@ class BIFEngine:
     def __init__(self, op, *, solver: BIFSolver | None = None,
                  max_batch: int = 64, lam_min: float | None = None,
                  lam_max: float | None = None, mesh=None,
-                 lane_axis: str = "lanes", chunk_iters: int = 8):
+                 lane_axis: str = "lanes", chunk_iters: int = 8,
+                 metrics: bool = True, convergence_log=None):
         self.op = op
         self.solver = solver if solver is not None \
             else BIFSolver.create(max_iters=64, rtol=1e-3)
@@ -364,6 +373,16 @@ class BIFEngine:
         self.lam_min, self.lam_max = float(lam_min), float(lam_max)
         self._queue: List[BIFRequest] = []
         self._dtype = np.dtype(np.asarray(self.op.diag()).dtype)
+        # Observability (DESIGN.md Sec. 14): per-engine metric registry,
+        # written HOST-SIDE only — every observation below reads values
+        # the scheduler already materialized with np.asarray, so metrics
+        # on/off cannot perturb a single compiled computation (pinned by
+        # tests/test_obs.py bit-parity). `convergence_log` (an
+        # obs.health.ConvergenceLog) records per-round per-lane brackets
+        # off the same host copies.
+        self._metrics_on = bool(metrics)
+        self._metrics = obs_metrics.MetricsRegistry()
+        self.convergence_log = convergence_log
 
         def run(us, masks, ts, has_t):
             return _flush_run(
@@ -448,10 +467,62 @@ class BIFEngine:
         req.resolved = None
         req.error = None
         self._queue.append(req)
+        req._obs_submit_t = time.monotonic()
+        self._count("requests.submitted")
+        if req.state is not None:
+            self._count("requests.resubmitted")
         return req
 
     def pending(self) -> int:
         return len(self._queue)
+
+    # -- observability (host-side only; see DESIGN.md Sec. 14) ------------
+
+    def _count(self, name: str, n: int = 1) -> None:
+        if self._metrics_on:
+            self._metrics.counter(name).inc(n)
+
+    def _observe(self, name: str, value: float) -> None:
+        if self._metrics_on:
+            self._metrics.histogram(name).observe(value)
+
+    def _retire_obs(self, r: BIFRequest, now: float, *,
+                    expired: bool = False) -> None:
+        """Record one retirement. `now` is the scheduler's own clock
+        read for this round — reused, never re-read, so the metrics see
+        exactly the instants the scheduling decisions saw."""
+        if not self._metrics_on:
+            return
+        self._count("requests.retired")
+        sub_t = getattr(r, "_obs_submit_t", None)
+        adm_t = getattr(r, "_obs_admit_t", None)
+        if adm_t is not None:
+            self._observe("request.latency_s", now - adm_t)
+        elif sub_t is not None:
+            # expired at the door: never admitted, queue-wait only
+            self._observe("request.queue_wait_s", now - sub_t)
+        if r.deadline is not None:
+            self._observe("request.deadline_slack_s", r.deadline - now)
+        if r.iterations is not None:
+            self._observe("request.iterations", float(r.iterations))
+        if r.resolved:
+            self._count("requests.resolved")
+        else:
+            self._count("requests.partial")
+            if expired:
+                self._count("requests.expired")
+
+    def stats(self) -> dict:
+        """Plain-dict snapshot of this engine's request metrics:
+        ``{"counters": {...}, "gauges": {...}, "histograms": {name:
+        {count, sum, min, max, mean, p50, p90, p99, buckets}}}`` —
+        queue-wait / admission-to-retire latency / deadline-slack /
+        iteration histograms, submitted / resolved / partial / expired /
+        errored / resubmitted counters, per-round pool occupancy."""
+        return self._metrics.snapshot()
+
+    def reset_stats(self) -> None:
+        self._metrics.reset()
 
     def _step(self, state, ts, has_t, it_cap):
         """One pool decision round (seam for tests / fault injection)."""
@@ -475,12 +546,15 @@ class BIFEngine:
         stays queued in order, and the exception propagates; requests
         that already retired keep their results.
         """
-        if mode == "continuous":
-            return self._flush_continuous()
-        if mode == "lockstep":
+        if mode not in ("continuous", "lockstep"):
+            raise ValueError(f"mode must be 'continuous' or 'lockstep', "
+                             f"got {mode!r}")
+        self._count("flush.count")
+        with obs_spans.span("engine.flush", mode=mode,
+                            queued=len(self._queue)):
+            if mode == "continuous":
+                return self._flush_continuous()
             return self._flush_lockstep()
-        raise ValueError(f"mode must be 'continuous' or 'lockstep', "
-                         f"got {mode!r}")
 
     # -- the continuous-batching scheduler --------------------------------
 
@@ -538,12 +612,16 @@ class BIFEngine:
                             cand.resolved = False
                             cand.iterations = 0
                             cand.state = None
+                            self._retire_obs(cand, now, expired=True)
                             continue
                         r = cand
                         break
                     if r is None:
                         continue
                     slots[i] = r
+                    r._obs_admit_t = now
+                    self._observe("request.queue_wait_s",
+                                  now - getattr(r, "_obs_submit_t", now))
                     m = np.ones((n,), dt) if r.mask is None \
                         else np.asarray(r.mask, dt)
                     masks[i] = m
@@ -599,13 +677,25 @@ class BIFEngine:
                                                coeffs=coeffs_new)
 
                 # --- one decision round over the whole pool ---
-                state, lo, hi, res, dec, done, its = self._step(
-                    state, jnp.asarray(ts), jnp.asarray(has_t),
-                    jnp.asarray(caps))
+                occupied = sum(1 for s in slots if s is not None)
+                self._count("flush.rounds")
+                self._observe("pool.occupancy", occupied / p)
+                with obs_spans.span("engine.pool_step",
+                                    occupied=occupied) as sp:
+                    state, lo, hi, res, dec, done, its = self._step(
+                        state, jnp.asarray(ts), jnp.asarray(has_t),
+                        jnp.asarray(caps))
+                    # charge the device work to THIS span, not to
+                    # whichever np.asarray below happens to block first
+                    sp.block_until_ready((lo, hi, res, dec, done, its))
                 lo_h, hi_h = np.asarray(lo), np.asarray(hi)
                 res_h, dec_h = np.asarray(res), np.asarray(dec)
                 done_h, it_h = np.asarray(done), np.asarray(its)
                 now = time.monotonic()
+                if self.convergence_log is not None:
+                    # host-side copies the retire loop reads anyway —
+                    # logging cannot perturb the compiled round
+                    self.convergence_log.record(lo_h, hi_h, it_h)
 
                 # --- retire: resolved lanes + expired budgets/deadlines ---
                 for i in range(p):
@@ -638,6 +728,8 @@ class BIFEngine:
                         r._banked_query = us[i].copy()
                     else:
                         r.state = None
+                    self._retire_obs(r, now,
+                                     expired=timed_out and not resolved)
                     slots[i] = None
                     caps[i] = 0  # freeze the vacated lane until backfill
         except Exception as e:
@@ -648,6 +740,7 @@ class BIFEngine:
             for r in slots:
                 if r is not None:
                     r.error = e
+                    self._count("requests.errored")
             self._queue = pending + self._queue
             raise
         return queue
@@ -668,6 +761,13 @@ class BIFEngine:
         n, b = self.op.n, self.max_batch
         for start in range(0, len(queue), b):
             chunk = queue[start:start + b]
+            now = time.monotonic()
+            self._count("flush.rounds")
+            self._observe("pool.occupancy", len(chunk) / b)
+            for r in chunk:
+                r._obs_admit_t = now
+                self._observe("request.queue_wait_s",
+                              now - getattr(r, "_obs_submit_t", now))
             try:
                 us = np.zeros((b, n), self._dtype)
                 masks = np.ones((b, n), self._dtype)
@@ -682,9 +782,12 @@ class BIFEngine:
                     if r.t is not None:
                         ts[i] = r.t
                         has_t[i] = True
-                lo, hi, dec, cert, it, conv = self._run(
-                    jnp.asarray(us), jnp.asarray(masks), jnp.asarray(ts),
-                    jnp.asarray(has_t))
+                with obs_spans.span("engine.lockstep_chunk",
+                                    size=len(chunk)) as sp:
+                    lo, hi, dec, cert, it, conv = self._run(
+                        jnp.asarray(us), jnp.asarray(masks),
+                        jnp.asarray(ts), jnp.asarray(has_t))
+                    sp.block_until_ready((lo, hi, dec, cert, it, conv))
             except Exception as e:
                 # keep the un-served tail, but NOT the failing chunk: a
                 # poison request requeued at the head would re-raise on
@@ -694,8 +797,10 @@ class BIFEngine:
                 # the innocent ones after a transient driver failure.
                 for r in chunk:
                     r.error = e
+                    self._count("requests.errored")
                 self._queue = queue[start + len(chunk):] + self._queue
                 raise
+            now = time.monotonic()
             for i, r in enumerate(chunk):
                 r.lower, r.upper = float(lo[i]), float(hi[i])
                 r.decision = bool(dec[i]) if r.t is not None else None
@@ -704,4 +809,5 @@ class BIFEngine:
                 # same rule as the scheduler: resolved by the decision
                 # OR by Krylov exhaustion (the bracket is then exact)
                 r.resolved = bool(conv[i])
+                self._retire_obs(r, now)
         return queue

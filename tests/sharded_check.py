@@ -228,6 +228,66 @@ def check_engine_flush(mesh):
         assert r.lower <= true[i] * 1.0001 and r.upper >= true[i] * 0.9999
 
 
+def check_engine_stats_parity(mesh):
+    """Telemetry on the sharded engine (DESIGN.md Sec. 14): the mesh
+    engine's request ledger matches the single-device engine on
+    identical traffic, and metrics on vs off on the mesh is
+    BIT-identical — instrumentation must not perturb the sharded path
+    either."""
+    from repro import obs
+
+    a = make_spd(32, kappa=60.0, seed=11)
+    w = np.linalg.eigvalsh(a)
+    lam = dict(lam_min=float(w[0] * 0.9), lam_max=float(w[-1] * 1.1))
+    op = Dense(jnp.asarray(a))
+    sv = BIFSolver.create(max_iters=40, rtol=1e-3)
+    rng = np.random.default_rng(12)
+    us = rng.standard_normal((13, 32))
+    true = np.einsum("ki,ki->k", us, np.linalg.solve(a, us.T).T)
+
+    e0 = BIFEngine(op, solver=sv, max_batch=8, chunk_iters=4, **lam)
+    e1 = BIFEngine(op, solver=sv, max_batch=8, chunk_iters=4, mesh=mesh,
+                   **lam)
+    e_off = BIFEngine(op, solver=sv, max_batch=8, chunk_iters=4, mesh=mesh,
+                      metrics=False, **lam)
+    for eng in (e0, e1, e_off):
+        for i, u in enumerate(us):
+            t = float(true[i] * (0.9 if i % 2 else 1.1)) if i % 3 else None
+            eng.submit(BIFRequest(u=u, t=t))
+    obs.spans.set_enabled(True)  # spans on for the metered engines...
+    r0, r1 = e0.flush(), e1.flush()
+    obs.spans.set_enabled(False)  # ...off for the bare one
+    r_off = e_off.flush()
+
+    # same compiled driver, same mesh: metrics on vs off is bit-exact
+    for i, (x, y) in enumerate(zip(r1, r_off)):
+        assert x.decision == y.decision, i
+        assert x.certified == y.certified, i
+        assert x.iterations == y.iterations, i
+        assert (x.lower, x.upper) == (y.lower, y.upper), i
+    assert e_off.stats() == {"counters": {}, "gauges": {},
+                             "histograms": {}}
+
+    # request-ledger parity across single-device vs mesh: every counter
+    # equal, histogram populations equal, and the iteration histogram
+    # (whose observations are exact-parity ints) identical
+    s0, s1 = e0.stats(), e1.stats()
+    assert s0["counters"] == s1["counters"], (s0["counters"],
+                                              s1["counters"])
+    assert s0["counters"]["requests.submitted"] == len(us)
+    assert s0["counters"]["requests.resolved"] == len(us)
+    assert set(s0["histograms"]) == set(s1["histograms"])
+    for name in s0["histograms"]:
+        assert s0["histograms"][name]["count"] == \
+            s1["histograms"][name]["count"], name
+    for field in ("min", "max", "sum", "p50", "p99"):
+        assert s0["histograms"]["request.iterations"][field] == \
+            s1["histograms"]["request.iterations"][field], field
+    for eng in (e0, e1):
+        lat = eng.stats()["histograms"]["request.latency_s"]
+        assert lat["count"] == len(us) and lat["p99"] >= lat["p50"]
+
+
 def check_applications(mesh):
     """greedy MAP + k-DPP swap ride the sharded judges unchanged."""
     n = 28
@@ -478,6 +538,7 @@ def main():
                   check_resumable_stepping,
                   check_cadence_rounds,
                   check_engine_flush,
+                  check_engine_stats_parity,
                   check_applications,
                   check_matfun_and_trace_probes,
                   check_block_quadrature,

@@ -343,6 +343,104 @@ def test_ql006_seeded_rng_is_fine(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# QL008: telemetry is host-side only
+
+
+def test_ql008_metrics_call_and_print_in_traced_scope(tmp_path):
+    findings = _lint(tmp_path, ("src", "repro", "pkg", "m.py"), """
+        import jax
+        from repro.obs import metrics as obs_metrics
+
+        def run(x):
+            def body(c):
+                obs_metrics.counter("steps").inc()
+                print(c)
+                return c - 1
+            return jax.lax.while_loop(lambda c: c > 0, body, x)
+        """)
+    assert [f.rule for f in findings] == ["QL008", "QL008"]
+    assert "host-side-only" in findings[0].message
+    assert "trace time" in findings[1].message
+
+
+def test_ql008_span_through_module_helper(tmp_path):
+    findings = _lint(tmp_path, ("src", "repro", "pkg", "m.py"), """
+        import jax
+        from repro.obs.spans import span
+
+        def _tick():
+            with span("step"):
+                return None
+
+        def run(x):
+            def body(c):
+                _tick()
+                return c - 1
+            return jax.lax.while_loop(lambda c: c > 0, body, x)
+        """)
+    assert _rules(findings) == ["QL008"]
+
+
+def test_ql008_obs_package_attribute_path_in_jit(tmp_path):
+    findings = _lint(tmp_path, ("src", "repro", "pkg", "m.py"), """
+        import jax
+        from repro import obs
+
+        @jax.jit
+        def _run(x):
+            obs.spans.trace_events()
+            return x * 2
+        """)
+    assert "QL008" in _rules(findings)
+
+
+def test_ql008_host_side_and_registry_probe_are_fine(tmp_path):
+    # obs.registry.count is the sanctioned trace-time probe — and it
+    # satisfies QL003's trace-counter requirement on serve jits
+    findings = _lint(tmp_path, ("src", "repro", "serve", "m.py"), """
+        import jax
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import registry as obs_registry
+
+        @jax.jit
+        def _run(x):
+            obs_registry.count("serve.m.run")
+            return x * 2
+
+        def drive(x):
+            y = _run(x)
+            obs_metrics.counter("calls").inc()
+            return y
+        """)
+    assert findings == []
+
+
+def test_ql008_suppression_and_non_library_code(tmp_path):
+    findings = _lint(tmp_path, ("src", "repro", "pkg", "m.py"), """
+        import jax
+
+        def run(x):
+            def body(c):
+                # quadlint: disable=QL008 -- trace-time dump, dev only
+                print(c)
+                return c - 1
+            return jax.lax.while_loop(lambda c: c > 0, body, x)
+        """)
+    assert findings == []
+    findings = _lint(tmp_path, ("benchmarks", "m.py"), """
+        import jax
+        from repro.obs import metrics as obs_metrics
+
+        def run(x):
+            def body(c):
+                obs_metrics.counter("steps").inc()
+                return c - 1
+            return jax.lax.while_loop(lambda c: c > 0, body, x)
+        """)
+    assert findings == []  # QL008 is a library-code contract
+
+
+# ---------------------------------------------------------------------------
 # Suppressions
 
 
